@@ -1,0 +1,27 @@
+"""Shared benchmark utilities: timing + CSV row emission."""
+from __future__ import annotations
+
+import time
+
+import jax
+
+
+def time_fn(fn, *args, warmup=2, iters=10, **kw):
+    """Median wall time per call in microseconds (blocks on jax arrays)."""
+    for _ in range(warmup):
+        r = fn(*args, **kw)
+        jax.block_until_ready(r)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        r = fn(*args, **kw)
+        jax.block_until_ready(r)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def emit(rows):
+    for r in rows:
+        print(f"{r['name']},{r.get('us_per_call', '')},{r.get('derived', '')}")
+    return rows

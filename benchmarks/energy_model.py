@@ -1,0 +1,48 @@
+"""Paper §4.2: energy per time step of the mixed-signal cores.
+
+The paper bounds a 4-core 64×64 network at ≤169 pJ per time step (worst
+case, all switches toggling, z = 1; SAR ADC / routing / control excluded).
+This benchmark evaluates our structural energy model at the paper's
+configuration and sweeps activity (z) and array geometry.
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.core.analog import EnergyConfig, energy_per_step
+
+PAPER_BOUND_PJ = 169.0
+
+
+def run():
+    rows = []
+    base = energy_per_step(rows=64, cols=64, n_cores=4, z_mean=1.0)
+    rows.append({
+        "name": "energy/paper_config_worst_case",
+        "us_per_call": "",
+        "derived": f"total_pJ={base['total_pJ']:.1f};"
+                   f"paper_bound_pJ={PAPER_BOUND_PJ};"
+                   f"within_bound={base['total_pJ'] <= PAPER_BOUND_PJ}",
+    })
+    for z in (0.0, 0.25, 0.5, 1.0):
+        e = energy_per_step(64, 64, 4, z_mean=z)
+        rows.append({"name": f"energy/z{z}",
+                     "derived": f"total_pJ={e['total_pJ']:.1f}"})
+    for r, c, n in ((64, 64, 1), (128, 128, 4), (256, 256, 16)):
+        e = energy_per_step(r, c, n)
+        rows.append({
+            "name": f"energy/{n}x{r}x{c}",
+            "derived": f"total_pJ={e['total_pJ']:.1f};"
+                       f"pJ_per_synapse={e['total_pJ']/(r*c*n):.4f}",
+        })
+    # breakdown at the paper config
+    rows.append({
+        "name": "energy/breakdown_paper_config",
+        "derived": ";".join(f"{k}={v*1e12:.1f}pJ" for k, v in base.items()
+                            if k.endswith("_J")),
+    })
+    assert base["total_pJ"] <= PAPER_BOUND_PJ
+    return emit(rows)
+
+
+if __name__ == "__main__":
+    run()

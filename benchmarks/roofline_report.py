@@ -1,0 +1,57 @@
+"""Consolidated roofline table from the multi-pod dry-run results
+(benchmarks/results/dryrun/*.json) — the §Roofline source of truth.
+
+Per (arch × shape × mesh): the three terms (compute / memory / collective,
+seconds per step on TPU v5e constants), the dominant bottleneck, model-FLOPs
+ratio and the roofline fraction.  Run the sweep first:
+
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results", "dryrun")
+
+
+def load_all():
+    out = []
+    for p in sorted(glob.glob(os.path.join(RESULTS, "*.json"))):
+        with open(p) as f:
+            out.append(json.load(f))
+    return out
+
+
+def run():
+    rows = []
+    cells = load_all()
+    ok = [c for c in cells if c.get("status") == "ok"]
+    for c in sorted(ok, key=lambda c: (c["arch"], c["shape"],
+                                       c.get("impl", "baseline"))):
+        mesh = "multi" if "pod" in c["mesh"]["axes"] else "single"
+        impl = c.get("impl", "baseline")
+        suffix = "" if impl == "baseline" else f"/{impl}"
+        t = c["roofline"]
+        rows.append({
+            "name": f"roofline/{c['arch']}/{c['shape']}/{mesh}{suffix}",
+            "us_per_call": f"{t['bound_s']*1e6:.0f}",
+            "derived": (
+                f"compute_s={t['compute_s']:.3e};"
+                f"memory_s={t['memory_s']:.3e};"
+                f"collective_s={t['collective_s']:.3e};"
+                f"dominant={t['dominant']};"
+                f"useful_flops_ratio={c.get('useful_flops_ratio') or 0:.3f};"
+                f"roofline_frac={c.get('roofline_fraction') or 0:.4f}"),
+        })
+    n_err = len(cells) - len(ok)
+    rows.append({"name": "roofline/summary",
+                 "derived": f"cells_ok={len(ok)};cells_err={n_err}"})
+    return emit(rows)
+
+
+if __name__ == "__main__":
+    run()

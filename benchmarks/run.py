@@ -1,0 +1,50 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived``
+# CSV rows.
+#
+#   fig5   -> quant_ladder          (paper Fig. 5, quantization ladder)
+#   fig4   -> mixed_signal_match    (paper Fig. 4, software vs circuit)
+#   fig3C  -> adc_transfer          (paper Fig. 3C, ADC slope/offset)
+#   §4.2   -> energy_model          (169 pJ/step bound)
+#   §2     -> scan_throughput       (minGRU parallel-scan enabler)
+#   §3.1.1 -> imc_throughput        (Eq. 6 IMC projection)
+#   assignment §Roofline -> roofline_report (dry-run-derived table)
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+from benchmarks import (adc_transfer, energy_model, imc_throughput,
+                        mixed_signal_match, quant_ladder, roofline_report,
+                        scan_throughput)
+
+SUITES = [
+    ("adc_transfer", adc_transfer),
+    ("energy_model", energy_model),
+    ("mixed_signal_match", mixed_signal_match),
+    ("scan_throughput", scan_throughput),
+    ("imc_throughput", imc_throughput),
+    ("quant_ladder", quant_ladder),
+    ("roofline_report", roofline_report),
+]
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, mod in SUITES:
+        t0 = time.time()
+        try:
+            mod.run()
+            print(f"# suite {name} finished in {time.time()-t0:.1f}s",
+                  file=sys.stderr)
+        except Exception:
+            failures += 1
+            print(f"# suite {name} FAILED:", file=sys.stderr)
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(f"{failures} benchmark suites failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""minGRU state-update engines (paper §2): sequential vs parallel scan vs
+Pallas kernel (interpret mode on CPU — correctness-path timing only; the
+TPU roofline for the kernel is in EXPERIMENTS.md §Roofline).
+
+Derived metric: elements/s and the parallel-over-sequential speedup — the
+minGRU paper's training-time enabler that the MINIMALIST paper inherits.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.kernels.linear_scan import ops, ref
+
+
+def run():
+    key = jax.random.PRNGKey(0)
+    rows = []
+    seq = jax.jit(lambda a, b, h0: ref.linear_scan_sequential(a, b, h0))
+    par = jax.jit(lambda a, b, h0: ref.linear_scan_associative(a, b, h0))
+    for (B, T, D) in [(8, 256, 64), (8, 1024, 64), (1, 4096, 256)]:
+        a = jax.random.uniform(jax.random.fold_in(key, 1), (B, T, D))
+        b = jax.random.normal(jax.random.fold_in(key, 2), (B, T, D))
+        h0 = jnp.zeros((B, D))
+        us_seq = time_fn(seq, a, b, h0, iters=5)
+        us_par = time_fn(par, a, b, h0, iters=5)
+        n = B * T * D
+        rows.append({
+            "name": f"scan/seq/B{B}_T{T}_D{D}",
+            "us_per_call": f"{us_seq:.0f}",
+            "derived": f"Melem_s={n/us_seq:.1f}",
+        })
+        rows.append({
+            "name": f"scan/assoc/B{B}_T{T}_D{D}",
+            "us_per_call": f"{us_par:.0f}",
+            "derived": f"Melem_s={n/us_par:.1f};"
+                       f"speedup_vs_seq={us_seq/us_par:.2f}x",
+        })
+    # pallas kernel (interpret) — correctness-path cost on CPU
+    B, T, D = 2, 256, 256
+    a = jax.random.uniform(jax.random.fold_in(key, 3), (B, T, D))
+    b = jax.random.normal(jax.random.fold_in(key, 4), (B, T, D))
+    h0 = jnp.zeros((B, D))
+    us = time_fn(lambda: ops.linear_scan(a, b, h0, "pallas"), iters=2,
+                 warmup=1)
+    rows.append({
+        "name": f"scan/pallas_interpret/B{B}_T{T}_D{D}",
+        "us_per_call": f"{us:.0f}",
+        "derived": "interpret=True(CPU validation path)",
+    })
+    return emit(rows)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,139 @@
+"""Sharded, atomic, async checkpointing (orbax-free).
+
+Layout (one directory per step):
+
+    <root>/step_000123.tmp/...   — written first
+    <root>/step_000123/          — atomic rename on completion
+        MANIFEST.json            — leaf paths, shapes, dtypes
+        <escaped.leaf.path>.npy  — one file per pytree leaf
+
+Production behaviors implemented:
+  * atomic commit (rename) — a crash mid-write never corrupts the latest
+    checkpoint; restore scans for the newest *committed* step
+  * async save (background thread) — training continues while the previous
+    step serializes; ``wait()`` joins before the next save or at exit
+  * resharding restore — leaves are ``jax.device_put`` onto the current
+    mesh/shardings, so a checkpoint written on one mesh restores onto a
+    different one (elastic scaling / failure recovery path)
+  * retention (keep_n) with garbage collection
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import threading
+
+import jax
+import numpy as np
+
+
+def _flatten(tree, prefix=""):
+    out = {}
+    if isinstance(tree, dict):
+        for k in sorted(tree.keys()):
+            out.update(_flatten(tree[k], f"{prefix}{k}/"))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}{i}/"))
+    else:
+        out[prefix[:-1]] = tree
+    return out
+
+
+def _unflatten(flat: dict):
+    root: dict = {}
+    for path, v in flat.items():
+        parts = path.split("/")
+        cur = root
+        for p in parts[:-1]:
+            cur = cur.setdefault(p, {})
+        cur[parts[-1]] = v
+    return root
+
+
+def _esc(path: str) -> str:
+    return path.replace("/", "%2F")
+
+
+class Checkpointer:
+    def __init__(self, root: str, keep_n: int = 3):
+        self.root = root
+        self.keep_n = keep_n
+        self._thread: threading.Thread | None = None
+        os.makedirs(root, exist_ok=True)
+
+    # ---------------- save ----------------
+    def save(self, step: int, tree, *, blocking: bool = False):
+        self.wait()
+        flat = _flatten(tree)
+        # materialize to host memory on the caller thread (device buffers
+        # may be donated/overwritten by the next step)
+        host = {k: np.asarray(v) for k, v in flat.items()}
+
+        def _write():
+            tmp = os.path.join(self.root, f"step_{step:08d}.tmp")
+            final = os.path.join(self.root, f"step_{step:08d}")
+            shutil.rmtree(tmp, ignore_errors=True)
+            os.makedirs(tmp)
+            manifest = {}
+            for k, v in host.items():
+                np.save(os.path.join(tmp, _esc(k) + ".npy"), v)
+                manifest[k] = {"shape": list(v.shape), "dtype": str(v.dtype)}
+            with open(os.path.join(tmp, "MANIFEST.json"), "w") as f:
+                json.dump({"step": step, "leaves": manifest}, f)
+            shutil.rmtree(final, ignore_errors=True)
+            os.rename(tmp, final)
+            self._gc()
+
+        if blocking:
+            _write()
+        else:
+            self._thread = threading.Thread(target=_write, daemon=True)
+            self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    # ---------------- restore ----------------
+    def steps(self):
+        out = []
+        for d in os.listdir(self.root):
+            m = re.fullmatch(r"step_(\d+)", d)
+            if m and os.path.exists(os.path.join(self.root, d,
+                                                 "MANIFEST.json")):
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def latest_step(self):
+        s = self.steps()
+        return s[-1] if s else None
+
+    def restore(self, step: int | None = None, shardings=None):
+        """Returns the pytree; if `shardings` (pytree of NamedSharding) is
+        given, leaves are device_put onto it (reshard-on-restore)."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            return None
+        d = os.path.join(self.root, f"step_{step:08d}")
+        manifest = json.load(open(os.path.join(d, "MANIFEST.json")))
+        flat = {}
+        for k, meta in manifest["leaves"].items():
+            arr = np.load(os.path.join(d, _esc(k) + ".npy"))
+            flat[k] = arr
+        tree = _unflatten(flat)
+        if shardings is not None:
+            flat_s = _flatten(shardings)
+            flat = {k: jax.device_put(v, flat_s[k]) if k in flat_s else v
+                    for k, v in _flatten(tree).items()}
+            tree = _unflatten(flat)
+        return tree
+
+    def _gc(self):
+        steps = self.steps()
+        for s in steps[:-self.keep_n] if self.keep_n else []:
+            shutil.rmtree(os.path.join(self.root, f"step_{s:08d}"),
+                          ignore_errors=True)

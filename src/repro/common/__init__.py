@@ -1,0 +1,2 @@
+from repro.common.pytree import tree_size_bytes, tree_param_count, map_with_axes
+from repro.common.precision import Policy, DEFAULT_POLICY

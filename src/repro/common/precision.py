@@ -1,0 +1,33 @@
+"""Mixed-precision policy.
+
+Parameters are kept in ``param_dtype`` (fp32 by default), compute is done in
+``compute_dtype`` (bf16 by default for the large-model configs, fp32 for the
+paper-scale MINIMALIST nets where analog fidelity matters), and reductions /
+softmax / scan carries accumulate in ``accum_dtype``.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Policy:
+    param_dtype: jnp.dtype = jnp.float32
+    compute_dtype: jnp.dtype = jnp.bfloat16
+    accum_dtype: jnp.dtype = jnp.float32
+
+    def cast_to_compute(self, tree):
+        import jax
+
+        def cast(x):
+            if hasattr(x, "dtype") and jnp.issubdtype(x.dtype, jnp.floating):
+                return x.astype(self.compute_dtype)
+            return x
+
+        return jax.tree_util.tree_map(cast, tree)
+
+
+DEFAULT_POLICY = Policy()
+FP32_POLICY = Policy(compute_dtype=jnp.float32)

@@ -1,0 +1,47 @@
+"""Small pytree utilities shared across the framework."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def tree_param_count(tree) -> int:
+    """Total number of scalar parameters in a pytree (works on abstract values)."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    return int(sum(int(np.prod(l.shape)) for l in leaves))
+
+
+def tree_size_bytes(tree) -> int:
+    """Total bytes of a pytree (works on ShapeDtypeStruct leaves)."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    return int(sum(int(np.prod(l.shape)) * jnp.dtype(l.dtype).itemsize for l in leaves))
+
+
+def map_with_axes(fn, params, axes):
+    """tree_map over (param, logical_axes) pairs. `axes` mirrors `params`
+    with tuples of logical axis names (or None) as leaves."""
+    return jax.tree_util.tree_map(
+        fn, params, axes, is_leaf=lambda x: x is None or isinstance(x, tuple)
+    )
+
+
+def flatten_dict(d, prefix=()):
+    """Nested dict -> {('a','b'): leaf}."""
+    out = {}
+    for k, v in d.items():
+        if isinstance(v, dict):
+            out.update(flatten_dict(v, prefix + (k,)))
+        else:
+            out[prefix + (k,)] = v
+    return out
+
+
+def unflatten_dict(flat):
+    out = {}
+    for path, v in flat.items():
+        cur = out
+        for k in path[:-1]:
+            cur = cur.setdefault(k, {})
+        cur[path[-1]] = v
+    return out

@@ -1,0 +1,191 @@
+"""Architecture configuration schema.
+
+One ``ModelConfig`` describes any architecture in the assigned pool: dense /
+MoE decoder LMs, MLA, sliding-window patterns, Mamba/hybrid stacks, the
+Whisper encoder-decoder backbone, the LLaVA VLM backbone, and the paper's
+minGRU time-mixing blocks.  Per-layer heterogeneity (Jamba 1:7, Gemma-3 5:1
+local:global, DeepSeek first-k-dense) is expressed as a repeating
+``pattern`` of LayerSpec entries plus optional head/tail layers; the model
+stack scans over pattern repeats so HLO size stays O(|pattern|).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+# Block kinds
+ATTN = "attn"            # global self-attention (GQA)
+ATTN_LOCAL = "attn_local"  # sliding-window self-attention
+MLA = "mla"              # DeepSeek multi-head latent attention
+MAMBA = "mamba"          # Mamba-1 selective SSM
+MINGRU = "mingru"        # paper's minGRU time-mixing block
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_ff_expert: int
+    n_shared: int = 0
+    capacity_factor: float = 1.25
+    router_noise: float = 0.0
+    # dispatch groups (typically = DP degree): scatter/gather stay local to
+    # each group's shard; only the combine's partial-sum crosses the mesh
+    # (§Perf cell B). groups=1 reproduces single-pool dispatch.
+    groups: int = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    q_lora_rank: int = 1536
+    kv_lora_rank: int = 512
+    qk_nope_head_dim: int = 128
+    qk_rope_head_dim: int = 64
+    v_head_dim: int = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class MambaConfig:
+    d_state: int = 16
+    d_conv: int = 4
+    expand: int = 2
+
+    def d_inner(self, d_model: int) -> int:
+        return self.expand * d_model
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    kind: str = ATTN          # one of the block kinds above
+    moe: bool = False         # MoE MLP instead of dense MLP
+    d_ff: Optional[int] = None  # dense-MLP width override (DeepSeek head)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    d_model: int
+    n_layers: int
+    vocab: int
+    # attention geometry
+    n_heads: int = 0
+    n_kv_heads: int = 0
+    head_dim: int = 0
+    d_ff: int = 0
+    # layer structure: n_head_layers of head_pattern, then pattern repeated,
+    # then tail. len(head) + repeats*len(pattern) + len(tail) == n_layers.
+    pattern: Sequence[LayerSpec] = (LayerSpec(),)
+    head_layers: Sequence[LayerSpec] = ()
+    tail_layers: Sequence[LayerSpec] = ()
+    # sub-configs
+    moe: Optional[MoEConfig] = None
+    mla: Optional[MLAConfig] = None
+    mamba: Optional[MambaConfig] = None
+    # attention details
+    sliding_window: int = 4096
+    rope_theta: float = 1e4
+    # model kind: "decoder" | "encdec" | "vlm" | "audio"
+    arch_type: str = "decoder"
+    # enc-dec: encoder geometry (defaults mirror decoder)
+    n_enc_layers: int = 0
+    # vlm/audio stub frontend: inputs are precomputed embeddings of this dim
+    frontend_embed_dim: int = 0
+    frontend_seq: int = 0       # e.g. 1500 whisper frames / image patches
+    tie_embeddings: bool = True
+    norm_eps: float = 1e-6
+    # paper technique hooks
+    mingru_quant: str = "float"   # float | quantized | hardware
+    # multi-token prediction depth (DeepSeek-V3 MTP); 0 = off
+    mtp_depth: int = 0
+    # kernel implementations (§Perf hillclimb):
+    #   attention_impl: naive | flash (Pallas kernel) | stub (dry-run cost
+    #     accounting stand-in — cheap op with correct shapes/grads; the
+    #     analytic kernel cost is added by launch.dryrun)
+    #   ssm_impl: xla | fused (Pallas kernel) | stub
+    attention_impl: str = "naive"
+    ssm_impl: str = "xla"
+    # explicit sharding constraints on MoE dispatch buffers (cell B fix)
+    moe_constraints: bool = False
+
+    # ---- derived ----
+    def layer_specs(self) -> list:
+        n_rep = (self.n_layers - len(self.head_layers) - len(self.tail_layers))
+        assert n_rep % len(self.pattern) == 0, (
+            f"{self.name}: {self.n_layers} layers do not decompose into "
+            f"head({len(self.head_layers)}) + k*pattern({len(self.pattern)}) "
+            f"+ tail({len(self.tail_layers)})")
+        reps = n_rep // len(self.pattern)
+        return list(self.head_layers) + list(self.pattern) * reps + list(self.tail_layers)
+
+    @property
+    def n_repeats(self) -> int:
+        return (self.n_layers - len(self.head_layers) - len(self.tail_layers)) \
+            // len(self.pattern)
+
+    @property
+    def vocab_padded(self) -> int:
+        """Vocab rounded up to a multiple of 512 (shardable over any mesh
+        axis ≤ 512; Megatron-style padding, logits masked at the loss)."""
+        return (self.vocab + 511) // 512 * 512
+
+    def param_count(self) -> int:
+        """Analytical parameter count (for 6·N·D model-FLOPs estimates)."""
+        d = self.d_model
+        total = self.vocab_padded * d  # embedding
+        if not self.tie_embeddings:
+            total += self.vocab_padded * d
+        for spec in self.layer_specs():
+            if spec.kind in (ATTN, ATTN_LOCAL):
+                total += d * self.n_heads * self.head_dim      # q
+                total += 2 * d * self.n_kv_heads * self.head_dim  # k, v
+                total += self.n_heads * self.head_dim * d      # o
+            elif spec.kind == MLA:
+                m = self.mla
+                qk_head = m.qk_nope_head_dim + m.qk_rope_head_dim
+                total += d * m.q_lora_rank + m.q_lora_rank * self.n_heads * qk_head
+                total += d * (m.kv_lora_rank + m.qk_rope_head_dim)
+                total += m.kv_lora_rank * self.n_heads * (m.qk_nope_head_dim + m.v_head_dim)
+                total += self.n_heads * m.v_head_dim * d
+            elif spec.kind == MAMBA:
+                mc = self.mamba
+                di = mc.d_inner(d)
+                total += d * 2 * di                  # in_proj
+                total += di * mc.d_conv              # conv
+                total += di * (2 * mc.d_state + 1)   # B, C, dt proj (approx)
+                total += di * mc.d_state + di        # A_log, D
+                total += di * d                      # out_proj
+            elif spec.kind == MINGRU:
+                total += 2 * (d * d + d)             # W^h, W^z + biases
+            # MLP follows ANY mixer kind when configured (Jamba puts MoE
+            # after Mamba layers too) — mirrors models.transformer exactly
+            if spec.moe:
+                e = self.moe
+                total += d * e.n_experts              # router
+                total += e.n_experts * 3 * d * e.d_ff_expert
+                total += e.n_shared * 3 * d * e.d_ff_expert
+            else:
+                ff = spec.d_ff or self.d_ff
+                total += 3 * d * ff                   # SwiGLU
+            total += 2 * d                            # norms
+        return int(total)
+
+    def active_param_count(self) -> int:
+        """Activated params per token (MoE: top-k + shared only)."""
+        if self.moe is None:
+            return self.param_count()
+        d = self.d_model
+        total = self.param_count()
+        e = self.moe
+        n_moe_layers = sum(1 for s in self.layer_specs() if s.moe)
+        total -= n_moe_layers * e.n_experts * 3 * d * e.d_ff_expert
+        total += n_moe_layers * (e.top_k + e.n_shared) * 3 * d * e.d_ff_expert
+        return int(total)
+
+
+# The four assigned input-shape regimes
+SHAPES = {
+    "train_4k": dict(kind="train", seq_len=4096, global_batch=256),
+    "prefill_32k": dict(kind="prefill", seq_len=32768, global_batch=32),
+    "decode_32k": dict(kind="decode", seq_len=32768, global_batch=128),
+    "long_500k": dict(kind="decode", seq_len=524288, global_batch=1),
+}

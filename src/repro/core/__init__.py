@@ -1,0 +1,7 @@
+# The paper's primary contribution:
+#   mingru.py — minGRU cell + MINIMALIST feed-forward stack (paper §2)
+#   quant.py  — hardware quantizers (2 b W, 6 b b, Θ, hard-σ 6 b) + QAT phases
+#   analog.py — behavioral switched-capacitor circuit simulator (paper §3)
+from repro.core.quant import QuantConfig, QAT_PHASES
+from repro.core.mingru import MinGRUBlock, MinimalistNetwork
+from repro.core.analog import AnalogConfig, export_layer, analog_forward, energy_per_step

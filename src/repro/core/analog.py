@@ -1,0 +1,343 @@
+"""Behavioral switched-capacitor simulator for the MINIMALIST cores (§3).
+
+This module plays the role of the paper's Cadence AMS mixed-signal
+simulation: it executes the *circuit* — charge sharing on capacitor banks,
+a 6 b SAR ADC with tunable slope/offset, capacitor-swap state updates, and a
+comparator output stage — in the voltage domain, including component
+non-idealities (capacitor mismatch, comparator noise).  Tests and
+``benchmarks/mixed_signal_match.py`` reproduce paper Fig. 4 by comparing the
+voltage traces (converted back to model units) against the software model.
+
+Circuit ↔ model correspondence
+------------------------------
+A column with K synapse rows plus one always-on bias row settles, after
+charge sharing (paper Eq. 6, extended with the bias row), at
+
+    v − V0 = α · (W·x + b) ,      α = ΔV / (Δ_sw · (K + 1))   [volts/unit]
+
+where ΔV is the weight-voltage spacing, Δ_sw the software weight step
+(W = (codes − 1.5)·Δ_sw) and V0 the zero level.  Every downstream element is
+affine or threshold-based, so the circuit is an exact scaled image of the
+quantized software model:
+
+  * gate: the SAR ADC realizes  z = q6(hard_sigmoid(s))  — the slope is set
+    by the C_ADC/C_IMC segment ratio (input-referred LSB = 6α/63 volts) and
+    the bias b^z by the capacitive-DAC preset (integer codes on that LSB
+    grid, hence quant.quantize_gate_bias_adc);
+  * state update: swapping k = ADC-code units of the 63-unit binary-scaled
+    segment bank realizes  h ← (k/63)·h̃ + (1 − k/63)·h — exactly
+    quant.quantize_unit_6b's grid;
+  * output: the comparator realizes Θ(h) (threshold V0).
+
+Bias placement: the paper puts the z-bias in the ADC DAC preset (§3.1.2) and
+an h-threshold bias in the comparator reference (§3.1.4).  To realize Eq. 2's
+b^h *inside* the accumulated state (as the software model defines it), this
+implementation adds an always-on bias row driven by a per-column 6 b DAC
+voltage — standard IMC practice; recorded as an implementation choice in
+DESIGN.md.  The ADC-preset mechanism is implemented as published (Fig. 3C).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import quant
+
+# ---------------------------------------------------------------------------
+# Configuration
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class AnalogConfig:
+    v_dd: float = 0.8            # supply [V]
+    v0_frac: float = 0.5         # zero level V0 = v0_frac * v_dd
+    delta_v: float = 0.1         # weight-level spacing ΔV [V]
+    c_unit_f: float = 1.0e-15    # unit sampling capacitor [F]
+    mismatch_sigma: float = 0.0  # relative capacitor mismatch σ(C)/C
+    comparator_noise_v: float = 0.0  # comparator input-referred noise σ [V]
+    adc_bits: int = 6
+    gate_units: int = quant.GATE_UNITS  # 63 binary-scaled segment units
+
+    @property
+    def v0(self):
+        return self.v0_frac * self.v_dd
+
+    def weight_voltages(self):
+        """The four equidistant potentials V_00..V_11 around V0."""
+        lv = np.array([-1.5, -0.5, 0.5, 1.5]) * self.delta_v
+        return self.v0 + lv
+
+
+# ---------------------------------------------------------------------------
+# Weight export: trained (quantized) software params -> hardware images
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class LayerImage:
+    """Hardware image of one MinGRU block."""
+    codes_h: np.ndarray    # (K, N) int 2 b codes for W^h
+    codes_z: np.ndarray    # (K, N)
+    bias_h_v: np.ndarray   # (N,) bias-row voltage offsets [V] (h̃ columns)
+    adc_offset_code: np.ndarray  # (N,) signed DAC preset codes (z bias)
+    alpha: float           # volts per software model-unit
+    scale: float           # shared software weight step Δ_sw
+    k_rows: int
+
+
+def export_layer(params, cfg: AnalogConfig) -> LayerImage:
+    """Map a trained MinGRUBlock's params onto circuit quantities."""
+    wh, wz = np.asarray(params["wh"]), np.asarray(params["wz"])
+    bh, bz = np.asarray(params["bh"]), np.asarray(params["bz"])
+    K = wh.shape[0]
+
+    # one shared Δ_sw per layer (both matrices share the 4 row rails)
+    scale = float(max(np.asarray(quant.weight_scale(jnp.asarray(wh))),
+                      np.asarray(quant.weight_scale(jnp.asarray(wz)))))
+    codes_h = np.asarray(quant.quantize_weights_2b(jnp.asarray(wh), scale)[1])
+    codes_z = np.asarray(quant.quantize_weights_2b(jnp.asarray(wz), scale)[1])
+
+    alpha = cfg.delta_v / (scale * (K + 1))
+
+    # h̃ bias: 6 b quantized, realized on the bias row. Voltage so that the
+    # (K+1)-way share contributes α·b:  v_bias = (K+1)·α·b_q
+    bh_q = np.asarray(quant.quantize_bias_6b(jnp.asarray(bh)))
+    bias_h_v = (K + 1) * alpha * bh_q
+
+    # z bias: DAC preset — integer codes on the 6/63 model-unit LSB grid
+    bz_q = np.asarray(quant.quantize_gate_bias_adc(jnp.asarray(bz)))
+    adc_offset_code = np.round(bz_q / quant.ADC_GATE_BIAS_LSB).astype(np.int32)
+
+    return LayerImage(codes_h=codes_h, codes_z=codes_z, bias_h_v=bias_h_v,
+                      adc_offset_code=adc_offset_code, alpha=alpha,
+                      scale=scale, k_rows=K)
+
+
+# ---------------------------------------------------------------------------
+# Circuit primitives
+# ---------------------------------------------------------------------------
+
+
+def charge_sharing_mvm(x_bin, codes, bias_v, cfg: AnalogConfig, caps=None):
+    """Column charge sharing (Eq. 6 + bias row).
+
+    x_bin: (B, K) in {0,1}; codes: (K, N); bias_v: (N,) volts around V0.
+    caps: optional (K+1, N) per-capacitor values (mismatch); defaults 1.
+    Returns settled column voltages (B, N).
+    """
+    codes = jnp.asarray(codes)
+    vw = jnp.asarray(cfg.weight_voltages())          # (4,)
+    v_syn = vw[codes]                                # (K, N) sampled volts
+    B, K = x_bin.shape
+    N = codes.shape[1]
+    if caps is None:
+        caps = jnp.ones((K + 1, N))
+    c_syn, c_bias = caps[:K], caps[K]
+    # x_i = 0 clamps that row's rails to V0 (paper §3.1.1)
+    v_eff = x_bin[:, :, None] * v_syn[None] + (1 - x_bin[:, :, None]) * cfg.v0
+    num = jnp.einsum("bkn,kn->bn", v_eff, c_syn) + c_bias * (cfg.v0 + bias_v)
+    den = c_syn.sum(0) + c_bias
+    return num / den
+
+
+def sar_adc(v_in, cfg: AnalogConfig, *, lsb_volts, offset_code=0, key=None):
+    """6 b SAR ADC (Fig. 3) as an explicit successive-approximation loop.
+
+    ``lsb_volts`` is the input-referred LSB, set in hardware by the
+    C_ADC/C_IMC segment ratio (the slope mechanism: connecting more IMC
+    capacitance attenuates the DAC's authority over the shared node, which
+    *shrinks* the input range ⇒ steeper transfer).  ``offset_code`` is the
+    signed DAC preset (§3.1.2), shifting the transfer by ±half range.
+
+    The transfer is code = clip(floor((v−V0)/lsb) + 32 + offset, 0, 63):
+    mid-rise around V0, matching q6(hard_sigmoid) when lsb = 6α/63.
+    Returns integer codes in [0, 2^bits − 1].
+    """
+    bits = cfg.adc_bits
+    full = 2 ** bits
+    # comparator decisions; optional input-referred noise per SAR step
+    if key is not None and cfg.comparator_noise_v > 0:
+        noise = cfg.comparator_noise_v * jax.random.normal(
+            key, v_in.shape + (bits,))
+    else:
+        noise = jnp.zeros(v_in.shape + (bits,))
+
+    # −0.5 LSB preset: thresholds at half-LSB positions (mid-rise), so the
+    # exact s = 0 pre-activation binary activations constantly produce never
+    # sits on a decision boundary.  Matches quant.quantize_unit_6b:
+    # code = floor(63·(s+b)/6 + 31.5) on both sides.
+    v_eff = v_in - cfg.v0 + (full // 2 + offset_code - 0.5) * lsb_volts
+    code = jnp.zeros(jnp.shape(v_eff), jnp.int32)
+    for b in range(bits - 1, -1, -1):
+        trial = code + (1 << b)
+        v_dac = trial * lsb_volts
+        keep = (v_eff + noise[..., bits - 1 - b]) >= v_dac
+        code = jnp.where(keep, trial, code)
+    return code
+
+
+def adc_transfer_closed_form(v_in, cfg: AnalogConfig, *, lsb_volts,
+                             offset_code=0):
+    """Noise-free closed form of sar_adc (cross-check for the SAR loop)."""
+    full = 2 ** cfg.adc_bits
+    code = jnp.floor((v_in - cfg.v0) / lsb_volts - 0.5) + full // 2 + offset_code
+    return jnp.clip(code, 0, full - 1).astype(jnp.int32)
+
+
+def state_update_swap(v_h, v_htilde, z_code, cfg: AnalogConfig, seg_caps=None):
+    """Capacitor-swap state update (§3.1.3).
+
+    v_h, v_htilde: (B, N) bank voltages; z_code: (B, N) ADC codes in [0,63]
+    = number of unit segments (of 63, binary-scaled groups) to swap.
+    seg_caps: optional (63, N) unit-segment capacitances for mismatch.
+    Ideal: v ← (k/63)·h̃ + (1−k/63)·h.  With mismatch the ratio becomes
+    Σ_{i<k} C_i / ΣC_i (thermometer expansion of the binary groups).
+    """
+    S = cfg.gate_units
+    if seg_caps is None:
+        frac = z_code.astype(jnp.float32) / S
+    else:
+        csum = jnp.concatenate(
+            [jnp.zeros((1, seg_caps.shape[1])), jnp.cumsum(seg_caps, 0)], 0)
+        total = csum[-1]
+        frac = jnp.take_along_axis(
+            csum, z_code.astype(jnp.int32), axis=0) / total
+    return frac * v_htilde + (1.0 - frac) * v_h
+
+
+def comparator(v, v_ref, cfg: AnalogConfig, key=None):
+    """Clocked comparator: Θ(v − v_ref) with optional input noise."""
+    if key is not None and cfg.comparator_noise_v > 0:
+        v = v + cfg.comparator_noise_v * jax.random.normal(key, v.shape)
+    return (v > v_ref).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Full analog network (mirror of core.mingru.MinimalistNetwork)
+# ---------------------------------------------------------------------------
+
+
+def make_mismatch(key, images: Sequence[LayerImage], cfg: AnalogConfig):
+    """Draw per-device capacitor mismatch for every layer (fixed per chip)."""
+    out = []
+    for i, img in enumerate(images):
+        k1, k2, k3 = jax.random.split(jax.random.fold_in(key, i), 3)
+        K1, N = img.k_rows + 1, img.codes_h.shape[1]
+        out.append({
+            "caps_h": jnp.abs(1.0 + cfg.mismatch_sigma * jax.random.normal(k1, (K1, N))),
+            "caps_z": jnp.abs(1.0 + cfg.mismatch_sigma * jax.random.normal(k2, (K1, N))),
+            "segs": jnp.abs(1.0 + cfg.mismatch_sigma * jax.random.normal(
+                k3, (cfg.gate_units, N))),
+        })
+    return out
+
+
+def analog_forward(images: Sequence[LayerImage], x_seq, cfg: AnalogConfig,
+                   mismatch=None, key=None, collect_traces=True,
+                   forced_inputs=None):
+    """Run the switched-capacitor network on a binary input sequence.
+
+    x_seq: (B, T, K0), entries in {0,1}.  Returns (readout in software model
+    units (B, N_last), per-layer traces dict with z/htilde/h/out stacked over
+    time in model units) — the paper-Fig.-4 payload.
+
+    ``forced_inputs``: optional list of (B, T, K_li) binary arrays, one per
+    layer ≥ 1, substituting the software model's inter-layer activations for
+    the analog ones (open-loop / teacher-forced verification).  A comparator
+    decision on a state sitting exactly at threshold (|h| ≲ float-eps) is
+    noise-determined in any real circuit; forcing isolates each layer so the
+    per-layer mapping can be asserted bit-exact, while the closed-loop mode
+    measures end-to-end agreement like the paper's Fig. 4.
+    """
+    B, T, _ = x_seq.shape
+    n_layers = len(images)
+    v_h = [jnp.full((B, img.codes_h.shape[1]), cfg.v0) for img in images]
+    traces = [{"z": [], "htilde": [], "h": [], "out": []} for _ in images]
+
+    for t in range(T):
+        x = x_seq[:, t, :]
+        for li, img in enumerate(images):
+            if forced_inputs is not None and li >= 1:
+                x = forced_inputs[li - 1][:, t, :]
+            mm = mismatch[li] if mismatch is not None else {}
+            kk = (jax.random.fold_in(key, t * n_layers + li)
+                  if key is not None else None)
+
+            v_ht = charge_sharing_mvm(x, img.codes_h, img.bias_h_v, cfg,
+                                      caps=mm.get("caps_h"))
+            v_z = charge_sharing_mvm(x, img.codes_z,
+                                     jnp.zeros(img.codes_z.shape[1]), cfg,
+                                     caps=mm.get("caps_z"))
+            # ADC slope: input LSB = 6α/63 volts matches q6(hard_sigmoid)
+            lsb = 6.0 * img.alpha / quant.GATE_UNITS
+            z_code = sar_adc(v_z, cfg, lsb_volts=lsb,
+                             offset_code=img.adc_offset_code, key=kk)
+
+            v_h[li] = state_update_swap(v_h[li], v_ht, z_code, cfg,
+                                        seg_caps=mm.get("segs"))
+            x = comparator(
+                v_h[li], cfg.v0, cfg,
+                key=(jax.random.fold_in(kk, 7) if kk is not None else None))
+
+            if collect_traces:
+                traces[li]["htilde"].append((v_ht - cfg.v0) / img.alpha)
+                traces[li]["z"].append(z_code.astype(jnp.float32) /
+                                       quant.GATE_UNITS)
+                traces[li]["h"].append((v_h[li] - cfg.v0) / img.alpha)
+                traces[li]["out"].append(x)
+
+    readout = (v_h[-1] - cfg.v0) / images[-1].alpha
+    if collect_traces:
+        traces = [
+            {k: jnp.stack(v, axis=1) for k, v in tr.items()} for tr in traces
+        ]
+    return readout, traces
+
+
+# ---------------------------------------------------------------------------
+# Energy model (paper §4.2)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class EnergyConfig:
+    c_sample_f: float = 2.0e-15        # sampling capacitor [F]
+    c_switch_f: float = 0.5e-15        # transmission-gate gate cap [F]
+    c_line_f_per_row: float = 1.0e-15  # shared-line parasitic per synapse [F]
+    v_dd: float = 0.8
+
+
+def energy_per_step(rows: int, cols: int, n_cores: int,
+                    ecfg: EnergyConfig = EnergyConfig(),
+                    z_mean: float = 1.0) -> dict:
+    """Structural energy estimate per time step (worst case z_mean = 1).
+
+    Counted events per synapse per step (paper §3.1.1–3.1.3): precharge of
+    the h̃ and z sampling caps; the 4 shared weight rails driven per row;
+    S1/S2 switch toggles; swap switches ∝ z.  The SAR DAC (≪ IMC
+    capacitance), event routing (sparse 1 b), digital control and clocking
+    are excluded — exactly the paper's accounting.
+    """
+    n_syn = rows * cols * n_cores
+    e_cap = ecfg.c_sample_f * ecfg.v_dd ** 2
+    e_sw = ecfg.c_switch_f * ecfg.v_dd ** 2
+    e_line = ecfg.c_line_f_per_row * ecfg.v_dd ** 2
+
+    e_precharge = n_syn * 2 * e_cap            # h̃ + z sampling (worst case)
+    e_lines = n_syn * 4 * e_line               # 4 weight rails per row
+    e_switches = n_syn * (2 + 2) * 2 * e_sw    # S1*/S2* toggle pairs
+    e_swap = n_syn * 2 * e_sw * z_mean + n_syn * e_cap * z_mean * 0.5
+    total = e_precharge + e_lines + e_switches + e_swap
+    return {
+        "precharge_J": e_precharge,
+        "lines_J": e_lines,
+        "switches_J": e_switches,
+        "swap_J": e_swap,
+        "total_J": total,
+        "total_pJ": total * 1e12,
+    }

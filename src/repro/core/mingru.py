@@ -1,0 +1,165 @@
+"""minGRU cell and the MINIMALIST block/network (paper §2).
+
+The model family (Feng et al. 2024, adapted per the paper):
+
+    h̃_t = W^h · x_t + b^h                      (Eq. 2 — NO activation on h̃,
+                                                 required for hw compatibility)
+    z_t  = σ_z(W^z · x_t + b^z)                 (Eq. 3)
+    h_t  = z_t ⊙ h̃_t + (1 − z_t) ⊙ h_{t−1}     (Eq. 1)
+    out  = σ_h(h_t)                             (Eq. 4 — Heaviside when binary)
+
+Gates and candidates depend only on the input → the recurrence is a diagonal
+linear scan (repro.kernels.linear_scan) and training parallelizes over time.
+
+``MinGRUBlock`` honors a QuantConfig so the same module expresses all three
+models of paper Fig. 5 (float baseline / quantized / hardware-compatible).
+``MinimalistNetwork`` is the feed-forward stack of Fig. 1 (no skips, no
+channel mixing).
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant
+from repro.core.quant import QuantConfig
+from repro.kernels.linear_scan import ops as scan_ops
+from repro.models.module import Module, fan_in_init
+
+
+class MinGRUBlock(Module):
+    """One GRU block: fused (W^h | W^z) input projection + gated scan."""
+
+    def __init__(self, in_dim: int, dim: int, *, qcfg: QuantConfig = QuantConfig(),
+                 scan_backend: str = "xla", dtype=jnp.float32, name="mingru"):
+        self.in_dim, self.dim = int(in_dim), int(dim)
+        self.qcfg = qcfg
+        self.scan_backend = scan_backend
+        self.dtype = dtype
+        self.name = name
+
+    def init(self, key):
+        kh, kz = jax.random.split(key)
+        return {
+            "wh": fan_in_init(kh, (self.in_dim, self.dim), self.dtype),
+            "bh": jnp.zeros((self.dim,), self.dtype),
+            "wz": fan_in_init(kz, (self.in_dim, self.dim), self.dtype),
+            # bias the gate towards "keep state" at init (z ≈ 0.27 under σ)
+            "bz": jnp.full((self.dim,), -1.0, self.dtype),
+        }
+
+    def axes(self):
+        return {"wh": ("embed", "mlp"), "bh": ("mlp",),
+                "wz": ("embed", "mlp"), "bz": ("mlp",)}
+
+    def projections(self, params, x):
+        """Return (h̃, z) for input x: (B, T, in_dim)."""
+        cfg = self.qcfg
+        if cfg.quantize_weights:
+            # the four weight-voltage rails are shared per row between the
+            # interleaved h and z synapses (paper Fig. 2A) → ONE quantization
+            # scale per layer, matching analog.export_layer exactly.
+            scale = jax.lax.stop_gradient(jnp.maximum(
+                quant.weight_scale(params["wh"]),
+                quant.weight_scale(params["wz"])))
+            wh = quant.quantize_weights_2b(params["wh"], scale)[0].astype(x.dtype)
+            wz = quant.quantize_weights_2b(params["wz"], scale)[0].astype(x.dtype)
+        else:
+            wh = params["wh"].astype(x.dtype)
+            wz = params["wz"].astype(x.dtype)
+        bh = quant.maybe_quant_bias(params["bh"], cfg).astype(x.dtype)
+        bz = quant.maybe_quant_gate_bias(params["bz"], cfg).astype(x.dtype)
+        htilde = x @ wh + bh
+        z = quant.gate_fn(cfg)(x @ wz + bz)
+        return htilde, z
+
+    def __call__(self, params, x, h0=None):
+        """x: (B, T, in_dim) -> (out (B,T,dim), h (B,T,dim))."""
+        B = x.shape[0]
+        if h0 is None:
+            h0 = jnp.zeros((B, self.dim), x.dtype)
+        htilde, z = self.projections(params, x)
+        h = scan_ops.mingru_scan(z, htilde, h0, backend=self.scan_backend)
+        return quant.output_fn(self.qcfg)(h), h
+
+    def step(self, params, x_t, h_prev):
+        """Single inference step. x_t: (B, in_dim); h_prev: (B, dim)."""
+        htilde, z = self.projections(params, x_t[:, None, :])
+        htilde, z = htilde[:, 0], z[:, 0]
+        h = z * htilde + (1.0 - z) * h_prev
+        return quant.output_fn(self.qcfg)(h), h
+
+
+class MinimalistNetwork(Module):
+    """Feed-forward stack of MinGRU blocks (paper Fig. 1).
+
+    ``dims`` includes input and output sizes, e.g. the paper's sMNIST net is
+    dims = (1, 64, 64, 64, 64, 10).  Classification reads the final layer's
+    hidden state at the last time step (the analog h is read out once; no
+    Heaviside on the readout layer).
+    """
+
+    def __init__(self, dims: Sequence[int], *, qcfg: QuantConfig = QuantConfig(),
+                 scan_backend: str = "xla", dtype=jnp.float32, name="minimalist"):
+        self.dims = tuple(int(d) for d in dims)
+        self.qcfg = qcfg
+        self.blocks = []
+        for i, (din, dout) in enumerate(zip(self.dims[:-1], self.dims[1:])):
+            last = i == len(self.dims) - 2
+            cfg = qcfg if not last else QuantConfig(
+                # readout layer: h is read in the analog domain (no Θ);
+                # weights/biases still quantized when the stage says so.
+                quantize_weights=qcfg.quantize_weights,
+                quantize_biases=qcfg.quantize_biases,
+                binary_output=False,
+                hard_sigmoid_gate=qcfg.hard_sigmoid_gate,
+                quantize_gate_6b=qcfg.quantize_gate_6b,
+                surrogate_width=qcfg.surrogate_width)
+            self.blocks.append(MinGRUBlock(din, dout, qcfg=cfg,
+                                           scan_backend=scan_backend,
+                                           dtype=dtype, name=f"block{i}"))
+        self.name = name
+
+    def init(self, key):
+        keys = jax.random.split(key, len(self.blocks))
+        return {b.name: b.init(k) for b, k in zip(self.blocks, keys)}
+
+    def axes(self):
+        return {b.name: b.axes() for b in self.blocks}
+
+    def __call__(self, params, x, collect_traces: bool = False):
+        """x: (B, T, dims[0]) -> logits (B, dims[-1]).
+
+        With ``collect_traces`` also returns {layer: {"z","htilde","h","out"}}
+        used by the mixed-signal comparison (paper Fig. 4).
+        """
+        traces = {}
+        out = x
+        h = None
+        for b in self.blocks:
+            p = params[b.name]
+            if collect_traces:
+                htilde, z = b.projections(p, out)
+                traces[b.name] = {"htilde": htilde, "z": z}
+            out, h = b(p, out)
+            if collect_traces:
+                traces[b.name]["h"] = h
+                traces[b.name]["out"] = out
+        logits = h[:, -1, :]  # final layer's hidden state at last step
+        if collect_traces:
+            return logits, traces
+        return logits
+
+    def initial_state(self, batch, dtype=jnp.float32):
+        return [jnp.zeros((batch, b.dim), dtype) for b in self.blocks]
+
+    def step(self, params, x_t, states):
+        """Recurrent single-step inference through the whole stack."""
+        new_states = []
+        out = x_t
+        for b, s in zip(self.blocks, states):
+            out, h = b.step(params[b.name], out, s)
+            new_states.append(h)
+        return out, new_states

@@ -1,0 +1,226 @@
+"""Quantizers + QAT schedule for the MINIMALIST architecture (paper §2).
+
+The paper constrains the model to:
+  * 2 b weights   — four equidistant levels, two positive / two negative
+                    (circuit: voltages V_00..V_11 around the zero level V_0,
+                    i.e. values {-3/2, -1/2, +1/2, +3/2} · Δ for step Δ)
+  * 6 b biases    — uniform symmetric fixed-point
+  * binary output activations σ_h = Θ(·) (Heaviside)
+  * hard-sigmoid gate σ_z(x) = clip(x/6 + 1/2, 0, 1), quantized to 6 b
+    (the SAR-ADC resolution; the state-update capacitor bank has 64
+    segments, so the convex mix itself is 6 b-quantized)
+
+All quantizers are straight-through (STE): forward = quantized value,
+backward = identity on the clipped range, so the whole network remains
+trainable with standard autodiff. The 4-phase QAT schedule of §4.1 is
+expressed as a list of QuantConfig stages.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+# Relative 2 b weight levels (units of the level spacing Δ): the circuit's
+# four equidistant voltages straddling V_0 symmetrically.
+W2B_LEVELS = jnp.array([-1.5, -0.5, 0.5, 1.5], dtype=jnp.float32)
+
+
+def _ste(x_quant, x):
+    """Straight-through: forward x_quant, gradient of identity wrt x.
+
+    Written as x − sg(x) + sg(x_quant): the x − sg(x) term is an exact IEEE
+    zero (same-value subtraction), so the forward value is *bit-exactly*
+    x_quant — `x + sg(x_quant − x)` is not, and XLA's FMA contraction can
+    additionally perturb product forms.  Exactness matters: the analog
+    circuit equivalence tests compare against these forward values."""
+    return x - jax.lax.stop_gradient(x) + jax.lax.stop_gradient(x_quant)
+
+
+# ---------------------------------------------------------------------------
+# Weight / bias quantizers
+# ---------------------------------------------------------------------------
+
+def weight_scale(w, *, axis=None):
+    """Per-tensor (or per-axis) Δ so that ±1.5Δ covers ~|w|_max."""
+    m = jnp.max(jnp.abs(w), axis=axis, keepdims=axis is not None)
+    return jnp.maximum(m, 1e-8) / 1.5
+
+
+def quantize_weights_2b(w, scale=None):
+    """Project w onto {±0.5, ±1.5}·Δ with STE. Returns (w_q, codes ∈ [0,4))."""
+    if scale is None:
+        scale = jax.lax.stop_gradient(weight_scale(w))
+    wn = w / scale
+    # nearest of the four levels; decision boundaries at -1, 0, +1
+    codes = (wn > -1.0).astype(jnp.int32) + (wn > 0.0) + (wn > 1.0)
+    wq = W2B_LEVELS[codes] * scale
+    return _ste(wq, w), codes
+
+
+def weight_codes_2b(w, scale=None):
+    """Non-differentiable export path: 2 b codes + Δ for the hardware map."""
+    if scale is None:
+        scale = weight_scale(w)
+    _, codes = quantize_weights_2b(w, scale)
+    return codes, scale
+
+
+def quantize_bias_6b(b, scale=None):
+    """Uniform symmetric 6 b fixed point: levels {-31..31}·δ (63 live codes)."""
+    if scale is None:
+        scale = jax.lax.stop_gradient(
+            jnp.maximum(jnp.max(jnp.abs(b)), 1e-8) / 31.0)
+    q = jnp.clip(jnp.round(b / scale), -31, 31) * scale
+    return _ste(q, b)
+
+
+# ---------------------------------------------------------------------------
+# Activation functions (paper Eq. 4, 5)
+# ---------------------------------------------------------------------------
+
+def hard_sigmoid(x):
+    """σ_z(x) = 0 for x ≤ −3, 1 for x ≥ +3, x/6 + 1/2 in between."""
+    return jnp.clip(x / 6.0 + 0.5, 0.0, 1.0)
+
+
+# The state-update capacitor bank is segmented with binary scaling
+# (paper §3.1.2: "Segmenting the IMC matrix into groups with a binary
+# scaling"): 6 groups of {1,2,4,8,16,32} unit capacitors = 63 units total,
+# driven directly by the 6 b ADC code k ∈ [0, 63].  Realizable mixing
+# ratios are therefore k/63 — including both endpoints (z=0: untouched,
+# z=1: all 63 units swapped), exactly the software grid below.
+GATE_UNITS = 63
+
+
+def quantize_unit_6b(z):
+    """Quantize z ∈ [0,1] to the 6 b capacitor-swap grid {k/63, k=0..63}.
+
+    Mid-rise TRUNCATION (floor), not rounding: the quantizer *is* the SAR
+    ADC, whose transfer is code = floor((v − v_bottom)/LSB).  With the ADC
+    preset at (32 + offset − ½)·LSB the decision thresholds sit at
+    half-LSB positions, away from the exact s = 0 value that binary
+    activations produce constantly — so software and circuit break ties
+    identically and the mapping is bit-exact (tests/test_analog.py)."""
+    zq = jnp.floor(z * GATE_UNITS) / GATE_UNITS
+    return _ste(zq, z)
+
+
+# The z-bias is realized by pre-setting the ADC's capacitive DAC (paper
+# §3.1.2), so its grid is fixed by the ADC: one input-referred LSB is
+# 6/63 model units (dynamic range 6 spread over 63 steps), signed 6 b code.
+ADC_GATE_BIAS_LSB = 6.0 / GATE_UNITS
+
+
+def quantize_gate_bias_adc(b):
+    """Quantize the gate bias b^z onto the ADC-offset grid (±32 codes ≈ ±3,
+    i.e. ±half the hard sigmoid's dynamic range, paper Fig. 3C)."""
+    q = jnp.clip(jnp.round(b / ADC_GATE_BIAS_LSB), -32, 31) * ADC_GATE_BIAS_LSB
+    return _ste(q, b)
+
+
+def hard_sigmoid_q6(x):
+    """Hardware gate: hard sigmoid followed by the 6 b ADC quantization."""
+    return quantize_unit_6b(hard_sigmoid(x))
+
+
+import functools
+
+
+@functools.partial(jax.custom_jvp, nondiff_argnums=(1,))
+def _heaviside(x, width):
+    return (x > 0.0).astype(x.dtype)
+
+
+@_heaviside.defjvp
+def _heaviside_jvp(width, primals, tangents):
+    (x,), (dx,) = primals, tangents
+    y = _heaviside(x, width)
+    mask = (jnp.abs(x) < width).astype(x.dtype) / (2.0 * width)
+    return y, mask * dx
+
+
+def heaviside_ste(x, *, surrogate_width=3.0):
+    """Binary output activation Θ(x) with a boxcar STE surrogate.
+
+    The surrogate gradient is 1/(2w) on |x| < w — w defaults to 3 so that it
+    matches the support of the hard sigmoid the gate uses, which keeps the
+    two nonlinearities' trainable ranges aligned.  Implemented as a
+    custom_jvp so the forward value is exactly {0, 1} (no FMA artifacts).
+    """
+    return _heaviside(x, surrogate_width)
+
+
+# ---------------------------------------------------------------------------
+# QAT configuration & the 4-phase schedule (paper §4.1)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    """Which hardware constraints are active."""
+    quantize_weights: bool = False    # 2 b weights
+    quantize_biases: bool = False     # 6 b biases
+    binary_output: bool = False       # σ_h = Θ (else identity / tanh-free)
+    hard_sigmoid_gate: bool = False   # σ_z = hard sigmoid (else logistic σ)
+    quantize_gate_6b: bool = False    # 6 b z (ADC resolution)
+    surrogate_width: float = 3.0
+
+    # --- the three models of paper Fig. 5 ---
+    @staticmethod
+    def float_baseline():
+        return QuantConfig()
+
+    @staticmethod
+    def quantized():
+        """2 b W / 6 b b / binary σ_h, original gate activation."""
+        return QuantConfig(quantize_weights=True, quantize_biases=True,
+                           binary_output=True)
+
+    @staticmethod
+    def hardware():
+        """Fully hardware-compatible (adds hard-σ gate + 6 b z)."""
+        return QuantConfig(quantize_weights=True, quantize_biases=True,
+                           binary_output=True, hard_sigmoid_gate=True,
+                           quantize_gate_6b=True)
+
+
+# The paper's "multistage process of 4 gradual phases of quantization-aware
+# training": constraints are introduced one at a time so the network can
+# re-adapt between phases.
+QAT_PHASES = (
+    QuantConfig.float_baseline(),                                   # phase 0
+    QuantConfig(quantize_weights=True, quantize_biases=True),       # phase 1
+    QuantConfig.quantized(),                                        # phase 2
+    QuantConfig.hardware(),                                         # phase 3
+)
+
+
+def gate_fn(cfg: QuantConfig):
+    if cfg.hard_sigmoid_gate:
+        return hard_sigmoid_q6 if cfg.quantize_gate_6b else hard_sigmoid
+    return jax.nn.sigmoid
+
+
+def output_fn(cfg: QuantConfig):
+    if cfg.binary_output:
+        return lambda x: heaviside_ste(x, surrogate_width=cfg.surrogate_width)
+    return lambda x: x
+
+
+def maybe_quant_weights(w, cfg: QuantConfig):
+    if cfg.quantize_weights:
+        wq, _ = quantize_weights_2b(w)
+        return wq
+    return w
+
+
+def maybe_quant_bias(b, cfg: QuantConfig):
+    return quantize_bias_6b(b) if cfg.quantize_biases else b
+
+
+def maybe_quant_gate_bias(b, cfg: QuantConfig):
+    """Gate bias: fixed ADC-offset grid in full hardware mode, else 6 b."""
+    if cfg.quantize_gate_6b:
+        return quantize_gate_bias_adc(b)
+    return maybe_quant_bias(b, cfg)

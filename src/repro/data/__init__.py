@@ -1,0 +1,2 @@
+from repro.data.pipeline import SyntheticLMDataset, ShardedLoader
+from repro.data.smnist import SequentialMNISTLike, load_smnist

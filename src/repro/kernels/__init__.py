@@ -1,0 +1,10 @@
+# Pallas TPU kernels for the paper's compute hot-spots:
+#   linear_scan — chunked diagonal linear recurrence h_t = a_t*h_{t-1} + b_t
+#                 (the minGRU/Mamba state update, paper §2 Eq. 1 / §3.1.3)
+#   imc_mvm     — binary-activation × 2 b-weight charge-sharing matmul
+#                 (the switched-capacitor IMC projection, paper §3.1.1 Eq. 6)
+# Each has <name>.py (pl.pallas_call + BlockSpec), ops.py (jit'd wrapper with
+# custom_vjp) and ref.py (pure-jnp oracle used by tests & as CPU fallback).
+#   flash_attention — FlashAttention-2 fwd/bwd, GQA via index maps (§Perf A)
+#   fused_ssm   — fused Mamba selective scan fwd/bwd (§Perf cell C)
+#   minimalist_block — the paper's whole core as ONE fused inference kernel

@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for (causal / sliding-window) multi-head attention."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def mha_ref(q, k, v, *, causal=True, window=None):
+    """q, k, v: (B, H, S, D) (kv heads already expanded). -> (B, H, S, D)."""
+    S = q.shape[2]
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    logits = jnp.einsum("bhsd,bhtd->bhst", q, k).astype(jnp.float32) * scale
+    idx = jnp.arange(S)
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= idx[:, None] >= idx[None, :]
+    if window is not None:
+        mask &= (idx[:, None] - idx[None, :]) < window
+    logits = jnp.where(mask, logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhst,bhtd->bhsd", w.astype(q.dtype), v)

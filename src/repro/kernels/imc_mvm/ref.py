@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for the switched-capacitor IMC projection (paper Eq. 6).
+
+The circuit: binary activations x_i ∈ {0,1} connect the shared row lines to
+the four weight potentials; each synapse samples the line selected by its
+2 b code; column-wise charge sharing settles at the *mean* of the sampled
+voltages.  In weight units (relative to the zero level V_0):
+
+    y_j = (1/K) · Σ_i  x_i · Δ · level(code_ij) ,
+    level(c) = c − 1.5  ∈  {−1.5, −0.5, +0.5, +1.5}
+
+i.e. a matmul of a binary activation vector with a 2 b-dequantized weight
+matrix, scaled by 1/K (charge sharing normalizes by the number of
+capacitors, not by the number of active inputs).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+LEVEL_OFFSET = 1.5  # level(c) = c - 1.5 for c in {0,1,2,3}
+
+
+def dequantize_codes(codes, scale):
+    """codes: int (..., K, N) in [0,4); scale Δ: scalar or (N,)."""
+    return (codes.astype(jnp.float32) - LEVEL_OFFSET) * scale
+
+
+def imc_mvm_ref(x, codes, scale):
+    """x: (M, K) binary {0,1}; codes: (K, N) 2 b; -> (M, N) fp32.
+
+    Returns the charge-sharing column mean: (x @ W_deq) / K.
+    """
+    K = x.shape[-1]
+    w = dequantize_codes(codes, scale)
+    return (x.astype(jnp.float32) @ w) / K

@@ -1,0 +1,55 @@
+"""Pure-jnp oracle for the diagonal linear recurrence
+
+    h_t = a_t ⊙ h_{t-1} + b_t ,   t = 0..T-1,  h_{-1} = h0
+
+which is the minGRU state update (a = 1 - z, b = z ⊙ h̃, paper Eq. 1) and —
+with per-channel decays — the Mamba-1 selective-SSM recurrence.
+
+Two references:
+  * ``linear_scan_sequential``  — definitional lax.scan (ground truth)
+  * ``linear_scan_associative`` — jax.lax.associative_scan (the parallel
+    training algorithm the minGRU paper enables), used as the XLA fallback
+    on non-TPU backends.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def linear_scan_sequential(a, b, h0):
+    """a, b: (B, T, D); h0: (B, D) -> h: (B, T, D)."""
+
+    def step(h, ab):
+        at, bt = ab
+        h = at * h + bt
+        return h, h
+
+    _, hs = jax.lax.scan(step, h0, (jnp.swapaxes(a, 0, 1), jnp.swapaxes(b, 0, 1)))
+    return jnp.swapaxes(hs, 0, 1)
+
+
+def linear_scan_associative(a, b, h0):
+    """Parallel (Blelloch) form via the associative operator
+    (a2, b2) ∘ (a1, b1) = (a1*a2, a2*b1 + b2), fp32 accumulation."""
+    dt = a.dtype
+    a32 = a.astype(jnp.float32)
+    # fold h0 into the first step: b_0' = a_0*h0 + b_0
+    b32 = b.astype(jnp.float32)
+    b32 = b32.at[:, 0, :].add(a32[:, 0, :] * h0.astype(jnp.float32))
+
+    def combine(x, y):
+        ax, bx = x
+        ay, by = y
+        return ax * ay, ay * bx + by
+
+    _, h = jax.lax.associative_scan(combine, (a32, b32), axis=1)
+    return h.astype(dt)
+
+
+def mingru_ref(x, wh, bh, wz, bz, h0, *, gate_fn, out_fn):
+    """Full minGRU block oracle: projections + gate + scan + output act."""
+    htilde = x @ wh + bh
+    z = gate_fn(x @ wz + bz)
+    h = linear_scan_sequential(1.0 - z, z * htilde, h0)
+    return out_fn(h), h

@@ -1,0 +1,33 @@
+"""Oracle for the fused MINIMALIST block (inference, hardware mode).
+
+Exactly core.mingru.MinGRUBlock under QuantConfig.hardware(), expressed on
+exported hardware quantities (2 b codes + shared layer scale + quantized
+biases):
+
+    h̃_t = (x_t @ deq(codes_h))·Δ + b_h
+    z_t  = floor(63·clip((x_t @ deq(codes_z))·Δ + b_z)/6 + ½, 0, 1))/63
+    h_t  = z_t ⊙ h̃_t + (1 − z_t) ⊙ h_{t−1}
+    y_t  = Θ(h_t)
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import quant
+
+
+def minimalist_block_ref(x, codes_h, codes_z, scale, bh, bz, h0):
+    """x: (B,T,K) in {0,1}; codes: (K,N); scale: scalar; bh/bz: (N,);
+    h0: (B,N).  Returns (y=Θ(h), h) each (B,T,N)."""
+    wh = (codes_h.astype(jnp.float32) - 1.5) * scale
+    wz = (codes_z.astype(jnp.float32) - 1.5) * scale
+    htilde = x @ wh + bh
+    z = quant.quantize_unit_6b(quant.hard_sigmoid(x @ wz + bz))
+
+    hs = []
+    h = h0
+    for t in range(x.shape[1]):
+        h = z[:, t] * htilde[:, t] + (1.0 - z[:, t]) * h
+        hs.append(h)
+    h_seq = jnp.stack(hs, axis=1)
+    return (h_seq > 0.0).astype(x.dtype), h_seq

@@ -1,0 +1,480 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this produces (into benchmarks/results/dryrun/*.json):
+  * compiled.memory_analysis()  — proves the cell fits per-device HBM
+  * compiled.cost_analysis()    — per-device HLO FLOPs / bytes
+  * collective bytes parsed from the SPMD-partitioned HLO text (all-gather /
+    all-reduce / reduce-scatter / all-to-all / collective-permute operand
+    sizes — per-device, post-partitioning)
+  * the three roofline terms for TPU v5e (197 TFLOP/s bf16, 819 GB/s HBM,
+    ~50 GB/s/link ICI) — see EXPERIMENTS.md §Roofline.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-moe-30b-a3b \
+      --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--mesh both]
+"""
+
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import (ARCHS, ASSIGNED, SHAPES, get_config, input_specs,
+                           shape_supported)
+from repro.launch.mesh import make_production_mesh, mesh_info
+from repro.models import build_model
+from repro.optim import AdamW
+from repro.parallel import sharding as shd
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__),
+                           "../../../benchmarks/results/dryrun")
+
+# TPU v5e hardware constants (per chip)
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s/link
+
+_SHAPE_RE = re.compile(r"(f8e4m3fn|f8e5m2|bf16|f16|f32|f64|s8|u8|s16|u16|"
+                       r"s32|u32|s64|u64|pred)\[([0-9,]*)\]")
+_BYTES = {"pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+          "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+          "f32": 4, "s32": 4, "u32": 4, "f64": 8, "s64": 8, "u64": 8}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(m) -> int:
+    dtype, dims = m.group(1), m.group(2)
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _BYTES[dtype]
+
+
+def parse_collective_bytes(hlo_text: str) -> dict:
+    """Sum operand bytes of every collective op in the partitioned HLO."""
+    out = {k: {"count": 0, "operand_bytes": 0} for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        # match op lines like: %x = f32[..] all-reduce(f32[..] %y), ...
+        for kind in _COLLECTIVES:
+            if f" {kind}(" in s or f"{kind}-start(" in s:
+                # operand shapes: everything inside the call parens
+                call = s.split(f"{kind}(", 1)[-1] if f" {kind}(" in s \
+                    else s.split(f"{kind}-start(", 1)[-1]
+                call = call.split(")", 1)[0]
+                b = sum(_shape_bytes(m) for m in _SHAPE_RE.finditer(call))
+                if b == 0:  # fall back to the op's own output shape
+                    m = _SHAPE_RE.search(s)
+                    b = _shape_bytes(m) if m else 0
+                out[kind]["count"] += 1
+                out[kind]["operand_bytes"] += b
+                break
+    # bytes-on-wire model (ring algorithms): all-reduce moves ~2× operand
+    total_wire = sum(
+        v["operand_bytes"] * (2 if k == "all-reduce" else 1)
+        for k, v in out.items())
+    out["total_operand_bytes"] = sum(v["operand_bytes"]
+                                     for v in out.values()
+                                     if isinstance(v, dict))
+    out["total_wire_bytes"] = total_wire
+    return out
+
+
+# ---------------------------------------------------------------------------
+
+
+def build_train_step(model, opt):
+    def train_step(params, opt_state, batch):
+        def loss_fn(p):
+            loss, metrics = model.loss(p, batch)
+            return loss, metrics
+
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params)
+        params, opt_state, opt_m = opt.update(grads, opt_state, params)
+        metrics = dict(metrics, **opt_m)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def build_serve_step(model):
+    def serve_step(params, cache, tokens, pos):
+        logits, cache = model.decode_step(params, tokens, cache, pos)
+        # greedy sampling (argmax) — serving inner loop
+        next_tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        return next_tok, cache
+
+    return serve_step
+
+
+def build_prefill_step(model, cfg):
+    def prefill_step(params, batch):
+        return model(params, **batch)
+
+    return prefill_step
+
+
+def _build(cfg, remat, scan_layers=True):
+    if cfg.arch_type == "audio":
+        return build_model(cfg, scan_layers=scan_layers)
+    return build_model(cfg, remat=remat, scan_layers=scan_layers)
+
+
+def optimized_cfg(cfg, mesh):
+    """Hillclimbed variant: Pallas flash attention + fused selective scan
+    (lowered as cost stubs — Pallas is TPU-only; launch.dryrun adds the
+    kernels' analytic cost, see kernel_costs) + group-local MoE dispatch
+    with explicit sharding constraints (groups = DP degree)."""
+    import dataclasses
+    kw = {"moe_constraints": cfg.moe is not None}
+    if cfg.n_heads:
+        kw["attention_impl"] = "stub"
+    if cfg.mamba is not None:
+        kw["ssm_impl"] = "stub"
+    if cfg.moe is not None:
+        info = mesh_info(mesh)["axes"]
+        dp = info.get("pod", 1) * info.get("data", 1)
+        kw["moe"] = dataclasses.replace(cfg.moe, groups=dp)
+    return dataclasses.replace(cfg, **kw)
+
+
+def kernel_costs(cfg, shape, mesh):
+    """Analytic per-device (flops, hbm_bytes) of the Pallas kernel regions
+    replaced by stubs in the optimized lowering.
+
+    Sharding mirror of parallel.sharding rules: batch divides by the DP
+    degree; heads divide by the model degree only when shardable
+    (replicated attention repeats the compute on every model shard — the
+    honest accounting for heads % model != 0 archs)."""
+    from repro.kernels.flash_attention.ops import cost_model as fa_cost
+    from repro.kernels.fused_ssm.ops import cost_model as ssm_cost
+
+    sh = SHAPES[shape]
+    info = mesh_info(mesh)["axes"]
+    dp = info.get("pod", 1) * info.get("data", 1)
+    tp = info.get("model", 1)
+    B = max(sh["global_batch"] // dp, 1)
+    S = sh["seq_len"]
+    train = sh["kind"] == "train"
+    if sh["kind"] == "decode":   # decode paths don't use the stubs
+        return 0.0, 0.0
+
+    flops = bytes_ = 0.0
+    for spec in cfg.layer_specs():
+        if spec.kind in ("attn", "attn_local") and cfg.n_heads:
+            H = cfg.n_heads // tp if cfg.n_heads % tp == 0 else cfg.n_heads
+            KV = (cfg.n_kv_heads // tp if cfg.n_kv_heads % tp == 0
+                  else cfg.n_kv_heads)
+            window = cfg.sliding_window if spec.kind == "attn_local" else None
+            f, b = fa_cost(B, H, KV, S, cfg.head_dim, causal=True,
+                           window=window, train=train)
+            flops += f
+            bytes_ += b
+        elif spec.kind == "mla" and cfg.mla:
+            m = cfg.mla
+            H = cfg.n_heads // tp if cfg.n_heads % tp == 0 else cfg.n_heads
+            hd = (m.qk_nope_head_dim + m.qk_rope_head_dim
+                  + m.v_head_dim) // 2   # qk + pv matmul average width
+            f, b = fa_cost(B, H, H, S, hd, causal=True, train=train)
+            flops += f
+            bytes_ += b
+        elif spec.kind == "mamba" and cfg.mamba:
+            di = cfg.mamba.d_inner(cfg.d_model)
+            di = di // tp if di % tp == 0 else di
+            f, b = ssm_cost(B, S, di, cfg.mamba.d_state, train=train)
+            flops += f
+            bytes_ += b
+    return flops, bytes_
+
+
+def _lower(model, cfg, shape, mesh, *, zero1, donate, rules):
+    """Lower one step function for (model, shape) on mesh (under the mesh
+    context so PartitionSpec-based sharding constraints resolve)."""
+    with mesh:
+        return _lower_inner(model, cfg, shape, mesh, zero1=zero1,
+                            donate=donate, rules=rules)
+
+
+def _lower_inner(model, cfg, shape, mesh, *, zero1, donate, rules):
+    sh = SHAPES[shape]
+    key = jax.random.PRNGKey(0)
+    p_shapes = jax.eval_shape(model.init, key)
+    p_spec = shd.param_specs(model, p_shapes, mesh, rules)
+    p_shard = shd.named_sharding_tree(p_spec, mesh)
+    p_args = shd.attach(p_shapes, p_shard)
+    ispec = input_specs(cfg, shape)
+
+    if sh["kind"] == "train":
+        opt = AdamW(lr=3e-4)
+        o_shapes = jax.eval_shape(opt.init, p_shapes)
+        o_spec = shd.opt_state_specs(p_spec, p_shapes, mesh, zero1=zero1)
+        o_shard = shd.named_sharding_tree(o_spec, mesh)
+        o_args = shd.attach(o_shapes, o_shard)
+        b_spec = shd.batch_specs(ispec, mesh)
+        b_args = shd.attach(ispec, shd.named_sharding_tree(b_spec, mesh))
+        step = build_train_step(model, opt)
+        jitted = jax.jit(step, donate_argnums=(0, 1) if donate else (),
+                         out_shardings=(p_shard, o_shard, None))
+        return jitted.lower(p_args, o_args, b_args)
+    if sh["kind"] == "prefill":
+        b_spec = shd.batch_specs(ispec, mesh)
+        b_args = shd.attach(ispec, shd.named_sharding_tree(b_spec, mesh))
+        jitted = jax.jit(build_prefill_step(model, cfg))
+        return jitted.lower(p_args, b_args)
+    # decode
+    B = sh["global_batch"]
+    c_shapes = model.cache_spec(B, sh["seq_len"])
+    c_spec = shd.cache_specs(model.cache_axes(), c_shapes, mesh)
+    c_shard = shd.named_sharding_tree(c_spec, mesh)
+    c_args = shd.attach(c_shapes, c_shard)
+    tok = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    jitted = jax.jit(build_serve_step(model),
+                     donate_argnums=(1,) if donate else (),
+                     out_shardings=(None, c_shard))
+    return jitted.lower(p_args, c_args, tok, pos)
+
+
+def _analyze(compiled):
+    """cost_analysis + collective bytes of one compiled executable."""
+    try:
+        cost = compiled.cost_analysis()
+        cost_d = {k: float(v) for k, v in cost.items()
+                  if isinstance(v, (int, float)) and
+                  k in ("flops", "bytes accessed", "transcendentals")}
+    except Exception as e:  # pragma: no cover
+        cost_d = {"error": str(e)}
+    coll = parse_collective_bytes(compiled.as_text())
+    return cost_d, coll
+
+
+def depth_variant(cfg, n_units: int):
+    """Config with head/tail preserved and n_units pattern repeats."""
+    import dataclasses
+    kw = dict(n_layers=(len(cfg.head_layers) + len(cfg.tail_layers)
+                        + n_units * len(cfg.pattern)))
+    if cfg.n_enc_layers:
+        kw["n_enc_layers"] = n_units
+    return dataclasses.replace(cfg, **kw)
+
+
+def unit_extrapolated_costs(cfg, shape, mesh, *, remat, zero1, rules):
+    """XLA's cost_analysis counts a while-loop body ONCE regardless of trip
+    count (verified), so scanned-layer costs must be reconstructed.  We
+    compile unrolled 1-unit and 2-unit variants: each metric is linear in
+    unit count (U_k = base + k·body), so body = U2 − U1 and the full-depth
+    total is U1 + (K−1)·body.  Head/tail layers live in `base`."""
+    res = []
+    for k in (1, 2):
+        cfgk = depth_variant(cfg, k)
+        modelk = _build(cfgk, remat, scan_layers=False)
+        lowered = _lower(modelk, cfgk, shape, mesh, zero1=zero1,
+                         donate=False, rules=rules)
+        res.append(_analyze(lowered.compile()))
+    (c1, k1), (c2, k2) = res
+    K = cfg.n_repeats
+
+    def extr(a, b):
+        return a + (K - 1) * max(b - a, 0.0)
+
+    cost = {m: extr(c1.get(m, 0.0), c2.get(m, 0.0))
+            for m in ("flops", "bytes accessed", "transcendentals")}
+    coll = {}
+    for kind in _COLLECTIVES:
+        coll[kind] = {
+            "count": int(extr(k1[kind]["count"], k2[kind]["count"])),
+            "operand_bytes": extr(k1[kind]["operand_bytes"],
+                                  k2[kind]["operand_bytes"]),
+        }
+    coll["total_operand_bytes"] = sum(v["operand_bytes"]
+                                      for v in coll.values())
+    coll["total_wire_bytes"] = sum(
+        v["operand_bytes"] * (2 if kind == "all-reduce" else 1)
+        for kind, v in coll.items() if isinstance(v, dict))
+    return cost, coll, {"unit1": {"cost": c1, "coll_wire": k1["total_wire_bytes"]},
+                        "unit2": {"cost": c2, "coll_wire": k2["total_wire_bytes"]}}
+
+
+def lower_cell(arch: str, shape: str, mesh, *, remat="full", zero1=False,
+               rules_overrides=None, donate=True, skip_full=False,
+               impl="baseline"):
+    """Lower + compile one (arch, shape) on a mesh. Returns result dict."""
+    cfg = get_config(arch)
+    if impl == "optimized":
+        cfg = optimized_cfg(cfg, mesh)
+    sh = SHAPES[shape]
+    rules = shd.make_rules(rules_overrides)
+
+    # 1) full-depth scanned compile — the pass/fail + memory proof
+    t_lower = t_compile = 0.0
+    mem_d = {}
+    if not skip_full:
+        model = _build(cfg, remat)
+        t0 = time.time()
+        lowered = _lower(model, cfg, shape, mesh, zero1=zero1, donate=donate,
+                         rules=rules)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+        try:
+            mem = compiled.memory_analysis()
+            mem_d = {k: int(getattr(mem, k)) for k in
+                     ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes")
+                     if hasattr(mem, k)}
+        except Exception as e:  # pragma: no cover
+            mem_d = {"error": str(e)}
+        del compiled, lowered
+
+    # 2) per-unit cost extrapolation (see unit_extrapolated_costs)
+    cost_d, coll, unit_raw = unit_extrapolated_costs(
+        cfg, shape, mesh, remat=remat, zero1=zero1, rules=rules)
+
+    # 3) analytic cost of Pallas kernel regions (stub-lowered)
+    kadj = {"flops": 0.0, "bytes": 0.0}
+    if impl == "optimized":
+        kf, kb = kernel_costs(cfg, shape, mesh)
+        kadj = {"flops": kf, "bytes": kb}
+        cost_d["flops"] = cost_d.get("flops", 0.0) + kf
+        cost_d["bytes accessed"] = cost_d.get("bytes accessed", 0.0) + kb
+
+    n_dev = mesh_info(mesh)["n_devices"]
+    flops_dev = cost_d.get("flops", 0.0)
+    bytes_dev = cost_d.get("bytes accessed", 0.0)
+    terms = {
+        "compute_s": flops_dev / PEAK_FLOPS,
+        "memory_s": bytes_dev / HBM_BW,
+        "collective_s": coll["total_wire_bytes"] / ICI_BW,
+    }
+    dom = max(("compute_s", "memory_s", "collective_s"),
+              key=lambda k: terms[k])
+    terms["dominant"] = dom
+    terms["bound_s"] = terms[dom]
+
+    cfg_params = cfg.param_count()
+    cfg_active = cfg.active_param_count()
+    tokens = sh["global_batch"] * (sh["seq_len"] if sh["kind"] != "decode"
+                                   else 1)
+    model_flops = 6 * cfg_active * tokens if sh["kind"] == "train" \
+        else 2 * cfg_active * tokens
+    ideal_s = model_flops / n_dev / PEAK_FLOPS
+    if sh["kind"] == "decode":
+        # decode is weight-streaming-bound: the floor is reading the active
+        # params once per step (bf16), sharded across all chips
+        ideal_s = max(ideal_s, cfg_active * 2 / n_dev / HBM_BW)
+    result = {
+        "arch": arch, "shape": shape, "mesh": mesh_info(mesh),
+        "status": "ok",
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory_analysis": mem_d,
+        "cost_analysis": cost_d,
+        "collectives": {k: v for k, v in coll.items()},
+        "unit_raw": unit_raw,
+        "roofline": terms,
+        "params": cfg_params, "active_params": cfg_active,
+        "model_flops_global": model_flops,
+        "model_flops_per_dev": model_flops / n_dev,
+        "useful_flops_ratio": (model_flops / n_dev) / flops_dev
+        if flops_dev else None,
+        "roofline_fraction": ideal_s / terms["bound_s"]
+        if terms["bound_s"] else None,
+        "remat": remat, "zero1": zero1, "impl": impl,
+        "kernel_adjustment": kadj,
+    }
+    return result
+
+
+def run_cell(arch, shape, mesh_kind, **kw):
+    tag = f"{arch}__{shape}__{mesh_kind}"
+    if kw.get("impl", "baseline") != "baseline":
+        tag += "__" + kw["impl"]
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    try:
+        res = lower_cell(arch, shape, mesh, **kw)
+    except Exception as e:
+        res = {"arch": arch, "shape": shape, "mesh": mesh_info(mesh),
+               "status": "error", "error": f"{type(e).__name__}: {e}",
+               "traceback": traceback.format_exc()[-3000:]}
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, tag + ".json")
+    with open(path, "w") as f:
+        json.dump(res, f, indent=1, default=str)
+    return res
+
+
+def cells(archs=None, shapes=None):
+    for arch in (archs or ASSIGNED):
+        cfg = get_config(arch)
+        for shape in (shapes or SHAPES):
+            if shape_supported(cfg, shape):
+                yield arch, shape
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--remat", default="full")
+    ap.add_argument("--zero1", action="store_true")
+    ap.add_argument("--impl", default="baseline",
+                    choices=["baseline", "optimized"])
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    todo = list(cells([args.arch] if args.arch else None,
+                      [args.shape] if args.shape else None)) \
+        if (args.all or not (args.arch and args.shape)) \
+        else [(args.arch, args.shape)]
+
+    for arch, shape in todo:
+        for mk in meshes:
+            tag = f"{arch}__{shape}__{mk}"
+            if args.impl != "baseline":
+                tag += "__" + args.impl
+            path = os.path.join(RESULTS_DIR, tag + ".json")
+            if args.skip_existing and os.path.exists(path):
+                try:
+                    if json.load(open(path)).get("status") == "ok":
+                        print(f"SKIP {tag}")
+                        continue
+                except Exception:
+                    pass
+            t0 = time.time()
+            res = run_cell(arch, shape, mk, remat=args.remat,
+                           zero1=args.zero1, impl=args.impl)
+            ok = res["status"]
+            dom = res.get("roofline", {}).get("dominant", "-")
+            print(f"{ok:5s} {tag:60s} {time.time()-t0:7.1f}s dominant={dom}",
+                  flush=True)
+            if ok == "ok":
+                mem = res.get("memory_analysis", {})
+                cost = res.get("cost_analysis", {})
+                print(f"      memory_analysis: "
+                      f"args={mem.get('argument_size_in_bytes', 0)/1e9:.2f}GB "
+                      f"temp={mem.get('temp_size_in_bytes', 0)/1e9:.2f}GB | "
+                      f"cost_analysis: flops={cost.get('flops', 0):.3e} "
+                      f"bytes={cost.get('bytes accessed', 0):.3e} | "
+                      f"coll_wire={res['collectives']['total_wire_bytes']:.3e}B",
+                      flush=True)
+
+
+if __name__ == "__main__":
+    main()

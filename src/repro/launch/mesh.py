@@ -1,0 +1,29 @@
+"""Production mesh construction.
+
+A FUNCTION (not module-level constant) so importing this module never
+touches jax device state — the dry-run sets XLA_FLAGS for 512 host devices
+before any jax import; tests and benchmarks see the 1 real CPU device.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 single-pod (256 chips) or 2×16×16 two-pod (512 chips) mesh."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(model: int = 1, data: int = 1):
+    """Small mesh over however many local devices exist (tests/examples)."""
+    n = len(jax.devices())
+    assert model * data <= n, (model, data, n)
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def mesh_info(mesh) -> dict:
+    return {"axes": dict(mesh.shape),
+            "n_devices": int(np.prod(list(mesh.shape.values())))}

@@ -1,0 +1,15 @@
+# NOTE: keep this __init__ lazy — repro.core.mingru imports
+# repro.models.module, and an eager transformer import here would close an
+# import cycle (transformer uses core.mingru for the paper's LM mixer).
+from repro.models.module import Module, Dense, Embedding, RMSNorm, LayerNorm
+
+
+def build_model(cfg, **kw):
+    """Factory: config -> model instance."""
+    from repro.models.transformer import DecoderLM
+    from repro.models.whisper import EncDecLM
+
+    if cfg.arch_type == "audio":
+        kw.pop("remat", None)
+        return EncDecLM(cfg, **kw)
+    return DecoderLM(cfg, **kw)

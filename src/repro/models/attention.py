@@ -1,0 +1,302 @@
+"""Attention blocks: GQA (global + sliding window) and DeepSeek MLA.
+
+All variants support the three execution regimes of the assignment:
+  * train/prefill  — full-sequence causal attention
+  * decode         — single new token against a KV cache
+    (GQA: ring-buffer cache for local layers; MLA: compressed latent cache
+    with the weight-absorption trick, which is what makes MLA's small cache
+    pay off at decode time)
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, MLAConfig
+from repro.models.module import Module, RMSNorm, fan_in_init
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float = 1e4):
+    """x: (B, S, H, hd); positions: (B, S) or (S,)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B, S, hd/2)
+    if angles.ndim == 2:
+        angles = angles[None]
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def causal_mask(q_pos, k_pos, window: int | None = None):
+    """(…, Sq, Sk) additive mask: causal, optionally banded (sliding)."""
+    m = q_pos[..., :, None] >= k_pos[..., None, :]
+    if window is not None:
+        m &= (q_pos[..., :, None] - k_pos[..., None, :]) < window
+    return jnp.where(m, 0.0, NEG_INF)
+
+
+def _sdpa(q, k, v, mask):
+    """q: (B,S,H,hd), k/v: (B,L,KV,hd) with H = KV*G. mask: (B,1,S,L)."""
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    q = q.reshape(B, S, KV, G, hd)
+    scores = jnp.einsum("bskgd,blkd->bkgsl", q, k).astype(jnp.float32)
+    scores = scores / math.sqrt(hd) + mask[:, :, None, :, :]
+    w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgsl,blkd->bskgd", w, v)
+    return out.reshape(B, S, H, hd)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention
+# ---------------------------------------------------------------------------
+
+class GQAAttention(Module):
+    def __init__(self, cfg: ModelConfig, *, local: bool = False, name="attn",
+                 dtype=jnp.float32):
+        self.cfg = cfg
+        self.local = local
+        self.window = cfg.sliding_window if local else None
+        self.name = name
+        self.dtype = dtype
+
+    def init(self, key):
+        c = self.cfg
+        ks = jax.random.split(key, 4)
+        shp = dict(dtype=self.dtype)
+        d, H, KV, hd = c.d_model, c.n_heads, c.n_kv_heads, c.head_dim
+        mk = lambda k, s: fan_in_init(k, s, self.dtype, fan_in=s[0])
+        return {
+            "wq": mk(ks[0], (d, H * hd)).reshape(d, H, hd),
+            "wk": mk(ks[1], (d, KV * hd)).reshape(d, KV, hd),
+            "wv": mk(ks[2], (d, KV * hd)).reshape(d, KV, hd),
+            "wo": fan_in_init(ks[3], (H * hd, d), self.dtype).reshape(H, hd, d),
+        }
+
+    def axes(self):
+        return {"wq": ("embed", "heads", "head_dim"),
+                "wk": ("embed", "kv_heads", "head_dim"),
+                "wv": ("embed", "kv_heads", "head_dim"),
+                "wo": ("heads", "head_dim", "embed")}
+
+    def _qkv(self, params, x, positions):
+        c = self.cfg
+        q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(x.dtype))
+        k = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(x.dtype))
+        v = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(x.dtype))
+        q = apply_rope(q, positions, c.rope_theta)
+        k = apply_rope(k, positions, c.rope_theta)
+        return q, k, v
+
+    def __call__(self, params, x, positions=None):
+        """Full-sequence causal attention. x: (B, S, D)."""
+        B, S, _ = x.shape
+        impl = self.cfg.attention_impl
+        if positions is None:
+            positions = jnp.arange(S)
+        q, k, v = self._qkv(params, x, positions)
+        if impl == "stub":
+            # dry-run stand-in: O(S·d) op with grads to q/k/v; the real
+            # kernel's cost is added analytically by launch.dryrun
+            out = q + (k.mean(1, keepdims=True) + v.mean(1, keepdims=True)
+                       ).mean(2, keepdims=True)
+        elif impl == "flash":
+            from repro.kernels.flash_attention.ops import flash_attention
+            out = flash_attention(
+                jnp.moveaxis(q, 2, 1), jnp.moveaxis(k, 2, 1),
+                jnp.moveaxis(v, 2, 1), True, self.window, "pallas")
+            out = jnp.moveaxis(out, 1, 2)
+        else:
+            pos = jnp.broadcast_to(positions, (B, S)) \
+                if positions.ndim == 1 else positions
+            mask = causal_mask(pos, pos, self.window)[:, None]
+            out = _sdpa(q, k, v, mask)
+        return jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
+
+    # --- decode ---
+    def init_cache(self, batch, length, dtype=jnp.bfloat16):
+        c = self.cfg
+        L = min(length, self.window) if self.window else length
+        return {
+            "k": jnp.zeros((batch, L, c.n_kv_heads, c.head_dim), dtype),
+            "v": jnp.zeros((batch, L, c.n_kv_heads, c.head_dim), dtype),
+        }
+
+    def cache_spec(self, batch, length, dtype=jnp.bfloat16):
+        c = self.cfg
+        L = min(length, self.window) if self.window else length
+        s = jax.ShapeDtypeStruct((batch, L, c.n_kv_heads, c.head_dim), dtype)
+        return {"k": s, "v": s}
+
+    def cache_axes(self):
+        a = ("batch", "kv_len", "kv_heads", "head_dim")
+        return {"k": a, "v": a}
+
+    def decode(self, params, x, cache, pos):
+        """One-step decode. x: (B, 1, D); pos: scalar current position."""
+        B = x.shape[0]
+        q, k, v = self._qkv(params, x, jnp.full((B, 1), pos))
+        L = cache["k"].shape[1]
+        slot = (pos % L) if self.window else pos
+        ck = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k.astype(cache["k"].dtype), slot, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v.astype(cache["v"].dtype), slot, axis=1)
+        # key positions: ring buffer for local, linear for global
+        idx = jnp.arange(L)
+        if self.window:
+            # entry i holds position: the largest p ≤ pos with p % L == i
+            k_pos = pos - ((pos - idx) % L)
+        else:
+            k_pos = idx
+        valid = (k_pos <= pos) & (k_pos >= 0)
+        if self.window:
+            valid &= (pos - k_pos) < self.window
+        mask = jnp.where(valid, 0.0, NEG_INF)[None, None, None, :]
+        mask = jnp.broadcast_to(mask, (B, 1, 1, L))
+        out = _sdpa(q, ck.astype(q.dtype), cv.astype(q.dtype), mask)
+        y = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
+        return y, {"k": ck, "v": cv}
+
+
+# ---------------------------------------------------------------------------
+# DeepSeek Multi-head Latent Attention
+# ---------------------------------------------------------------------------
+
+class MLAAttention(Module):
+    def __init__(self, cfg: ModelConfig, name="mla", dtype=jnp.float32):
+        assert cfg.mla is not None
+        self.cfg = cfg
+        self.m: MLAConfig = cfg.mla
+        self.name = name
+        self.dtype = dtype
+
+    def init(self, key):
+        c, m = self.cfg, self.m
+        d, H = c.d_model, c.n_heads
+        qk_head = m.qk_nope_head_dim + m.qk_rope_head_dim
+        ks = jax.random.split(key, 6)
+        mk = lambda k, s, f: fan_in_init(k, s, self.dtype, fan_in=f)
+        return {
+            "w_dq": mk(ks[0], (d, m.q_lora_rank), d),
+            "w_uq": mk(ks[1], (m.q_lora_rank, H, qk_head), m.q_lora_rank),
+            "w_dkv": mk(ks[2], (d, m.kv_lora_rank), d),
+            "w_kr": mk(ks[3], (d, m.qk_rope_head_dim), d),
+            "w_ukv": mk(ks[4], (m.kv_lora_rank, H,
+                                m.qk_nope_head_dim + m.v_head_dim),
+                        m.kv_lora_rank),
+            "wo": mk(ks[5], (H, m.v_head_dim, d), H * m.v_head_dim),
+            "q_norm": jnp.ones((m.q_lora_rank,), self.dtype),
+            "kv_norm": jnp.ones((m.kv_lora_rank,), self.dtype),
+        }
+
+    def axes(self):
+        return {"w_dq": ("embed", "q_lora"),
+                "w_uq": ("q_lora", "heads", "head_dim"),
+                "w_dkv": ("embed", "kv_lora"),
+                "w_kr": ("embed", "head_dim"),
+                "w_ukv": ("kv_lora", "heads", "head_dim"),
+                "wo": ("heads", "head_dim", "embed"),
+                "q_norm": ("q_lora",), "kv_norm": ("kv_lora",)}
+
+    @staticmethod
+    def _rms(x, scale, eps=1e-6):
+        v = jnp.mean(jnp.square(x.astype(jnp.float32)), -1, keepdims=True)
+        return (x.astype(jnp.float32) * jax.lax.rsqrt(v + eps)
+                * scale.astype(jnp.float32)).astype(x.dtype)
+
+    def _latents(self, params, x, positions):
+        c, m = self.cfg, self.m
+        cq = self._rms(x @ params["w_dq"].astype(x.dtype), params["q_norm"])
+        q = jnp.einsum("bsr,rhk->bshk", cq, params["w_uq"].astype(x.dtype))
+        q_nope, q_rope = jnp.split(q, [m.qk_nope_head_dim], axis=-1)
+        q_rope = apply_rope(q_rope, positions, c.rope_theta)
+        ckv = self._rms(x @ params["w_dkv"].astype(x.dtype), params["kv_norm"])
+        k_rope = (x @ params["w_kr"].astype(x.dtype))[:, :, None, :]  # 1 shared head
+        k_rope = apply_rope(k_rope, positions, c.rope_theta)[:, :, 0, :]
+        return q_nope, q_rope, ckv, k_rope
+
+    def __call__(self, params, x, positions=None):
+        c, m = self.cfg, self.m
+        B, S, _ = x.shape
+        if positions is None:
+            positions = jnp.arange(S)
+        q_nope, q_rope, ckv, k_rope = self._latents(params, x, positions)
+        kv = jnp.einsum("bsr,rhk->bshk", ckv, params["w_ukv"].astype(x.dtype))
+        k_nope, v = jnp.split(kv, [m.qk_nope_head_dim], axis=-1)
+        if self.cfg.attention_impl == "stub":
+            # dry-run stand-in (see GQAAttention.__call__)
+            out = (v + q_nope.mean(-1, keepdims=True)
+                   + q_rope.mean(-1, keepdims=True)
+                   + k_nope.mean(-1, keepdims=True)
+                   + k_rope.mean(-1, keepdims=True)[:, :, None, :])
+        else:
+            scale = 1.0 / math.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+            pos = jnp.broadcast_to(positions, (B, S)) \
+                if positions.ndim == 1 else positions
+            mask = causal_mask(pos, pos)[:, None]
+            scores = (jnp.einsum("bshk,blhk->bhsl", q_nope, k_nope)
+                      + jnp.einsum("bshk,blk->bhsl", q_rope, k_rope))
+            scores = scores.astype(jnp.float32) * scale + mask
+            w = jax.nn.softmax(scores, -1).astype(x.dtype)
+            out = jnp.einsum("bhsl,blhk->bshk", w, v)
+        return jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
+
+    # --- decode with compressed latent cache + weight absorption ---
+    def cache_spec(self, batch, length, dtype=jnp.bfloat16):
+        m = self.m
+        return {
+            "ckv": jax.ShapeDtypeStruct((batch, length, m.kv_lora_rank), dtype),
+            "krope": jax.ShapeDtypeStruct((batch, length, m.qk_rope_head_dim), dtype),
+        }
+
+    def cache_axes(self):
+        return {"ckv": ("batch", "kv_len", "kv_lora"),
+                "krope": ("batch", "kv_len", "head_dim")}
+
+    def init_cache(self, batch, length, dtype=jnp.bfloat16):
+        return jax.tree_util.tree_map(
+            lambda s: jnp.zeros(s.shape, s.dtype),
+            self.cache_spec(batch, length, dtype))
+
+    def decode(self, params, x, cache, pos):
+        c, m = self.cfg, self.m
+        B = x.shape[0]
+        q_nope, q_rope, ckv, k_rope = self._latents(
+            params, x, jnp.full((B, 1), pos))
+        cc = jax.lax.dynamic_update_slice_in_dim(
+            cache["ckv"], ckv.astype(cache["ckv"].dtype), pos, axis=1)
+        cr = jax.lax.dynamic_update_slice_in_dim(
+            cache["krope"], k_rope.astype(cache["krope"].dtype), pos, axis=1)
+        # absorb W^{UK} into the query:  q_abs = q_nope @ W^{UK}ᵀ  (per head)
+        w_uk = params["w_ukv"][:, :, :m.qk_nope_head_dim].astype(x.dtype)
+        w_uv = params["w_ukv"][:, :, m.qk_nope_head_dim:].astype(x.dtype)
+        q_abs = jnp.einsum("bshk,rhk->bshr", q_nope, w_uk)
+        L = cc.shape[1]
+        scale = 1.0 / math.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+        scores = (jnp.einsum("bshr,blr->bhsl", q_abs, cc.astype(x.dtype))
+                  + jnp.einsum("bshk,blk->bhsl", q_rope, cr.astype(x.dtype)))
+        mask = jnp.where(jnp.arange(L) <= pos, 0.0, NEG_INF)[None, None, None]
+        w = jax.nn.softmax(scores.astype(jnp.float32) * scale + mask,
+                           -1).astype(x.dtype)
+        o_latent = jnp.einsum("bhsl,blr->bshr", w, cc.astype(x.dtype))
+        out = jnp.einsum("bshr,rhk->bshk", o_latent, w_uv)
+        y = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
+        return y, {"ckv": cc, "krope": cr}

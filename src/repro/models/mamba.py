@@ -1,0 +1,156 @@
+"""Mamba-1 selective SSM block (falcon-mamba / jamba layers).
+
+The SSM recurrence  h_t = Ā_t ⊙ h_{t-1} + B̄_t x_t  is, per (channel, state)
+pair, the same diagonal linear recurrence as the paper's minGRU state update
+— it is served by the same scan engine (repro.kernels.linear_scan), with the
+channel axis flattened to d_inner·d_state (DESIGN.md §4: the paper's scan
+technique applies directly to this architecture family).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, MambaConfig
+from repro.kernels.linear_scan import ops as scan_ops
+from repro.models.module import Module, fan_in_init
+
+
+class MambaBlock(Module):
+    def __init__(self, cfg: ModelConfig, *, scan_backend="xla",
+                 dtype=jnp.float32, name="mamba"):
+        assert cfg.mamba is not None
+        self.cfg = cfg
+        self.mc: MambaConfig = cfg.mamba
+        self.d_inner = self.mc.d_inner(cfg.d_model)
+        self.scan_backend = scan_backend
+        self.dtype, self.name = dtype, name
+
+    def init(self, key):
+        c, mc, di = self.cfg, self.mc, self.d_inner
+        d = c.d_model
+        ks = jax.random.split(key, 6)
+        dt_rank = max(1, d // 16)
+        # S4D-real initialization for A
+        a_init = jnp.tile(jnp.arange(1, mc.d_state + 1, dtype=self.dtype),
+                          (di, 1))
+        return {
+            "w_in": fan_in_init(ks[0], (d, 2 * di), self.dtype),
+            "conv": 0.1 * jax.random.normal(ks[1], (mc.d_conv, di), self.dtype),
+            "conv_b": jnp.zeros((di,), self.dtype),
+            "w_bcdt": fan_in_init(ks[2], (di, 2 * mc.d_state + dt_rank),
+                                  self.dtype),
+            "w_dt": fan_in_init(ks[3], (dt_rank, di), self.dtype),
+            "dt_bias": jnp.log(jnp.exp(
+                jnp.exp(jax.random.uniform(ks[4], (di,), self.dtype)
+                        * 2.0 - 6.0)) - 1.0 + 1e-6),  # softplus-inv of dt
+            "a_log": jnp.log(a_init),
+            "d_skip": jnp.ones((di,), self.dtype),
+            "w_out": fan_in_init(ks[5], (di, d), self.dtype),
+        }
+
+    def axes(self):
+        return {"w_in": ("embed", "d_inner"), "conv": (None, "d_inner"),
+                "conv_b": ("d_inner",),
+                "w_bcdt": ("d_inner", None), "w_dt": (None, "d_inner"),
+                "dt_bias": ("d_inner",), "a_log": ("d_inner", None),
+                "d_skip": ("d_inner",), "w_out": ("d_inner", "embed")}
+
+    def _conv(self, params, x):
+        """Causal depthwise conv over time. x: (B, T, di)."""
+        mc = self.mc
+        pad = jnp.pad(x, ((0, 0), (mc.d_conv - 1, 0), (0, 0)))
+        out = sum(pad[:, i:i + x.shape[1], :] * params["conv"][i]
+                  for i in range(mc.d_conv))
+        return out + params["conv_b"]
+
+    def _ssm_raw(self, params, xc):
+        """Raw SSM quantities (dt, B, C, A). xc: (B, T, di) post-conv+silu."""
+        n = self.mc.d_state
+        bcdt = xc @ params["w_bcdt"].astype(xc.dtype)
+        Bm, Cm, dt_in = jnp.split(bcdt, [n, 2 * n], axis=-1)
+        dt = jax.nn.softplus(dt_in @ params["w_dt"].astype(xc.dtype)
+                             + params["dt_bias"].astype(xc.dtype))  # (B,T,di)
+        A = -jnp.exp(params["a_log"].astype(jnp.float32))    # (di, n)
+        return dt, Bm, Cm, A
+
+    def _ssm_terms(self, params, xc):
+        """Discretized terms (materializing path)."""
+        dt, Bm, Cm, A = self._ssm_raw(params, xc)
+        a_bar = jnp.exp(dt[..., None].astype(jnp.float32) * A)  # (B,T,di,n)
+        b_bar = dt[..., None] * Bm[:, :, None, :] * xc[..., None]
+        return a_bar, b_bar, Cm
+
+    def __call__(self, params, x, positions=None):
+        """x: (B, T, D) -> (B, T, D)."""
+        del positions
+        B, T, _ = x.shape
+        mc, di = self.mc, self.d_inner
+        xz = x @ params["w_in"].astype(x.dtype)
+        xr, z = jnp.split(xz, 2, axis=-1)
+        xc = jax.nn.silu(self._conv(params, xr))
+        n = mc.d_state
+        impl = self.cfg.ssm_impl
+        if impl == "fused":
+            from repro.kernels.fused_ssm.ops import selective_scan
+            dt, Bm, Cm, A = self._ssm_raw(params, xc)
+            y = selective_scan(dt, xc, Bm, Cm, A, "pallas")
+        elif impl == "stub":
+            # dry-run stand-in: O(B·T·di) with grads to dt/xc/B/C/A; the
+            # fused kernel's cost is added analytically by launch.dryrun
+            dt, Bm, Cm, A = self._ssm_raw(params, xc)
+            y = ((dt * xc) * Bm.sum(-1, keepdims=True)
+                 + xc * Cm.sum(-1, keepdims=True)
+                 + xc * A.sum(1)[None, None, :].astype(x.dtype))
+        else:
+            a_bar, b_bar, Cm = self._ssm_terms(params, xc)
+            h = scan_ops.linear_scan(
+                a_bar.reshape(B, T, di * n).astype(x.dtype),
+                b_bar.reshape(B, T, di * n).astype(x.dtype),
+                jnp.zeros((B, di * n), x.dtype),
+                self.scan_backend)
+            y = jnp.einsum("btdn,btn->btd", h.reshape(B, T, di, n), Cm)
+        y = y + params["d_skip"].astype(x.dtype) * xc
+        y = y * jax.nn.silu(z)
+        return (y @ params["w_out"].astype(x.dtype)).astype(x.dtype)
+
+    # --- decode: O(1) state ---
+    def cache_spec(self, batch, length, dtype=jnp.float32):
+        del length
+        mc, di = self.mc, self.d_inner
+        return {
+            "ssm": jax.ShapeDtypeStruct((batch, di, mc.d_state), dtype),
+            "conv": jax.ShapeDtypeStruct((batch, mc.d_conv - 1, di), dtype),
+        }
+
+    def cache_axes(self):
+        return {"ssm": ("batch", "d_inner", "state"),
+                "conv": ("batch", "conv", "d_inner")}
+
+    def init_cache(self, batch, length=0, dtype=jnp.float32):
+        return jax.tree_util.tree_map(
+            lambda s: jnp.zeros(s.shape, s.dtype),
+            self.cache_spec(batch, length, dtype))
+
+    def decode(self, params, x, cache, pos):
+        """x: (B, 1, D) -> (B, 1, D), updated cache."""
+        del pos
+        B = x.shape[0]
+        mc, di, n = self.mc, self.d_inner, self.mc.d_state
+        xz = x[:, 0] @ params["w_in"].astype(x.dtype)
+        xr, z = jnp.split(xz, 2, axis=-1)
+        # conv over (cached d_conv-1 inputs, current)
+        window = jnp.concatenate([cache["conv"].astype(x.dtype),
+                                  xr[:, None, :]], axis=1)   # (B, d_conv, di)
+        xc = jnp.einsum("bkd,kd->bd", window, params["conv"].astype(x.dtype))
+        xc = jax.nn.silu(xc + params["conv_b"])
+        a_bar, b_bar, Cm = self._ssm_terms(params, xc[:, None, :])
+        h = (a_bar[:, 0] * cache["ssm"].astype(a_bar.dtype)
+             + b_bar[:, 0])                                   # (B, di, n)
+        y = jnp.einsum("bdn,bn->bd", h.astype(x.dtype), Cm[:, 0])
+        y = y + params["d_skip"].astype(x.dtype) * xc
+        y = y * jax.nn.silu(z)
+        y = (y @ params["w_out"].astype(x.dtype)).astype(x.dtype)[:, None, :]
+        new_cache = {"ssm": h.astype(cache["ssm"].dtype),
+                     "conv": window[:, 1:].astype(cache["conv"].dtype)}
+        return y, new_cache

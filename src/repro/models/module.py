@@ -1,0 +1,210 @@
+"""Minimal functional module system (flax-free).
+
+Modules are stateless Python objects holding configuration.  Parameters are
+plain nested dicts of arrays; every module exposes:
+
+  * ``init(key) -> params``      — build a param pytree (jit/eval_shape safe)
+  * ``axes() -> axes_pytree``    — same structure, leaves are tuples of
+                                   *logical* axis names (or None) used by the
+                                   sharding layer (repro.parallel.sharding)
+  * ``__call__(params, *a, **k)``— the forward function
+
+Design notes
+------------
+* ``init`` is pure (jax.random only) so the full-size configs can be
+  materialized abstractly via ``jax.eval_shape`` for the multi-pod dry-run —
+  no host allocation ever happens for the 671B-parameter configs.
+* Logical axis names ("embed", "heads", "mlp", "experts", "vocab", ...) are
+  mapped to physical mesh axes by rule tables; this mirrors the
+  MaxText/Flax ``logical_axis_rules`` pattern without the dependency.
+* Layer stacks are built with ``stacked_init`` (vmapped init over a leading
+  "layers" axis) and consumed with ``jax.lax.scan`` so HLO size stays O(1)
+  in depth — essential for compiling 61–88 layer configs in the dry-run.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = Any
+Axes = Any
+
+
+class Module:
+    """Base class; subclasses set config in __init__ and implement the API."""
+
+    def init(self, key: jax.Array) -> Params:
+        raise NotImplementedError
+
+    def axes(self) -> Axes:
+        raise NotImplementedError
+
+    def __call__(self, params: Params, *args, **kwargs):
+        raise NotImplementedError
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+def _trunc_normal(key, shape, dtype, stddev):
+    # 2-sigma truncated normal, the standard transformer init.
+    u = jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+    return (u * stddev).astype(dtype)
+
+
+def fan_in_init(key, shape, dtype, fan_in=None):
+    fan_in = fan_in if fan_in is not None else shape[0]
+    return _trunc_normal(key, shape, dtype, stddev=1.0 / np.sqrt(max(fan_in, 1)))
+
+
+def embed_init(key, shape, dtype):
+    return _trunc_normal(key, shape, dtype, stddev=1.0)
+
+
+# ---------------------------------------------------------------------------
+# Core layers
+# ---------------------------------------------------------------------------
+
+class Dense(Module):
+    """y = x @ W (+ b).  ``kernel_axes`` are logical names per kernel dim."""
+
+    def __init__(self, in_dim, out_dim, *, use_bias=False,
+                 kernel_axes=("embed", "mlp"), dtype=jnp.float32,
+                 init=fan_in_init, name="dense"):
+        self.in_dim, self.out_dim = int(in_dim), int(out_dim)
+        self.use_bias = use_bias
+        self.kernel_axes = tuple(kernel_axes)
+        self.dtype = dtype
+        self._init = init
+        self.name = name
+
+    def init(self, key):
+        p = {"kernel": self._init(key, (self.in_dim, self.out_dim), self.dtype)}
+        if self.use_bias:
+            p["bias"] = jnp.zeros((self.out_dim,), self.dtype)
+        return p
+
+    def axes(self):
+        a = {"kernel": self.kernel_axes}
+        if self.use_bias:
+            a["bias"] = (self.kernel_axes[-1],)
+        return a
+
+    def __call__(self, params, x):
+        w = params["kernel"].astype(x.dtype)
+        y = x @ w
+        if self.use_bias:
+            y = y + params["bias"].astype(x.dtype)
+        return y
+
+
+class Embedding(Module):
+    def __init__(self, vocab, dim, *, dtype=jnp.float32, name="embed"):
+        self.vocab, self.dim = int(vocab), int(dim)
+        self.dtype = dtype
+        self.name = name
+
+    def init(self, key):
+        return {"table": embed_init(key, (self.vocab, self.dim), self.dtype)}
+
+    def axes(self):
+        return {"table": ("vocab", "embed")}
+
+    def __call__(self, params, ids):
+        return params["table"].astype(jnp.bfloat16 if self.dtype == jnp.float32 else self.dtype)[ids]
+
+    def attend(self, params, x):
+        """Logits via tied embedding: (x @ table.T) / sqrt(dim) — the scale
+        keeps initial logits O(1) under a stddev-1 table (Gemma-style)."""
+        return (x @ params["table"].astype(x.dtype).T) / np.sqrt(self.dim)
+
+
+class RMSNorm(Module):
+    def __init__(self, dim, *, eps=1e-6, dtype=jnp.float32, name="norm"):
+        self.dim, self.eps, self.dtype, self.name = int(dim), eps, dtype, name
+
+    def init(self, key):
+        del key
+        return {"scale": jnp.ones((self.dim,), self.dtype)}
+
+    def axes(self):
+        return {"scale": ("embed",)}
+
+    def __call__(self, params, x):
+        x32 = x.astype(jnp.float32)
+        var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+        y = x32 * jax.lax.rsqrt(var + self.eps)
+        return (y * params["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+class LayerNorm(Module):
+    def __init__(self, dim, *, eps=1e-5, dtype=jnp.float32, name="ln"):
+        self.dim, self.eps, self.dtype, self.name = int(dim), eps, dtype, name
+
+    def init(self, key):
+        del key
+        return {"scale": jnp.ones((self.dim,), self.dtype),
+                "bias": jnp.zeros((self.dim,), self.dtype)}
+
+    def axes(self):
+        return {"scale": ("embed",), "bias": ("embed",)}
+
+    def __call__(self, params, x):
+        x32 = x.astype(jnp.float32)
+        mu = jnp.mean(x32, axis=-1, keepdims=True)
+        var = jnp.var(x32, axis=-1, keepdims=True)
+        y = (x32 - mu) * jax.lax.rsqrt(var + self.eps)
+        y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+        return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Layer stacking (scan-over-layers)
+# ---------------------------------------------------------------------------
+
+def stacked_init(module: Module, n_layers: int, key: jax.Array) -> Params:
+    """vmap a module's init over a leading 'layers' axis."""
+    keys = jax.random.split(key, n_layers)
+    return jax.vmap(module.init)(keys)
+
+
+def stacked_axes(module: Module, extra_leading: str = "layers") -> Axes:
+    """Prepend the 'layers' logical axis to every leaf of module.axes()."""
+    def add(leaf):
+        if leaf is None:
+            return (extra_leading,)
+        return (extra_leading,) + tuple(leaf)
+
+    return jax.tree_util.tree_map(
+        add, module.axes(), is_leaf=lambda x: x is None or isinstance(x, tuple))
+
+
+def scan_layers(body: Callable, stacked_params: Params, carry, *,
+                unroll: int = 1, remat_policy: str | None = "none"):
+    """Run ``carry = body(layer_params, carry)`` over the leading layer axis
+    with jax.lax.scan.  ``remat_policy`` in {none, full, dots_saveable}."""
+    fn = body
+    if remat_policy and remat_policy != "none":
+        if remat_policy == "full":
+            fn = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+        elif remat_policy == "dots_saveable":
+            fn = jax.checkpoint(
+                body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+        else:
+            raise ValueError(f"unknown remat policy {remat_policy}")
+
+    def step(c, lp):
+        return fn(lp, c), None
+
+    carry, _ = jax.lax.scan(step, carry, stacked_params, unroll=unroll)
+    return carry
+
+
+def select_layer(stacked_params: Params, i):
+    """Dynamic-index one layer's params out of a stacked pytree."""
+    return jax.tree_util.tree_map(lambda p: jax.lax.dynamic_index_in_dim(
+        p, i, axis=0, keepdims=False), stacked_params)

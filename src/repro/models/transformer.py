@@ -1,0 +1,381 @@
+"""Unified decoder LM covering the assigned architecture pool.
+
+Per-layer heterogeneity (Jamba 1:7 mamba:attn, Gemma-3 5:1 local:global,
+DeepSeek first-3-dense) is expressed as head-layers + a repeating pattern
+unit + tail-layers (configs.base.ModelConfig).  The pattern unit is scanned
+with jax.lax.scan over its repeats so compiled HLO size is O(|unit|), not
+O(n_layers) — required to compile the 61–88-layer configs in the dry-run and
+the production pattern (remat-friendly) anyway.
+
+Execution regimes:
+  * __call__ / loss    — full-sequence training & prefill
+  * decode_step        — one token against per-layer caches (GQA ring buffer
+                         for local attention, MLA latent cache, Mamba O(1)
+                         state, minGRU O(1) state)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (ATTN, ATTN_LOCAL, MAMBA, MINGRU, MLA,
+                                LayerSpec, ModelConfig)
+from repro.core.mingru import MinGRUBlock
+from repro.core.quant import QuantConfig
+from repro.models.attention import GQAAttention, MLAAttention
+from repro.models.mamba import MambaBlock
+from repro.models.moe import DenseMLP, MoEMLP
+from repro.models.module import (Embedding, Module, RMSNorm, stacked_init,
+                                 stacked_axes)
+
+_QUANT_MODES = {
+    "float": QuantConfig.float_baseline,
+    "quantized": QuantConfig.quantized,
+    "hardware": QuantConfig.hardware,
+}
+
+
+class MinGRUMixer(Module):
+    """The paper's minGRU block as an LM time-mixing layer (DESIGN.md §4).
+
+    Pure paper semantics inside the block (input-only gates, diagonal
+    recurrence, optional 2 b/6 b/binary constraints); the surrounding
+    residual stream is the standard pre-norm transformer residual so the
+    block is drop-in comparable with attention/mamba mixers.
+    """
+
+    def __init__(self, cfg: ModelConfig, *, scan_backend="xla",
+                 dtype=jnp.float32, name="mingru"):
+        self.cfg = cfg
+        qcfg = _QUANT_MODES[cfg.mingru_quant]()
+        self.block = MinGRUBlock(cfg.d_model, cfg.d_model, qcfg=qcfg,
+                                 scan_backend=scan_backend, dtype=dtype)
+        self.name = name
+
+    def init(self, key):
+        return self.block.init(key)
+
+    def axes(self):
+        return self.block.axes()
+
+    def __call__(self, params, x, positions=None):
+        del positions
+        out, _h = self.block(params, x)
+        return out
+
+    def cache_spec(self, batch, length, dtype=jnp.float32):
+        del length
+        return {"h": jax.ShapeDtypeStruct((batch, self.cfg.d_model), dtype)}
+
+    def cache_axes(self):
+        return {"h": ("batch", "mlp")}
+
+    def init_cache(self, batch, length=0, dtype=jnp.float32):
+        return {"h": jnp.zeros((batch, self.cfg.d_model), dtype)}
+
+    def decode(self, params, x, cache, pos):
+        del pos
+        out, h = self.block.step(params, x[:, 0, :], cache["h"])
+        return out[:, None, :], {"h": h}
+
+
+def _make_mixer(cfg: ModelConfig, spec: LayerSpec, dtype):
+    if spec.kind == ATTN:
+        return GQAAttention(cfg, local=False, dtype=dtype)
+    if spec.kind == ATTN_LOCAL:
+        return GQAAttention(cfg, local=True, dtype=dtype)
+    if spec.kind == MLA:
+        return MLAAttention(cfg, dtype=dtype)
+    if spec.kind == MAMBA:
+        return MambaBlock(cfg, dtype=dtype)
+    if spec.kind == MINGRU:
+        return MinGRUMixer(cfg, dtype=dtype)
+    raise ValueError(f"unknown block kind {spec.kind}")
+
+
+class DecoderLayer(Module):
+    """pre-norm mixer + residual, then pre-norm MLP (dense/MoE) + residual.
+
+    Mamba layers in pure-SSM stacks (falcon-mamba) have no MLP (d_ff = 0).
+    """
+
+    def __init__(self, cfg: ModelConfig, spec: LayerSpec, *,
+                 dtype=jnp.float32, name="layer"):
+        self.cfg, self.spec = cfg, spec
+        self.mixer = _make_mixer(cfg, spec, dtype)
+        self.norm1 = RMSNorm(cfg.d_model, eps=cfg.norm_eps, dtype=dtype)
+        d_ff = spec.d_ff or cfg.d_ff
+        if spec.moe:
+            assert cfg.moe is not None
+            self.mlp = MoEMLP(cfg.d_model, cfg.moe, dtype=dtype,
+                              constraints=cfg.moe_constraints)
+        elif d_ff:
+            self.mlp = DenseMLP(cfg.d_model, d_ff, dtype=dtype)
+        else:
+            self.mlp = None
+        self.norm2 = RMSNorm(cfg.d_model, eps=cfg.norm_eps, dtype=dtype) \
+            if self.mlp else None
+        self.name = name
+
+    def init(self, key):
+        k1, k2 = jax.random.split(key)
+        p = {"mixer": self.mixer.init(k1), "norm1": self.norm1.init(k1)}
+        if self.mlp:
+            p["mlp"] = self.mlp.init(k2)
+            p["norm2"] = self.norm2.init(k2)
+        return p
+
+    def axes(self):
+        a = {"mixer": self.mixer.axes(), "norm1": self.norm1.axes()}
+        if self.mlp:
+            a["mlp"] = self.mlp.axes()
+            a["norm2"] = self.norm2.axes()
+        return a
+
+    def __call__(self, params, x, positions=None):
+        h = self.mixer(params["mixer"], self.norm1(params["norm1"], x),
+                       positions=positions)
+        x = x + h
+        if self.mlp:
+            m = self.mlp(params["mlp"], self.norm2(params["norm2"], x))
+            if isinstance(m, tuple):   # MoE returns (out, aux)
+                m = m[0]
+            x = x + m
+        return x
+
+    def decode(self, params, x, cache, pos):
+        h, new_cache = self.mixer.decode(
+            params["mixer"], self.norm1(params["norm1"], x), cache, pos)
+        x = x + h
+        if self.mlp:
+            m = self.mlp(params["mlp"], self.norm2(params["norm2"], x))
+            if isinstance(m, tuple):
+                m = m[0]
+            x = x + m
+        return x, new_cache
+
+    def cache_spec(self, batch, length, dtype=jnp.bfloat16):
+        if hasattr(self.mixer, "cache_spec"):
+            return self.mixer.cache_spec(batch, length, dtype)
+        return {}
+
+    def cache_axes(self):
+        if hasattr(self.mixer, "cache_axes"):
+            return self.mixer.cache_axes()
+        return {}
+
+    def init_cache(self, batch, length, dtype=jnp.bfloat16):
+        if hasattr(self.mixer, "init_cache"):
+            return self.mixer.init_cache(batch, length, dtype)
+        return {}
+
+
+class DecoderLM(Module):
+    """Embedding + (head layers, scanned pattern unit, tail layers) + head."""
+
+    def __init__(self, cfg: ModelConfig, *, dtype=jnp.float32,
+                 remat: str = "none", scan_layers: bool = True):
+        self.cfg = cfg
+        self.dtype = dtype
+        self.remat = remat
+        self.scan_layers = scan_layers and cfg.n_repeats > 1
+        self.embed = Embedding(cfg.vocab_padded, cfg.d_model, dtype=dtype)
+        self.head_layers = [DecoderLayer(cfg, s, dtype=dtype, name=f"head{i}")
+                            for i, s in enumerate(cfg.head_layers)]
+        self.unit_layers = [DecoderLayer(cfg, s, dtype=dtype, name=f"unit{i}")
+                            for i, s in enumerate(cfg.pattern)]
+        self.tail_layers = [DecoderLayer(cfg, s, dtype=dtype, name=f"tail{i}")
+                            for i, s in enumerate(cfg.tail_layers)]
+        self.final_norm = RMSNorm(cfg.d_model, eps=cfg.norm_eps, dtype=dtype)
+        self.name = cfg.name
+
+    # ------------------------------------------------------------------
+    def init(self, key):
+        cfg = self.cfg
+        ks = jax.random.split(key, 4)
+        p = {"embed": self.embed.init(ks[0]),
+             "final_norm": self.final_norm.init(ks[0])}
+        if not cfg.tie_embeddings:
+            p["lm_head"] = Embedding(cfg.vocab_padded, cfg.d_model,
+                                     dtype=self.dtype).init(ks[3])
+        for i, l in enumerate(self.head_layers):
+            p[l.name] = l.init(jax.random.fold_in(ks[1], i))
+        for i, l in enumerate(self.tail_layers):
+            p[l.name] = l.init(jax.random.fold_in(ks[1], 1000 + i))
+        if self.scan_layers:
+            for i, l in enumerate(self.unit_layers):
+                p[l.name] = stacked_init(
+                    l, cfg.n_repeats, jax.random.fold_in(ks[2], i))
+        else:
+            for r in range(cfg.n_repeats):
+                for i, l in enumerate(self.unit_layers):
+                    p[f"{l.name}_r{r}"] = l.init(
+                        jax.random.fold_in(ks[2], r * 131 + i))
+        return p
+
+    def axes(self):
+        cfg = self.cfg
+        a = {"embed": self.embed.axes(),
+             "final_norm": self.final_norm.axes()}
+        if not cfg.tie_embeddings:
+            a["lm_head"] = self.embed.axes()
+        for l in self.head_layers + self.tail_layers:
+            a[l.name] = l.axes()
+        if self.scan_layers:
+            for l in self.unit_layers:
+                a[l.name] = stacked_axes(l)
+        else:
+            for r in range(cfg.n_repeats):
+                for l in self.unit_layers:
+                    a[f"{l.name}_r{r}"] = l.axes()
+        return a
+
+    # ------------------------------------------------------------------
+    def _run_unit_scanned(self, params, x, positions):
+        """lax.scan over pattern repeats; HLO is O(|unit|)."""
+        def body(carry, unit_params):
+            h = carry
+            for i, l in enumerate(self.unit_layers):
+                h = l(unit_params[l.name], h, positions=positions)
+            return h, None
+
+        fn = body
+        if self.remat != "none":
+            policy = (jax.checkpoint_policies.nothing_saveable
+                      if self.remat == "full" else
+                      jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+            fn = jax.checkpoint(body, policy=policy, static_argnums=())
+
+        stacked = {l.name: params[l.name] for l in self.unit_layers}
+        x, _ = jax.lax.scan(lambda c, p: fn(c, p), x, stacked)
+        return x
+
+    def backbone(self, params, x, positions=None):
+        for l in self.head_layers:
+            x = l(params[l.name], x, positions=positions)
+        if self.scan_layers:
+            x = self._run_unit_scanned(params, x, positions)
+        else:
+            for r in range(self.cfg.n_repeats):
+                for l in self.unit_layers:
+                    x = l(params[f"{l.name}_r{r}"], x, positions=positions)
+        for l in self.tail_layers:
+            x = l(params[l.name], x, positions=positions)
+        return self.final_norm(params["final_norm"], x)
+
+    def __call__(self, params, tokens=None, positions=None, embeds=None):
+        """tokens: (B, S) int32, or embeds: (B, S, D) (VLM/audio stub path);
+        both may be given (embeds prepended). Returns logits (B, S, V_pad)."""
+        cfg = self.cfg
+        parts = []
+        if embeds is not None:
+            parts.append(embeds.astype(self.compute_dtype()))
+        if tokens is not None:
+            parts.append(self.embed(params["embed"], tokens))
+        x = jnp.concatenate(parts, axis=1) if len(parts) > 1 else parts[0]
+        x = x.astype(self.compute_dtype())
+        x = self.backbone(params, x, positions=positions)
+        head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+        return self.embed.attend(head, x)
+
+    def compute_dtype(self):
+        return jnp.bfloat16 if self.dtype == jnp.float32 else self.dtype
+
+    def loss(self, params, batch):
+        """batch: {"tokens": (B,S), "labels": (B,S), optional "embeds"}.
+        Labels −1 = masked. Returns (scalar loss, metrics)."""
+        logits = self(params, batch.get("tokens"),
+                      embeds=batch.get("embeds"))
+        labels = batch["labels"]
+        S = labels.shape[1]
+        logits = logits[:, -S:, :]  # embeds prefix (VLM) produces no loss
+        logits = logits.astype(jnp.float32)
+        mask = labels >= 0
+        lab = jnp.clip(labels, 0)
+        logz = jax.nn.logsumexp(logits, -1)
+        ll = jnp.take_along_axis(logits, lab[..., None], -1)[..., 0]
+        nll = (logz - ll) * mask
+        loss = nll.sum() / jnp.clip(mask.sum(), 1)
+        return loss, {"loss": loss, "tokens": mask.sum()}
+
+    # ------------------------------------------------------------------
+    # Decode
+    # ------------------------------------------------------------------
+    def _all_layers(self):
+        seq = [(l.name, l, "plain") for l in self.head_layers]
+        if self.scan_layers:
+            seq += [(l.name, l, "scanned") for l in self.unit_layers]
+        else:
+            for r in range(self.cfg.n_repeats):
+                seq += [(f"{l.name}_r{r}", l, "plain")
+                        for l in self.unit_layers]
+        seq += [(l.name, l, "plain") for l in self.tail_layers]
+        return seq
+
+    def cache_spec(self, batch, length, dtype=jnp.bfloat16):
+        spec = {}
+        for name, l, mode in self._all_layers():
+            s = l.cache_spec(batch, length, dtype)
+            if mode == "scanned":
+                s = jax.tree_util.tree_map(
+                    lambda t: jax.ShapeDtypeStruct(
+                        (self.cfg.n_repeats,) + t.shape, t.dtype), s)
+            spec[name] = s
+        return spec
+
+    def cache_axes(self):
+        axes = {}
+        for name, l, mode in self._all_layers():
+            a = l.cache_axes()
+            if mode == "scanned":
+                a = jax.tree_util.tree_map(
+                    lambda t: ("layers",) + tuple(t), a,
+                    is_leaf=lambda x: isinstance(x, tuple))
+            axes[name] = a
+        return axes
+
+    def init_cache(self, batch, length, dtype=jnp.bfloat16):
+        return jax.tree_util.tree_map(
+            lambda s: jnp.zeros(s.shape, s.dtype),
+            self.cache_spec(batch, length, dtype))
+
+    def decode_step(self, params, tokens, cache, pos):
+        """tokens: (B, 1); pos: scalar int. Returns (logits, new cache)."""
+        cfg = self.cfg
+        x = self.embed(params["embed"], tokens).astype(self.compute_dtype())
+        new_cache = dict(cache)
+        # head layers
+        for l in self.head_layers:
+            x, new_cache[l.name] = l.decode(params[l.name], x,
+                                            cache[l.name], pos)
+        # scanned unit: lax.scan over repeats, cache as scanned xs/ys
+        if self.scan_layers:
+            def body(carry, rep):
+                h = carry
+                rep_params, rep_cache = rep
+                out_cache = {}
+                for l in self.unit_layers:
+                    h, out_cache[l.name] = l.decode(
+                        rep_params[l.name], h, rep_cache[l.name], pos)
+                return h, out_cache
+
+            stacked_p = {l.name: params[l.name] for l in self.unit_layers}
+            stacked_c = {l.name: cache[l.name] for l in self.unit_layers}
+            x, updated = jax.lax.scan(body, x, (stacked_p, stacked_c))
+            for l in self.unit_layers:
+                new_cache[l.name] = updated[l.name]
+        else:
+            for r in range(cfg.n_repeats):
+                for l in self.unit_layers:
+                    nm = f"{l.name}_r{r}"
+                    x, new_cache[nm] = l.decode(params[nm], x, cache[nm], pos)
+        for l in self.tail_layers:
+            x, new_cache[l.name] = l.decode(params[l.name], x,
+                                            cache[l.name], pos)
+        x = self.final_norm(params["final_norm"], x)
+        head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+        logits = self.embed.attend(head, x)
+        return logits, new_cache

@@ -1,0 +1,261 @@
+"""Whisper-style encoder-decoder backbone (audio arch, conv frontend stubbed).
+
+Per the assignment, the modality frontend is a STUB: ``input_specs`` provides
+precomputed frame embeddings (B, T_frames, d_model) — the two strided conv
+layers of Whisper are replaced by an identity on these embeddings.  The
+transformer backbone (encoder self-attn, decoder self-attn + cross-attn) is
+implemented in full and follows the paper-config geometry.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.attention import GQAAttention, _sdpa, causal_mask, NEG_INF
+from repro.models.moe import DenseMLP
+from repro.models.module import (Embedding, Module, RMSNorm, fan_in_init,
+                                 stacked_axes, stacked_init)
+
+
+class CrossAttention(Module):
+    def __init__(self, cfg: ModelConfig, name="xattn", dtype=jnp.float32):
+        self.cfg, self.name, self.dtype = cfg, name, dtype
+
+    def init(self, key):
+        c = self.cfg
+        d, H, hd = c.d_model, c.n_heads, c.head_dim
+        ks = jax.random.split(key, 4)
+        mk = lambda k, s, f: fan_in_init(k, s, self.dtype, fan_in=f)
+        return {"wq": mk(ks[0], (d, H, hd), d),
+                "wk": mk(ks[1], (d, H, hd), d),
+                "wv": mk(ks[2], (d, H, hd), d),
+                "wo": mk(ks[3], (H, hd, d), H * hd)}
+
+    def axes(self):
+        return {"wq": ("embed", "heads", "head_dim"),
+                "wk": ("embed", "heads", "head_dim"),
+                "wv": ("embed", "heads", "head_dim"),
+                "wo": ("heads", "head_dim", "embed")}
+
+    def kv(self, params, memory):
+        k = jnp.einsum("bld,dhk->blhk", memory, params["wk"].astype(memory.dtype))
+        v = jnp.einsum("bld,dhk->blhk", memory, params["wv"].astype(memory.dtype))
+        return k, v
+
+    def __call__(self, params, x, memory=None, kv_cache=None):
+        """x: (B,S,D); memory: (B,L,D) or precomputed (k,v)."""
+        k, v = kv_cache if kv_cache is not None else self.kv(params, memory)
+        q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(x.dtype))
+        B, S = q.shape[:2]
+        mask = jnp.zeros((B, 1, S, k.shape[1]), q.dtype)
+        out = _sdpa(q, k, v, mask)
+        return jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
+
+
+class EncoderLayer(Module):
+    def __init__(self, cfg: ModelConfig, name="enc", dtype=jnp.float32):
+        self.cfg, self.name = cfg, name
+        self.attn = GQAAttention(cfg, dtype=dtype)
+        self.mlp = DenseMLP(cfg.d_model, cfg.d_ff, dtype=dtype)
+        self.n1 = RMSNorm(cfg.d_model, dtype=dtype)
+        self.n2 = RMSNorm(cfg.d_model, dtype=dtype)
+
+    def init(self, key):
+        k1, k2 = jax.random.split(key)
+        return {"attn": self.attn.init(k1), "mlp": self.mlp.init(k2),
+                "n1": self.n1.init(k1), "n2": self.n2.init(k2)}
+
+    def axes(self):
+        return {"attn": self.attn.axes(), "mlp": self.mlp.axes(),
+                "n1": self.n1.axes(), "n2": self.n2.axes()}
+
+    def __call__(self, params, x):
+        # bidirectional self-attention: run GQA attention without causal mask
+        a = self.attn
+        h = self.n1(params["n1"], x)
+        q, k, v = a._qkv(params["attn"], h, jnp.arange(h.shape[1]))
+        mask = jnp.zeros((h.shape[0], 1, h.shape[1], h.shape[1]), h.dtype)
+        o = _sdpa(q, k, v, mask)
+        x = x + jnp.einsum("bshk,hkd->bsd", o,
+                           params["attn"]["wo"].astype(x.dtype))
+        return x + self.mlp(params["mlp"], self.n2(params["n2"], x))
+
+
+class DecoderLayerED(Module):
+    def __init__(self, cfg: ModelConfig, name="dec", dtype=jnp.float32):
+        self.cfg, self.name = cfg, name
+        self.self_attn = GQAAttention(cfg, dtype=dtype)
+        self.cross = CrossAttention(cfg, dtype=dtype)
+        self.mlp = DenseMLP(cfg.d_model, cfg.d_ff, dtype=dtype)
+        self.n1 = RMSNorm(cfg.d_model, dtype=dtype)
+        self.n2 = RMSNorm(cfg.d_model, dtype=dtype)
+        self.n3 = RMSNorm(cfg.d_model, dtype=dtype)
+
+    def init(self, key):
+        ks = jax.random.split(key, 3)
+        return {"self": self.self_attn.init(ks[0]),
+                "cross": self.cross.init(ks[1]),
+                "mlp": self.mlp.init(ks[2]),
+                "n1": self.n1.init(ks[0]), "n2": self.n2.init(ks[1]),
+                "n3": self.n3.init(ks[2])}
+
+    def axes(self):
+        return {"self": self.self_attn.axes(), "cross": self.cross.axes(),
+                "mlp": self.mlp.axes(), "n1": self.n1.axes(),
+                "n2": self.n2.axes(), "n3": self.n3.axes()}
+
+    def __call__(self, params, x, memory):
+        x = x + self.self_attn(params["self"], self.n1(params["n1"], x))
+        x = x + self.cross(params["cross"], self.n2(params["n2"], x), memory)
+        return x + self.mlp(params["mlp"], self.n3(params["n3"], x))
+
+    def decode(self, params, x, cache, pos):
+        h, sc = self.self_attn.decode(params["self"],
+                                      self.n1(params["n1"], x),
+                                      cache["self"], pos)
+        x = x + h
+        x = x + self.cross(params["cross"], self.n2(params["n2"], x),
+                           kv_cache=(cache["xk"], cache["xv"]))
+        x = x + self.mlp(params["mlp"], self.n3(params["n3"], x))
+        return x, {"self": sc, "xk": cache["xk"], "xv": cache["xv"]}
+
+
+class EncDecLM(Module):
+    """Whisper-shaped backbone: encoder over frame embeddings, causal
+    decoder over tokens with cross-attention."""
+
+    def __init__(self, cfg: ModelConfig, *, dtype=jnp.float32,
+                 scan_layers: bool = True):
+        self.cfg = cfg
+        self.dtype = dtype
+        self.scan_layers = scan_layers
+        self.embed = Embedding(cfg.vocab_padded, cfg.d_model, dtype=dtype)
+        self.enc_unit = EncoderLayer(cfg, dtype=dtype)
+        self.dec_unit = DecoderLayerED(cfg, dtype=dtype)
+        self.n_enc = cfg.n_enc_layers or cfg.n_layers
+        self.n_dec = cfg.n_layers
+        self.enc_norm = RMSNorm(cfg.d_model, dtype=dtype)
+        self.final_norm = RMSNorm(cfg.d_model, dtype=dtype)
+        self.name = cfg.name
+
+    def init(self, key):
+        k1, k2, k3 = jax.random.split(key, 3)
+        return {"embed": self.embed.init(k1),
+                "enc": stacked_init(self.enc_unit, self.n_enc, k2),
+                "dec": stacked_init(self.dec_unit, self.n_dec, k3),
+                "enc_norm": self.enc_norm.init(k1),
+                "final_norm": self.final_norm.init(k1)}
+
+    def axes(self):
+        return {"embed": self.embed.axes(),
+                "enc": stacked_axes(self.enc_unit),
+                "dec": stacked_axes(self.dec_unit),
+                "enc_norm": self.enc_norm.axes(),
+                "final_norm": self.final_norm.axes()}
+
+    def compute_dtype(self):
+        return jnp.bfloat16 if self.dtype == jnp.float32 else self.dtype
+
+    def encode(self, params, frame_embeds):
+        x = frame_embeds.astype(self.compute_dtype())
+
+        def body(c, lp):
+            return self.enc_unit(lp, c), None
+
+        if self.scan_layers:
+            x, _ = jax.lax.scan(body, x, params["enc"])
+        else:
+            for i in range(self.n_enc):
+                x, _ = body(x, jax.tree_util.tree_map(
+                    lambda p: p[i], params["enc"]))
+        return self.enc_norm(params["enc_norm"], x)
+
+    def __call__(self, params, tokens=None, embeds=None, positions=None):
+        """embeds: (B, T_frames, D) stub frame embeddings; tokens: (B, S)."""
+        del positions
+        memory = self.encode(params, embeds)
+        if tokens is None:   # encoder-only regime (prefill benchmark)
+            return memory
+        x = self.embed(params["embed"], tokens).astype(self.compute_dtype())
+
+        def body(c, lp):
+            return self.dec_unit(lp, c, memory), None
+
+        if self.scan_layers:
+            x, _ = jax.lax.scan(body, x, params["dec"])
+        else:
+            for i in range(self.n_dec):
+                x, _ = body(x, jax.tree_util.tree_map(
+                    lambda p: p[i], params["dec"]))
+        x = self.final_norm(params["final_norm"], x)
+        return self.embed.attend(params["embed"], x)
+
+    def loss(self, params, batch):
+        logits = self(params, tokens=batch["tokens"],
+                      embeds=batch["embeds"]).astype(jnp.float32)
+        labels = batch["labels"]
+        mask = labels >= 0
+        lab = jnp.clip(labels, 0)
+        logz = jax.nn.logsumexp(logits, -1)
+        ll = jnp.take_along_axis(logits, lab[..., None], -1)[..., 0]
+        loss = ((logz - ll) * mask).sum() / jnp.clip(mask.sum(), 1)
+        return loss, {"loss": loss}
+
+    # --- decode ---
+    def cache_spec(self, batch, length, dtype=jnp.bfloat16):
+        c = self.cfg
+        self_spec = self.dec_unit.self_attn.cache_spec(batch, length, dtype)
+        xk = jax.ShapeDtypeStruct(
+            (self.n_dec, batch, c.frontend_seq, c.n_heads, c.head_dim), dtype)
+        return {"dec": {
+            "self": jax.tree_util.tree_map(
+                lambda s: jax.ShapeDtypeStruct((self.n_dec,) + s.shape,
+                                               s.dtype), self_spec),
+            "xk": xk, "xv": xk}}
+
+    def cache_axes(self):
+        self_axes = jax.tree_util.tree_map(
+            lambda a: ("layers",) + tuple(a),
+            self.dec_unit.self_attn.cache_axes(),
+            is_leaf=lambda x: isinstance(x, tuple))
+        xa = ("layers", "batch", "frames", "heads", "head_dim")
+        return {"dec": {"self": self_axes, "xk": xa, "xv": xa}}
+
+    def init_cache(self, batch, length, dtype=jnp.bfloat16, params=None,
+                   frame_embeds=None):
+        cache = jax.tree_util.tree_map(
+            lambda s: jnp.zeros(s.shape, s.dtype),
+            self.cache_spec(batch, length, dtype))
+        if params is not None and frame_embeds is not None:
+            memory = self.encode(params, frame_embeds)
+            ks, vs = jax.vmap(
+                lambda lp: self.dec_unit.cross.kv(lp["cross"], memory)
+            )(params["dec"])
+            cache["dec"]["xk"] = ks.astype(dtype)
+            cache["dec"]["xv"] = vs.astype(dtype)
+        return cache
+
+    def decode_step(self, params, tokens, cache, pos):
+        x = self.embed(params["embed"], tokens).astype(self.compute_dtype())
+
+        def body(carry, rep):
+            lp, lc = rep
+            h, nc = self.dec_unit.decode(lp, carry, lc, pos)
+            return h, nc
+
+        if self.scan_layers:
+            x, new_dec = jax.lax.scan(body, x, (params["dec"], cache["dec"]))
+        else:
+            ncs = []
+            for i in range(self.n_dec):
+                sel = lambda t: jax.tree_util.tree_map(lambda p: p[i], t)
+                x, nc = body(x, (sel(params["dec"]), sel(cache["dec"])))
+                ncs.append(nc)
+            new_dec = jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs), *ncs)
+        x = self.final_norm(params["final_norm"], x)
+        logits = self.embed.attend(params["embed"], x)
+        return logits, {"dec": new_dec}

@@ -1,0 +1,1 @@
+from repro.optim.adamw import AdamW, cosine_schedule, clip_by_global_norm

@@ -1,0 +1,3 @@
+from repro.parallel.sharding import (make_rules, param_specs, cache_specs,
+                                     batch_specs, named_sharding_tree,
+                                     DP_AXES)

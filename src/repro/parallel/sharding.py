@@ -1,0 +1,174 @@
+"""Logical-axis → mesh-axis sharding rules (MaxText-style, flax-free).
+
+Every module declares logical axis names per parameter dimension
+(``Module.axes()``).  This layer maps them onto the production mesh
+(pod, data, model):
+
+  * TP ("model"):  vocab, attention heads / kv heads, MLP hidden, experts
+    (expert parallelism), Mamba d_inner, minGRU hidden.
+  * DP ("pod","data"): the batch dimension of activations and inputs;
+    with ``zero1`` the optimizer state is additionally sharded over "data"
+    on the first shardable dimension (ZeRO-1).
+  * SP ("data"): KV-cache length for the long-context decode regime where
+    batch==1 (flash-decoding-style sequence sharding).
+
+Assignments are *divisibility-checked per parameter* — a rule only applies
+if the actual dim is divisible by the mesh axis size and the mesh axis is
+not already used by an earlier dim of the same parameter.  This is what
+lets one rule table serve heads=96 (mistral, sharded) and heads=8 (gemma,
+replicated) without per-arch special cases.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# DP axes: pod × data (both used for the batch dimension)
+DP_AXES = ("pod", "data")
+
+# logical name -> preferred mesh axis (None = replicate)
+DEFAULT_RULES = {
+    "vocab": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "mlp": "model",
+    "experts": "model",
+    "d_inner": "model",
+    "q_lora": None,
+    "kv_lora": None,
+    "head_dim": None,
+    "embed": None,
+    "layers": None,
+}
+
+
+def make_rules(overrides=None):
+    rules = dict(DEFAULT_RULES)
+    if overrides:
+        rules.update(overrides)
+    return rules
+
+
+def _axis_size(mesh: Mesh, name) -> int:
+    if name is None:
+        return 1
+    if isinstance(name, tuple):
+        return int(np.prod([mesh.shape[n] for n in name]))
+    return int(mesh.shape[name]) if name in mesh.shape else 0
+
+
+def _dp_axes(mesh: Mesh):
+    axes = tuple(a for a in DP_AXES if a in mesh.shape)
+    return axes if axes else None
+
+
+def spec_for(axes_tuple, shape, rules, mesh: Mesh) -> P:
+    """PartitionSpec for one param given its logical axes and real shape."""
+    used = set()
+    out = []
+    for name, dim in zip(axes_tuple, shape):
+        ax = rules.get(name) if name else None
+        if isinstance(ax, tuple):  # drop axes absent from this mesh
+            ax = tuple(a for a in ax if a in mesh.shape)
+            ax = ax if len(ax) > 1 else (ax[0] if ax else None)
+        elif ax is not None and ax not in mesh.shape:
+            ax = None
+        members = (set(ax) if isinstance(ax, tuple)
+                   else {ax} if ax else set())
+        sz = _axis_size(mesh, ax)
+        if ax and not (members & used) and 0 < sz <= dim and dim % sz == 0:
+            out.append(ax)
+            used |= members
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def _tree_specs(axes_tree, shapes_tree, rules, mesh):
+    is_axes_leaf = lambda x: x is None or isinstance(x, tuple)
+    return jax.tree_util.tree_map(
+        lambda a, s: spec_for(a or (), s.shape, rules, mesh),
+        axes_tree, shapes_tree, is_leaf=is_axes_leaf)
+
+
+def param_specs(model, params_shapes, mesh: Mesh, rules=None):
+    """PartitionSpec pytree for a model's params (shapes from eval_shape)."""
+    rules = rules or make_rules()
+    return _tree_specs(model.axes(), params_shapes, rules, mesh)
+
+
+def opt_state_specs(param_spec_tree, params_shapes, mesh: Mesh,
+                    zero1: bool = False):
+    """Optimizer (m, v) specs: same as params, optionally ZeRO-1-sharded
+    over 'data' on the first dimension that is divisible and unused."""
+    def z1(spec, shape):
+        if not zero1:
+            return spec
+        data = _axis_size(mesh, "data")
+        parts = list(spec)
+        parts += [None] * (len(shape.shape) - len(parts))
+        if "data" in parts or data <= 1:
+            return spec
+        for i, (p, dim) in enumerate(zip(parts, shape.shape)):
+            if p is None and dim % data == 0:
+                parts[i] = "data"
+                return P(*parts)
+        return spec
+
+    mv = jax.tree_util.tree_map(z1, param_spec_tree, params_shapes,
+                                is_leaf=lambda x: isinstance(x, P))
+    return {"m": mv, "v": mv, "step": P()}
+
+
+def batch_specs(batch_shapes, mesh: Mesh):
+    """Input batch: shard dim0 (batch) over (pod, data) when divisible."""
+    dp = _dp_axes(mesh)
+    dp_size = _axis_size(mesh, dp)
+
+    def spec(s):
+        if s.shape and s.shape[0] % max(dp_size, 1) == 0 and dp_size > 1:
+            return P(dp, *([None] * (len(s.shape) - 1)))
+        return P(*([None] * len(s.shape)))
+
+    return jax.tree_util.tree_map(spec, batch_shapes)
+
+
+# Cache rules: batch→DP when divisible; the cache length falls back to
+# 'data' (sequence parallelism — the long-context batch-1 decode regime);
+# kv-heads / latent / d_inner → 'model'.  Ordering in spec_for's used-set
+# guarantees batch-DP and length-SP are mutually exclusive.
+CACHE_RULES = {
+    "batch": DP_AXES,
+    "kv_len": "data",
+    "kv_heads": "model",
+    "kv_lora": None,
+    "head_dim": None,
+    "d_inner": "model",
+    "state": None,
+    "conv": None,
+    "mlp": "model",
+    "layers": None,
+    "heads": "model",
+    "frames": None,
+    "embed": None,
+}
+
+
+def cache_specs(cache_axes_tree, cache_shapes, mesh: Mesh, rules=None):
+    """PartitionSpec pytree for decode caches from their logical axes."""
+    rules = rules or CACHE_RULES
+    return _tree_specs(cache_axes_tree, cache_shapes, rules, mesh)
+
+
+def named_sharding_tree(spec_tree, mesh: Mesh):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def attach(shapes_tree, sharding_tree):
+    """ShapeDtypeStruct pytree with shardings attached (for jit.lower)."""
+    return jax.tree_util.tree_map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        shapes_tree, sharding_tree)

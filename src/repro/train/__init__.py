@@ -1,0 +1,2 @@
+from repro.train.loop import Trainer, TrainConfig
+from repro.train.fault_tolerance import StragglerMonitor, PreemptionHandler

@@ -1,0 +1,82 @@
+"""Elastic scaling: re-mesh and reshard a running job's state.
+
+When nodes are lost (or added), the job rebuilds a smaller/larger mesh and
+re-lays-out params + optimizer state.  With jax.sharding this is a
+``device_put`` of every leaf onto the new NamedSharding — the checkpointing
+layer supports the same path across restarts (Checkpointer.restore with new
+shardings).  The policy implemented here:
+
+  * the "model" axis is preserved (TP degree is architecture-bound:
+    re-sharding TP changes per-op tile shapes and is rarely worth it live);
+  * the "data"/"pod" product shrinks to the largest size that divides the
+    remaining device count — DP is the elastic axis;
+  * the global batch is kept constant by raising gradient-accumulation
+    steps on the surviving hosts (tokens/step invariant ⇒ loss curves are
+    comparable across the resize).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.parallel import sharding as shd
+
+
+@dataclasses.dataclass
+class ElasticPlan:
+    new_data: int
+    new_model: int
+    accum_multiplier: int
+
+
+def plan_remesh(n_devices_left: int, model_size: int,
+                old_data: int) -> ElasticPlan:
+    """Largest DP degree that fits the surviving devices (TP preserved)."""
+    assert n_devices_left >= model_size, "cannot keep TP degree"
+    new_data = n_devices_left // model_size
+    # keep global batch: accumulate more on the fewer replicas
+    mult = int(np.ceil(old_data / new_data))
+    return ElasticPlan(new_data=new_data, new_model=model_size,
+                       accum_multiplier=mult)
+
+
+def make_elastic_mesh(plan: ElasticPlan, devices=None):
+    devices = devices if devices is not None else jax.devices()
+    n = plan.new_data * plan.new_model
+    dev = np.asarray(devices[:n]).reshape(plan.new_data, plan.new_model)
+    return jax.sharding.Mesh(dev, ("data", "model"))
+
+
+def reshard_tree(tree, spec_tree, new_mesh):
+    """device_put every leaf onto the new mesh (the live re-mesh path)."""
+    sh = shd.named_sharding_tree(spec_tree, new_mesh)
+    flat_t, td = jax.tree_util.tree_flatten(tree)
+    flat_s = td.flatten_up_to(sh)
+    return td.unflatten([jax.device_put(t, s)
+                         for t, s in zip(flat_t, flat_s)])
+
+
+def elastic_restart(model, params, opt_state, *, lost_devices: int,
+                    mesh, rules=None):
+    """Simulate losing `lost_devices` and re-laying-out the state.
+
+    Returns (new_mesh, params, opt_state, plan). Used by the integration
+    test with host devices; on a real fleet the surviving processes call
+    this after the runtime re-initializes with the reduced slice.
+    """
+    info = dict(mesh.shape)
+    model_size = info.get("model", 1)
+    old_data = info.get("data", 1) * info.get("pod", 1)
+    n_left = int(np.prod(list(info.values()))) - lost_devices
+    plan = plan_remesh(n_left, model_size, old_data)
+    new_mesh = make_elastic_mesh(plan)
+
+    p_shapes = jax.eval_shape(lambda: params)
+    p_spec = shd.param_specs(model, p_shapes, new_mesh, rules)
+    params = reshard_tree(params, p_spec, new_mesh)
+    o_spec = {"m": p_spec, "v": p_spec,
+              "step": jax.sharding.PartitionSpec()}
+    opt_state = reshard_tree(opt_state, o_spec, new_mesh)
+    return new_mesh, params, opt_state, plan

@@ -1,0 +1,167 @@
+"""Fault-tolerant training loop.
+
+Production behaviors (exercised by tests/test_train_loop.py):
+  * restore-from-latest on start; periodic async checkpoints
+  * step-crash recovery: a failing step restores the last committed
+    checkpoint and continues (data order is step-keyed, so the stream
+    resumes exactly — no skipped or doubled batches)
+  * preemption: SIGTERM triggers checkpoint + clean exit at step boundary
+  * straggler monitoring with a pluggable mitigation hook
+  * microbatch gradient accumulation (jax.lax.scan over microbatches)
+  * optional int8 error-feedback gradient compression on the DP all-reduce
+  * mixed-precision policy, grad clipping, cosine schedule
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import Checkpointer
+from repro.optim import AdamW
+from repro.optim.compress import compress_grads, init_error
+from repro.train.fault_tolerance import (FailureInjector, PreemptionHandler,
+                                         StragglerMonitor)
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    steps: int = 100
+    ckpt_every: int = 50
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    keep_n: int = 3
+    log_every: int = 10
+    microbatch: Optional[int] = None     # grad accumulation chunk (per host)
+    grad_compress: bool = False
+    max_failures: int = 3
+
+
+def build_train_step(model, opt: AdamW, *, microbatch=None,
+                     grad_compress=False):
+    """Returns train_step(params, opt_state, aux_state, batch)."""
+
+    def loss_fn(p, b):
+        loss, metrics = model.loss(p, b)
+        return loss, metrics
+
+    def grads_of(params, batch):
+        if microbatch is None:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+            return loss, metrics, grads
+        # gradient accumulation: reshape leading dim into (k, microbatch)
+        def reshape(x):
+            k = x.shape[0] // microbatch
+            return x.reshape((k, microbatch) + x.shape[1:])
+
+        mb = jax.tree_util.tree_map(reshape, batch)
+
+        def body(acc, b):
+            (loss, metrics), g = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, b)
+            acc = jax.tree_util.tree_map(jnp.add, acc, g)
+            return acc, (loss, metrics)
+
+        zero = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        gsum, (losses, metricss) = jax.lax.scan(body, zero, mb)
+        k = jax.tree_util.tree_leaves(mb)[0].shape[0]
+        grads = jax.tree_util.tree_map(lambda g: g / k, gsum)
+        metrics = jax.tree_util.tree_map(lambda m: m.mean(), metricss)
+        return losses.mean(), metrics, grads
+
+    def train_step(params, opt_state, aux_state, batch):
+        loss, metrics, grads = grads_of(params, batch)
+        if grad_compress:
+            grads, new_err = compress_grads(grads, aux_state["ef_error"])
+            aux_state = dict(aux_state, ef_error=new_err)
+        params, opt_state, opt_metrics = opt.update(grads, opt_state, params)
+        return params, opt_state, aux_state, dict(metrics, **opt_metrics)
+
+    return train_step
+
+
+class Trainer:
+    def __init__(self, model, opt: AdamW, cfg: TrainConfig, *,
+                 loader, jit_kwargs=None, failure_injector=None):
+        self.model, self.opt, self.cfg, self.loader = model, opt, cfg, loader
+        self.ckpt = Checkpointer(cfg.ckpt_dir, keep_n=cfg.keep_n)
+        self.monitor = StragglerMonitor()
+        self.injector = failure_injector or FailureInjector()
+        step_fn = build_train_step(model, opt, microbatch=cfg.microbatch,
+                                   grad_compress=cfg.grad_compress)
+        self.step_fn = jax.jit(step_fn, donate_argnums=(0, 1, 2),
+                               **(jit_kwargs or {}))
+        self.history = []
+
+    def _init_state(self, key):
+        params = self.model.init(key)
+        opt_state = self.opt.init(params)
+        aux = {"ef_error": init_error(params)} if self.cfg.grad_compress \
+            else {"ef_error": {}}
+        return params, opt_state, aux
+
+    def _restore_or_init(self, key):
+        step = self.ckpt.latest_step()
+        if step is not None:
+            state = self.ckpt.restore(step)
+            # numpy trees -> device
+            state = jax.tree_util.tree_map(jnp.asarray, state)
+            # empty subtrees (e.g. aux without compression) have no leaves
+            # and are dropped by serialization — rebuild them
+            aux = state.get("aux") or {"ef_error": {}}
+            if self.cfg.grad_compress and not aux.get("ef_error"):
+                aux = {"ef_error": init_error(state["params"])}
+            return state["params"], state["opt"], aux, int(step)
+        p, o, a = self._init_state(key)
+        return p, o, a, 0
+
+    def _save(self, step, params, opt_state, aux, blocking=False):
+        self.ckpt.save(step, {"params": params, "opt": opt_state,
+                              "aux": aux}, blocking=blocking)
+
+    def run(self, key=None):
+        key = key if key is not None else jax.random.PRNGKey(0)
+        params, opt_state, aux, start = self._restore_or_init(key)
+        step = start
+        failures = 0
+        with PreemptionHandler() as preempt:
+            while step < self.cfg.steps:
+                try:
+                    self.injector.maybe_fail(step)
+                    t0 = time.time()
+                    batch = jax.tree_util.tree_map(
+                        jnp.asarray, self.loader.batch_at(step))
+                    params, opt_state, aux, metrics = self.step_fn(
+                        params, opt_state, aux, batch)
+                    loss = float(metrics["loss"])
+                    dt = time.time() - t0
+                    self.monitor.record(step, dt)
+                    self.history.append({"step": step, "loss": loss,
+                                         "dt": dt})
+                    if step % self.cfg.log_every == 0:
+                        print(f"step {step:6d} loss {loss:.4f} "
+                              f"({dt*1e3:.0f} ms)", flush=True)
+                    step += 1
+                    if step % self.cfg.ckpt_every == 0:
+                        self._save(step, params, opt_state, aux)
+                    if preempt.requested:
+                        print("preemption requested — checkpointing")
+                        self._save(step, params, opt_state, aux,
+                                   blocking=True)
+                        return params, step
+                except (RuntimeError, jax.errors.JaxRuntimeError) as e:
+                    failures += 1
+                    if failures > self.cfg.max_failures:
+                        raise
+                    print(f"step {step} failed ({e}); restoring last "
+                          f"checkpoint", flush=True)
+                    self.ckpt.wait()
+                    params, opt_state, aux, step = self._restore_or_init(key)
+        self.ckpt.wait()
+        self._save(step, params, opt_state, aux, blocking=True)
+        return params, step

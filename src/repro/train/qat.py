@@ -1,0 +1,96 @@
+"""Multi-stage quantization-aware training (paper §4.1).
+
+"This, however, requires the extension of the network training to a
+multistage process of 4 gradual phases of quantization-aware training."
+
+Phases (quant.QAT_PHASES):
+  0. fp32 baseline (original minGRU activations)
+  1. + 2 b weights, 6 b biases
+  2. + binary output activations (Θ with boxcar STE)
+  3. + hard-sigmoid gate quantized to 6 b  (fully hardware-compatible)
+
+Each phase rebuilds the network with the next QuantConfig and continues
+from the previous phase's parameters (quantizers are STE wrappers around
+the same latent fp32 weights, so the param pytree carries over 1:1).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.mingru import MinimalistNetwork
+from repro.core.quant import QAT_PHASES, QuantConfig
+from repro.optim import AdamW, cosine_schedule
+
+
+@dataclasses.dataclass
+class QATConfig:
+    dims: Sequence[int]
+    phase_epochs: Sequence[int] = (12, 8, 8, 8)
+    batch: int = 128
+    lr: float = 2e-3
+    seed: int = 0
+
+
+def _batches(x, y, batch, key):
+    n = x.shape[0]
+    idx = np.asarray(jax.random.permutation(key, n))
+    for i in range(0, n - batch + 1, batch):
+        sel = idx[i:i + batch]
+        yield x[sel], y[sel]
+
+
+def accuracy(net, params, x, y, batch=256):
+    correct = 0
+    for i in range(0, x.shape[0], batch):
+        logits = net(params, jnp.asarray(x[i:i + batch]))
+        correct += int((np.argmax(np.asarray(logits), -1)
+                        == y[i:i + batch]).sum())
+    return correct / x.shape[0]
+
+
+def train_qat(train_set, test_set, cfg: QATConfig,
+              phases=QAT_PHASES, verbose=True):
+    """Runs the gradual QAT ladder; returns (params, per-phase results)."""
+    (xtr, ytr), (xte, yte) = train_set, test_set
+    key = jax.random.PRNGKey(cfg.seed)
+    params = None
+    results = []
+    for phase_i, (qcfg, epochs) in enumerate(zip(phases, cfg.phase_epochs)):
+        net = MinimalistNetwork(cfg.dims, qcfg=qcfg)
+        if params is None:
+            params = net.init(jax.random.fold_in(key, 7))
+        total_steps = max(1, epochs * (xtr.shape[0] // cfg.batch))
+        opt = AdamW(lr=cosine_schedule(cfg.lr * (0.5 ** phase_i),
+                                       warmup=total_steps // 20,
+                                       total=total_steps),
+                    weight_decay=0.0)
+        opt_state = opt.init(params)
+
+        @jax.jit
+        def step(params, opt_state, xb, yb):
+            def loss_fn(p):
+                logits = net(p, xb)
+                logp = jax.nn.log_softmax(logits.astype(jnp.float32))
+                nll = -jnp.take_along_axis(logp, yb[:, None], -1).mean()
+                return nll
+
+            loss, grads = jax.value_and_grad(loss_fn)(params)
+            params, opt_state, _ = opt.update(grads, opt_state, params)
+            return params, opt_state, loss
+
+        for ep in range(epochs):
+            ek = jax.random.fold_in(key, phase_i * 1000 + ep)
+            for xb, yb in _batches(xtr, ytr, cfg.batch, ek):
+                params, opt_state, loss = step(
+                    params, opt_state, jnp.asarray(xb), jnp.asarray(yb))
+        acc = accuracy(net, params, xte, yte)
+        results.append({"phase": phase_i, "quant": dataclasses.asdict(qcfg),
+                        "test_acc": acc})
+        if verbose:
+            print(f"QAT phase {phase_i}: test acc {acc:.4f}", flush=True)
+    return params, results

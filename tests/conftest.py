@@ -1,0 +1,11 @@
+# NOTE: do NOT set --xla_force_host_platform_device_count here — smoke
+# tests and benches must see the single real CPU device; only the dry-run
+# (repro.launch.dryrun) and explicit subprocess tests use 512/8 devices.
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

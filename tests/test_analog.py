@@ -1,0 +1,132 @@
+"""Mixed-signal verification (paper Fig. 3/4): the behavioral
+switched-capacitor circuit must reproduce the hardware-constrained software
+model bit-exactly (open loop), and degrade gracefully with mismatch."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import quant
+from repro.core.analog import (AnalogConfig, adc_transfer_closed_form,
+                               analog_forward, charge_sharing_mvm,
+                               energy_per_step, export_layer, make_mismatch,
+                               sar_adc)
+from repro.core.mingru import MinimalistNetwork
+
+
+def _net_and_traces(seed, dims=(4, 8, 8, 5), T=25, B=3):
+    qcfg = quant.QuantConfig.hardware()
+    net = MinimalistNetwork(dims, qcfg=qcfg)
+    key = jax.random.PRNGKey(seed)
+    params = net.init(key)
+    x = (jax.random.uniform(jax.random.fold_in(key, 9), (B, T, dims[0]))
+         > 0.5).astype(jnp.float32)
+    logits, sw = net(params, x, collect_traces=True)
+    return net, params, x, logits, sw
+
+
+@pytest.mark.parametrize("seed", [0, 7, 42])
+def test_open_loop_bit_exact(seed):
+    net, params, x, logits, sw = _net_and_traces(seed)
+    acfg = AnalogConfig()
+    images = [export_layer(params[b.name], acfg) for b in net.blocks]
+    forced = [np.asarray(sw[b.name]["out"]) for b in net.blocks[:-1]]
+    readout, an = analog_forward(images, x, acfg, forced_inputs=forced)
+    for li, b in enumerate(net.blocks):
+        # z codes: exactly the same 6 b grid values
+        np.testing.assert_array_equal(np.asarray(sw[b.name]["z"]),
+                                      np.asarray(an[li]["z"]),
+                                      err_msg=f"z mismatch layer {li}")
+        # analog h̃ / h traces match to float precision (volts roundtrip)
+        for k in ("htilde", "h"):
+            np.testing.assert_allclose(np.asarray(an[li][k]),
+                                       np.asarray(sw[b.name][k]),
+                                       atol=2e-4,
+                                       err_msg=f"{k} layer {li}")
+        if li < len(net.blocks) - 1:
+            h_sw = np.asarray(sw[b.name]["h"])
+            flips = (np.asarray(sw[b.name]["out"]) != np.asarray(an[li]["out"]))
+            # comparator may flip only where h sits exactly at threshold
+            assert not (flips & (np.abs(h_sw) > 1e-4)).any()
+    np.testing.assert_allclose(np.asarray(readout), np.asarray(logits),
+                               atol=2e-4)
+
+
+def test_closed_loop_matches_mostly():
+    """End-to-end (Fig. 4 regime): binary streams may diverge at threshold
+    ties, but the bulk of the activity must agree."""
+    net, params, x, logits, sw = _net_and_traces(3, T=30)
+    acfg = AnalogConfig()
+    images = [export_layer(params[b.name], acfg) for b in net.blocks]
+    _, an = analog_forward(images, x, acfg)
+    agree = np.mean([
+        (np.asarray(sw[b.name]["z"]) == np.asarray(an[li]["z"])).mean()
+        for li, b in enumerate(net.blocks)])
+    assert agree > 0.9
+
+
+def test_sar_adc_equals_closed_form():
+    acfg = AnalogConfig()
+    lsb = 0.0031
+    v = jnp.linspace(0.1, 0.7, 4001)
+    for off in (-20, -3, 0, 5, 17):
+        a = np.asarray(sar_adc(v, acfg, lsb_volts=lsb, offset_code=off))
+        b = np.asarray(adc_transfer_closed_form(v, acfg, lsb_volts=lsb,
+                                                offset_code=off))
+        assert (a == b).mean() > 0.999  # float ties at code edges only
+
+
+def test_adc_slope_and_offset_mechanisms():
+    """Fig. 3C: larger connected-IMC ratio (smaller lsb) -> steeper
+    transfer; DAC preset shifts the transfer laterally."""
+    acfg = AnalogConfig()
+    v = jnp.linspace(0.2, 0.6, 2001)
+    steep = np.asarray(sar_adc(v, acfg, lsb_volts=0.002))
+    shallow = np.asarray(sar_adc(v, acfg, lsb_volts=0.008))
+    # count live-region codes: steeper transfer saturates over fewer volts
+    assert (steep > 0).argmax() > (shallow > 0).argmax()
+    span = lambda c: (c < 63).sum() - (c == 0).sum()
+    assert span(steep) < span(shallow)
+    off = np.asarray(sar_adc(v, acfg, lsb_volts=0.004, offset_code=10))
+    base = np.asarray(sar_adc(v, acfg, lsb_volts=0.004))
+    live = (base > 0) & (base < 63) & (off > 0) & (off < 63)
+    assert live.any()
+    shift = off.astype(int)[live] - base.astype(int)[live]
+    # DAC preset = exact code shift (± float ties at code boundaries)
+    assert np.isin(shift, (9, 10, 11)).all()
+    assert (shift == 10).mean() > 0.9
+
+def test_charge_sharing_with_mismatch_stays_close():
+    acfg = AnalogConfig(mismatch_sigma=0.01)
+    key = jax.random.PRNGKey(0)
+    codes = jax.random.randint(key, (32, 16), 0, 4)
+    x = (jax.random.uniform(jax.random.fold_in(key, 1), (4, 32)) > 0.5
+         ).astype(jnp.float32)
+    caps = 1.0 + acfg.mismatch_sigma * jax.random.normal(key, (33, 16))
+    v_ideal = charge_sharing_mvm(x, codes, jnp.zeros(16), acfg)
+    v_mm = charge_sharing_mvm(x, codes, jnp.zeros(16), acfg, caps=caps)
+    err = np.abs(np.asarray(v_mm - v_ideal))
+    assert err.max() < 0.01  # ~1% caps -> millivolt-scale error
+    assert err.max() > 0.0   # but not identical
+
+
+def test_closed_loop_with_mismatch_and_noise_runs():
+    net, params, x, logits, sw = _net_and_traces(1, T=10)
+    acfg = AnalogConfig(mismatch_sigma=0.005, comparator_noise_v=0.001)
+    images = [export_layer(params[b.name], acfg) for b in net.blocks]
+    mm = make_mismatch(jax.random.PRNGKey(5), images, acfg)
+    readout, an = analog_forward(images, x, acfg, mismatch=mm,
+                                 key=jax.random.PRNGKey(6))
+    assert np.isfinite(np.asarray(readout)).all()
+
+
+def test_energy_model_reproduces_paper_bound():
+    """Paper §4.2: 4 cores × 64×64, worst case z=1 -> ≤ 169 pJ/step."""
+    e = energy_per_step(rows=64, cols=64, n_cores=4, z_mean=1.0)
+    assert e["total_pJ"] <= 169.0
+    assert e["total_pJ"] > 50.0   # same order as the paper's estimate
+    # energy scales with activity (z) and with array size
+    e0 = energy_per_step(rows=64, cols=64, n_cores=4, z_mean=0.0)
+    assert e0["total_pJ"] < e["total_pJ"]
+    e8 = energy_per_step(rows=128, cols=64, n_cores=4, z_mean=1.0)
+    np.testing.assert_allclose(e8["total_pJ"] / e["total_pJ"], 2.0, rtol=0.01)

@@ -1,0 +1,87 @@
+"""Pallas flash-attention kernel vs naive oracle: shape/dtype sweeps,
+GQA index-map correctness, causal + sliding-window masks, gradients."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import ops, ref
+
+KEY = jax.random.PRNGKey(3)
+
+
+def _inputs(B, H, KV, S, D, dtype=jnp.float32, k=0):
+    kk = jax.random.fold_in(KEY, k)
+    q = (jax.random.normal(jax.random.fold_in(kk, 1), (B, H, S, D)) * 0.5
+         ).astype(dtype)
+    kx = (jax.random.normal(jax.random.fold_in(kk, 2), (B, KV, S, D)) * 0.5
+          ).astype(dtype)
+    v = jax.random.normal(jax.random.fold_in(kk, 3), (B, KV, S, D)
+                          ).astype(dtype)
+    return q, kx, v
+
+
+@pytest.mark.parametrize("B,H,KV,S,D", [
+    (1, 1, 1, 8, 8), (1, 2, 2, 64, 16), (2, 4, 2, 128, 32),
+    (1, 6, 2, 96, 64), (1, 8, 1, 256, 16),
+])
+def test_matches_reference(B, H, KV, S, D):
+    q, k, v = _inputs(B, H, KV, S, D, k=S + H)
+    G = H // KV
+    want = ref.mha_ref(q, jnp.repeat(k, G, 1), jnp.repeat(v, G, 1))
+    got = ops.flash_attention(q, k, v, True, None, "pallas")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 2e-5),
+                                       (jnp.bfloat16, 3e-2)])
+def test_dtypes(dtype, tol):
+    q, k, v = _inputs(1, 2, 2, 64, 32, dtype=dtype, k=7)
+    want = ref.mha_ref(q, k, v)
+    got = ops.flash_attention(q, k, v, True, None, "pallas")
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("window", [8, 16, 64])
+def test_sliding_window(window):
+    q, k, v = _inputs(1, 2, 1, 128, 16, k=window)
+    want = ref.mha_ref(q, jnp.repeat(k, 2, 1), jnp.repeat(v, 2, 1),
+                       window=window)
+    got = ops.flash_attention(q, k, v, True, window, "pallas")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_non_causal():
+    q, k, v = _inputs(1, 2, 2, 64, 16, k=11)
+    want = ref.mha_ref(q, k, v, causal=False)
+    got = ops.flash_attention(q, k, v, False, None, "pallas")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+@pytest.mark.parametrize("B,H,KV,S,D", [(1, 4, 2, 64, 16), (2, 2, 1, 96, 32)])
+def test_gradients_match_reference(B, H, KV, S, D):
+    q, k, v = _inputs(B, H, KV, S, D, k=S)
+
+    def loss(q, k, v, backend):
+        out = ops.flash_attention(q, k, v, True, None, backend)
+        return jnp.sum(jnp.sin(out) * jnp.cos(jnp.arange(D)))
+
+    want = jax.grad(loss, (0, 1, 2))(q, k, v, "xla")
+    got = jax.grad(loss, (0, 1, 2))(q, k, v, "pallas")
+    for w, g in zip(want, got):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   atol=5e-5, rtol=5e-4)
+
+
+def test_cost_model_sane():
+    f_tr, b_tr = ops.cost_model(8, 16, 4, 4096, 128, train=True)
+    f_inf, b_inf = ops.cost_model(8, 16, 4, 4096, 128, train=False)
+    assert f_tr > f_inf and b_tr > b_inf
+    # memory is O(S·D), not O(S²)
+    assert b_inf < 8 * 16 * 4096 * 4096
+    fw, _ = ops.cost_model(8, 16, 4, 4096, 128, train=False, window=512)
+    assert fw < f_inf  # windowing cuts flops

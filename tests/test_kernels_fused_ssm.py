@@ -1,0 +1,82 @@
+"""Pallas fused selective-scan kernel vs materializing oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.fused_ssm import ops, ref
+
+KEY = jax.random.PRNGKey(4)
+
+
+def _inputs(B, T, di, n, k=0):
+    kk = jax.random.fold_in(KEY, k)
+    dt = jax.nn.softplus(
+        jax.random.normal(jax.random.fold_in(kk, 1), (B, T, di))) * 0.2
+    x = jax.random.normal(jax.random.fold_in(kk, 2), (B, T, di))
+    Bm = jax.random.normal(jax.random.fold_in(kk, 3), (B, T, n)) * 0.5
+    Cm = jax.random.normal(jax.random.fold_in(kk, 4), (B, T, n)) * 0.5
+    A = -jnp.exp(jax.random.normal(jax.random.fold_in(kk, 5), (di, n)) * 0.3)
+    return dt, x, Bm, Cm, A
+
+
+@pytest.mark.parametrize("B,T,di,n", [
+    (1, 4, 8, 2), (2, 64, 128, 16), (1, 96, 32, 8), (2, 128, 256, 4),
+])
+def test_matches_reference(B, T, di, n):
+    args = _inputs(B, T, di, n, k=T + di)
+    want = ref.selective_scan_ref(*args)
+    got = ops.selective_scan(*args, "pallas")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("B,T,di,n", [(1, 32, 64, 4), (2, 64, 32, 8)])
+def test_gradients_match_reference(B, T, di, n):
+    args = _inputs(B, T, di, n, k=T * di)
+
+    def loss(dt, x, Bm, Cm, A, backend):
+        y = ops.selective_scan(dt, x, Bm, Cm, A, backend)
+        return jnp.sum(jnp.sin(y))
+
+    want = jax.grad(loss, (0, 1, 2, 3, 4))(*args, "xla")
+    got = jax.grad(loss, (0, 1, 2, 3, 4))(*args, "pallas")
+    for w, g in zip(want, got):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   atol=5e-5, rtol=5e-4)
+
+
+def test_decay_contracts_state():
+    """Strongly negative A ⇒ h forgets: y depends mostly on recent inputs."""
+    B, T, di, n = 1, 32, 16, 4
+    dt, x, Bm, Cm, A = _inputs(B, T, di, n, k=1)
+    A_fast = A * 50.0
+    y1 = ops.selective_scan(dt, x, Bm, Cm, A_fast, "xla")
+    x2 = x.at[:, :T // 2].set(0.0)  # zero the distant past
+    y2 = ops.selective_scan(dt, x2, Bm, Cm, A_fast, "xla")
+    np.testing.assert_allclose(np.asarray(y1[:, -1]), np.asarray(y2[:, -1]),
+                               atol=1e-4)
+
+
+def test_mamba_block_fused_equals_xla():
+    """MambaBlock end-to-end: ssm_impl='fused' == 'xla'."""
+    import dataclasses
+    from repro.configs import get_config
+    from repro.models.mamba import MambaBlock
+    cfg = get_config("falcon-mamba-7b-smoke")
+    blk_x = MambaBlock(cfg)
+    blk_f = MambaBlock(dataclasses.replace(cfg, ssm_impl="fused"))
+    params = blk_x.init(jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model)) * 0.3
+    yx = blk_x(params, x)
+    yf = blk_f(params, x)
+    np.testing.assert_allclose(np.asarray(yf), np.asarray(yx),
+                               atol=2e-4, rtol=2e-3)
+
+
+def test_cost_model_beats_materialization():
+    f, b = ops.cost_model(16, 4096, 8192, 16, train=True)
+    materialized = 3 * 16 * 4096 * 8192 * 16 * 4  # a, b, h in fp32
+    # the kernel's floor is reading its O(B·T·di) inputs — still ≥10× less
+    # HBM traffic than materializing the (B,T,di,n) tensors
+    assert b < materialized / 10

@@ -1,0 +1,82 @@
+"""Pallas imc_mvm kernel vs charge-sharing oracle."""
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.kernels.imc_mvm import ops, ref
+
+KEY = jax.random.PRNGKey(1)
+
+
+def _inputs(M, K, N, k=0, per_col_scale=True):
+    kk = jax.random.fold_in(KEY, k)
+    x = (jax.random.uniform(jax.random.fold_in(kk, 0), (M, K)) > 0.5
+         ).astype(jnp.float32)
+    codes = jax.random.randint(jax.random.fold_in(kk, 1), (K, N), 0, 4
+                               ).astype(jnp.int8)
+    scale = (jax.random.uniform(jax.random.fold_in(kk, 2), (N,)) * 0.3 + 0.01
+             if per_col_scale else jnp.float32(0.1))
+    return x, codes, scale
+
+
+@pytest.mark.parametrize("M,K,N", [
+    (1, 1, 1), (3, 5, 7), (8, 128, 128), (17, 70, 50),
+    (128, 256, 384), (5, 300, 129),
+])
+def test_pallas_matches_oracle(M, K, N):
+    x, codes, scale = _inputs(M, K, N, k=M * 1000 + N)
+    want = ops.imc_mvm(x, codes, scale, backend="xla")
+    got = ops.imc_mvm(x, codes, scale, backend="pallas")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("bm,bn,bk", [(8, 128, 128), (128, 256, 128)])
+def test_pallas_blocking_invariance(bm, bn, bk):
+    x, codes, scale = _inputs(33, 200, 140, k=9)
+    want = ops.imc_mvm(x, codes, scale, backend="xla")
+    got = ops.imc_mvm(x, codes, scale, backend="pallas",
+                      bm=bm, bn=bn, bk=bk)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+def test_batched_leading_dims():
+    x, codes, scale = _inputs(12, 30, 20, k=3)
+    x3 = x.reshape(3, 4, 30)
+    got = ops.imc_mvm(x3, codes, scale, backend="pallas")
+    want = ops.imc_mvm(x, codes, scale, backend="xla").reshape(3, 4, 20)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 16), st.integers(1, 64), st.integers(1, 32),
+       st.integers(0, 2 ** 31 - 1))
+def test_prop_charge_sharing_is_mean(M, K, N, seed):
+    """Eq. 6: the settled voltage is the *mean* of selected weight levels —
+    all-ones activations give exactly mean_k(levels[codes])·Δ."""
+    k = jax.random.PRNGKey(seed)
+    codes = jax.random.randint(k, (K, N), 0, 4).astype(jnp.int8)
+    x = jnp.ones((M, K))
+    out = ops.imc_mvm(x, codes, 0.2, backend="xla")
+    want = ((np.asarray(codes, np.float32) - 1.5) * 0.2).mean(0)
+    np.testing.assert_allclose(np.asarray(out)[0], want, atol=1e-6)
+    # zero activations -> exactly V0 (zero in weight units)
+    out0 = ops.imc_mvm(jnp.zeros((M, K)), codes, 0.2, backend="xla")
+    assert float(np.abs(np.asarray(out0)).max()) == 0.0
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 8), st.integers(2, 32), st.integers(1, 16),
+       st.integers(0, 2 ** 31 - 1))
+def test_prop_linearity_in_activations(M, K, N, seed):
+    """Binary superposition: y(x1 ∨ x2) = y(x1) + y(x2) for disjoint x."""
+    k = jax.random.PRNGKey(seed)
+    codes = jax.random.randint(k, (K, N), 0, 4).astype(jnp.int8)
+    mask = jax.random.uniform(jax.random.fold_in(k, 1), (M, K)) > 0.5
+    x1 = mask.astype(jnp.float32)
+    x2 = (~mask).astype(jnp.float32)
+    y = lambda x: np.asarray(ops.imc_mvm(x, codes, 0.1, backend="xla"))
+    np.testing.assert_allclose(y(x1) + y(x2), y(jnp.ones((M, K))), atol=1e-5)

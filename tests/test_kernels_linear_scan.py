@@ -1,0 +1,121 @@
+"""Pallas linear_scan kernel vs pure-jnp oracle: shape/dtype sweeps,
+gradients, and hypothesis property tests on the recurrence algebra."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.kernels.linear_scan import ops, ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _rand(shape, k, lo=-1.0, hi=1.0, dtype=jnp.float32):
+    return jax.random.uniform(jax.random.fold_in(KEY, k), shape,
+                              jnp.float32, lo, hi).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# shape / dtype sweep: pallas (interpret) vs sequential oracle
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("B,T,D", [
+    (1, 1, 1), (2, 7, 3), (1, 128, 128), (3, 33, 257),
+    (2, 300, 64), (4, 16, 512),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_pallas_matches_oracle(B, T, D, dtype):
+    a = _rand((B, T, D), 1, 0.0, 1.0, dtype)
+    b = _rand((B, T, D), 2, dtype=dtype)
+    h0 = _rand((B, D), 3, dtype=dtype)
+    want = ref.linear_scan_sequential(a, b, h0)
+    got = ops.linear_scan(a, b, h0, "pallas", 16, 128)
+    tol = 1e-6 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("tblk,dblk", [(8, 128), (64, 128), (256, 256)])
+def test_pallas_blocking_invariance(tblk, dblk):
+    B, T, D = 2, 100, 200
+    a = _rand((B, T, D), 4, 0.0, 1.0)
+    b = _rand((B, T, D), 5)
+    h0 = _rand((B, D), 6)
+    want = ref.linear_scan_sequential(a, b, h0)
+    got = ops.linear_scan(a, b, h0, "pallas", tblk, dblk)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas", "seq"])
+def test_gradients_match_reference(backend):
+    B, T, D = 2, 23, 17
+    a = _rand((B, T, D), 7, 0.1, 0.9)
+    b = _rand((B, T, D), 8)
+    h0 = _rand((B, D), 9)
+
+    def loss(a, b, h0, impl):
+        if impl == "ref":
+            h = ref.linear_scan_sequential(a, b, h0)
+        else:
+            h = ops.linear_scan(a, b, h0, impl, 8, 128)
+        return jnp.sum(jnp.tanh(h) * jnp.arange(T)[None, :, None])
+
+    want = jax.grad(loss, (0, 1, 2))(a, b, h0, "ref")
+    got = jax.grad(loss, (0, 1, 2))(a, b, h0, backend)
+    for w, g in zip(want, got):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   atol=2e-5, rtol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# hypothesis properties
+# ---------------------------------------------------------------------------
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 4), st.integers(1, 40), st.integers(1, 20),
+       st.integers(0, 2 ** 31 - 1))
+def test_prop_associative_equals_sequential(B, T, D, seed):
+    k = jax.random.PRNGKey(seed)
+    a = jax.random.uniform(jax.random.fold_in(k, 0), (B, T, D))
+    b = jax.random.normal(jax.random.fold_in(k, 1), (B, T, D))
+    h0 = jax.random.normal(jax.random.fold_in(k, 2), (B, D))
+    hs = ref.linear_scan_sequential(a, b, h0)
+    ha = ref.linear_scan_associative(a, b, h0)
+    np.testing.assert_allclose(np.asarray(ha), np.asarray(hs),
+                               atol=1e-4, rtol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 30), st.integers(1, 8), st.integers(0, 2 ** 31 - 1))
+def test_prop_scan_composition(T, D, seed):
+    """Scanning [0,T) equals scanning [0,s) then [s,T) from the carry —
+    the chunking invariant the Pallas kernel's VMEM carry relies on."""
+    k = jax.random.PRNGKey(seed)
+    s = T // 2
+    a = jax.random.uniform(jax.random.fold_in(k, 0), (1, T, D))
+    b = jax.random.normal(jax.random.fold_in(k, 1), (1, T, D))
+    h0 = jax.random.normal(jax.random.fold_in(k, 2), (1, D))
+    full = ref.linear_scan_sequential(a, b, h0)
+    h1 = ref.linear_scan_sequential(a[:, :s], b[:, :s], h0)
+    carry = h1[:, -1] if s > 0 else h0
+    h2 = ref.linear_scan_sequential(a[:, s:], b[:, s:], carry)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([h1, h2], 1)),
+                               np.asarray(full), atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 30), st.integers(1, 8), st.integers(0, 2 ** 31 - 1))
+def test_prop_mingru_convexity(T, D, seed):
+    """minGRU state is a convex combination: with h̃, h0 in [lo, hi], every
+    h_t stays in [lo, hi] (the capacitor bank cannot leave the rails)."""
+    k = jax.random.PRNGKey(seed)
+    z = jax.random.uniform(jax.random.fold_in(k, 0), (1, T, D))
+    htilde = jax.random.uniform(jax.random.fold_in(k, 1), (1, T, D),
+                                minval=-2.0, maxval=3.0)
+    h0 = jax.random.uniform(jax.random.fold_in(k, 2), (1, D),
+                            minval=-2.0, maxval=3.0)
+    h = ops.mingru_scan(z, htilde, h0, backend="seq")
+    assert float(h.max()) <= 3.0 + 1e-5
+    assert float(h.min()) >= -2.0 - 1e-5

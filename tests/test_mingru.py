@@ -1,0 +1,105 @@
+"""minGRU / MINIMALIST network behaviour (paper §2)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import quant
+from repro.core.mingru import MinGRUBlock, MinimalistNetwork
+
+
+@pytest.mark.parametrize("mode", ["float", "quantized", "hardware"])
+def test_parallel_scan_equals_stepwise(mode):
+    """Training-time parallel evaluation == recurrent inference, for all
+    three Fig.-5 model variants."""
+    qcfg = getattr(quant.QuantConfig,
+                   {"float": "float_baseline", "quantized": "quantized",
+                    "hardware": "hardware"}[mode])()
+    net = MinimalistNetwork((3, 6, 4), qcfg=qcfg)
+    key = jax.random.PRNGKey(0)
+    params = net.init(key)
+    B, T = 2, 12
+    x = (jax.random.uniform(jax.random.fold_in(key, 5), (B, T, 3)) > 0.5
+         ).astype(jnp.float32)
+    logits = net(params, x)
+
+    states = net.initial_state(B)
+    out = None
+    for t in range(T):
+        out, states = net.step(params, x[:, t, :], states)
+    np.testing.assert_allclose(np.asarray(states[-1]), np.asarray(logits),
+                               atol=1e-5)
+
+
+def test_block_gate_zero_keeps_state():
+    """z == 0 ⇒ h unchanged (the 'untouched capacitor bank' case)."""
+    blk = MinGRUBlock(4, 4)
+    params = blk.init(jax.random.PRNGKey(0))
+    params = dict(params, bz=jnp.full((4,), -1e9))  # σ(−inf) = 0
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 9, 4))
+    h0 = jnp.ones((1, 4))
+    _, h = blk(params, x, h0=h0)
+    np.testing.assert_allclose(np.asarray(h), 1.0, atol=1e-6)
+
+
+def test_block_gate_one_overwrites_state():
+    """z == 1 ⇒ h = h̃ (full capacitor swap)."""
+    blk = MinGRUBlock(4, 4)
+    params = blk.init(jax.random.PRNGKey(0))
+    params = dict(params, bz=jnp.full((4,), 1e9))
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 9, 4))
+    _, h = blk(params, x, h0=jnp.zeros((1, 4)))
+    htilde = x @ params["wh"] + params["bh"]
+    np.testing.assert_allclose(np.asarray(h), np.asarray(htilde), atol=1e-5)
+
+
+def test_hardware_mode_is_trainable():
+    """Gradients flow through all STE quantizers (the QAT requirement)."""
+    qcfg = quant.QuantConfig.hardware()
+    net = MinimalistNetwork((2, 8, 3), qcfg=qcfg)
+    key = jax.random.PRNGKey(0)
+    params = net.init(key)
+    x = (jax.random.uniform(key, (4, 20, 2)) > 0.5).astype(jnp.float32)
+    y = jnp.array([0, 1, 2, 0])
+
+    def loss(p):
+        logits = net(p, x)
+        return -jnp.take_along_axis(
+            jax.nn.log_softmax(logits), y[:, None], -1).mean()
+
+    g = jax.grad(loss)(params)
+    leaves = jax.tree_util.tree_leaves(g)
+    assert all(np.isfinite(np.asarray(l)).all() for l in leaves)
+    total = sum(float(jnp.abs(l).sum()) for l in leaves)
+    assert total > 0.0
+
+
+def test_binary_outputs_are_binary():
+    net = MinimalistNetwork((2, 5, 3), qcfg=quant.QuantConfig.hardware())
+    params = net.init(jax.random.PRNGKey(0))
+    x = (jax.random.uniform(jax.random.PRNGKey(1), (2, 7, 2)) > 0.5
+         ).astype(jnp.float32)
+    _, tr = net(params, x, collect_traces=True)
+    out0 = np.asarray(tr["block0"]["out"])
+    assert set(np.unique(out0)).issubset({0.0, 1.0})
+    z = np.asarray(tr["block0"]["z"])
+    codes = z * quant.GATE_UNITS
+    np.testing.assert_allclose(codes, np.round(codes), atol=1e-4)
+
+
+def test_paper_network_shape():
+    """The paper's sMNIST stack 1-64-64-64-64-10."""
+    from repro.configs import MINIMALIST_SMNIST_DIMS
+    net = MinimalistNetwork(MINIMALIST_SMNIST_DIMS,
+                            qcfg=quant.QuantConfig.hardware())
+    params = net.init(jax.random.PRNGKey(0))
+    x = (jax.random.uniform(jax.random.PRNGKey(1), (2, 50, 1)) > 0.5
+         ).astype(jnp.float32)
+    logits = net(params, x)
+    assert logits.shape == (2, 10)
+    n_params = sum(int(np.prod(p.shape))
+                   for p in jax.tree_util.tree_leaves(params))
+    # 2·(in·out + out) per block
+    want = sum(2 * (i * o + o) for i, o in
+               zip(MINIMALIST_SMNIST_DIMS[:-1], MINIMALIST_SMNIST_DIMS[1:]))
+    assert n_params == want

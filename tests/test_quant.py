@@ -1,0 +1,99 @@
+"""Quantizer properties (paper §2) — hypothesis-driven."""
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from repro.core import quant
+
+floats = st.floats(-10, 10, allow_nan=False, width=32)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(floats, min_size=1, max_size=64))
+def test_prop_weights_on_4_levels(ws):
+    w = jnp.asarray(ws, jnp.float32)
+    wq, codes = quant.quantize_weights_2b(w)
+    scale = np.asarray(quant.weight_scale(w))
+    lv = np.asarray(quant.W2B_LEVELS) * scale
+    # every quantized weight is one of the 4 levels
+    d = np.abs(np.asarray(wq)[:, None] - lv[None, :]).min(-1)
+    assert d.max() < 1e-5
+    assert int(np.asarray(codes).min()) >= 0
+    assert int(np.asarray(codes).max()) <= 3
+    # nearest-level projection (up to float ties at decision boundaries)
+    best = np.abs(np.asarray(w)[:, None] - lv[None]).min(-1)
+    got = np.abs(np.asarray(wq) - np.asarray(w))
+    assert (got <= best + 1e-5 * (1 + np.abs(np.asarray(w)))).all()
+
+
+def test_weight_ste_gradient_is_identity():
+    w = jnp.asarray([-0.9, -0.2, 0.05, 0.4, 1.4])
+    g = jax.grad(lambda w: jnp.sum(
+        quant.quantize_weights_2b(w, 1.0)[0] * jnp.arange(5.0)))(w)
+    np.testing.assert_allclose(np.asarray(g), np.arange(5.0), atol=1e-6)
+
+
+@settings(max_examples=50, deadline=None)
+@given(floats)
+def test_prop_hard_sigmoid(x):
+    y = float(quant.hard_sigmoid(jnp.float32(x)))
+    assert 0.0 <= y <= 1.0
+    if x <= -3:
+        assert y == 0.0
+    if x >= 3:
+        assert y == 1.0
+    if -3 < x < 3:
+        np.testing.assert_allclose(y, x / 6 + 0.5, atol=1e-6)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.floats(0, 1, allow_nan=False, width=32))
+def test_prop_z_quant_on_capacitor_grid(z):
+    zq = float(quant.quantize_unit_6b(jnp.float32(z)))
+    k = zq * quant.GATE_UNITS
+    np.testing.assert_allclose(k, round(k), atol=1e-4)
+    assert 0.0 <= zq <= 1.0
+    assert abs(zq - z) <= 1.0 / quant.GATE_UNITS + 1e-6
+
+
+def test_z_quant_endpoints():
+    assert float(quant.quantize_unit_6b(jnp.float32(0.0))) == 0.0
+    assert float(quant.quantize_unit_6b(jnp.float32(1.0))) == 1.0
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(floats, min_size=1, max_size=32))
+def test_prop_bias_6b(bs):
+    b = jnp.asarray(bs, jnp.float32)
+    bq = np.asarray(quant.quantize_bias_6b(b))
+    scale = max(np.abs(np.asarray(b)).max(), 1e-8) / 31.0
+    codes = bq / scale
+    np.testing.assert_allclose(codes, np.round(codes), atol=1e-3)
+    assert np.abs(codes).max() <= 31.01
+
+
+def test_gate_bias_adc_grid():
+    b = jnp.linspace(-5, 5, 101)
+    bq = np.asarray(quant.quantize_gate_bias_adc(b))
+    codes = bq / quant.ADC_GATE_BIAS_LSB
+    np.testing.assert_allclose(codes, np.round(codes), atol=1e-4)
+    assert codes.min() >= -32 and codes.max() <= 31
+
+
+def test_heaviside_forward_exact_and_surrogate_grad():
+    x = jnp.asarray([-5.0, -0.5, 0.0, 0.5, 5.0])
+    y = quant.heaviside_ste(x)
+    np.testing.assert_array_equal(np.asarray(y), [0, 0, 0, 1, 1])
+    g = jax.grad(lambda x: jnp.sum(quant.heaviside_ste(x)))(x)
+    np.testing.assert_allclose(np.asarray(g),
+                               [0, 1 / 6, 1 / 6, 1 / 6, 0], atol=1e-6)
+
+
+def test_qat_phase_ladder_is_monotone_in_constraints():
+    p = quant.QAT_PHASES
+    assert not p[0].quantize_weights and not p[0].binary_output
+    assert p[1].quantize_weights and not p[1].binary_output
+    assert p[2].binary_output and not p[2].hard_sigmoid_gate
+    assert p[3] == quant.QuantConfig.hardware()
