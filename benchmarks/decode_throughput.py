@@ -1,0 +1,207 @@
+"""Continuous-batching engine vs the static-batch serving baseline.
+
+Workload: 2x`batch` requests with mixed prompt/generation lengths.  The
+baseline (launch.serve.generate semantics) runs them as two padded static
+waves — every row is locked for (max prompt + max gen) steps.  The engine
+admits into `batch` slots, retires sequences the step they finish, and
+backfills from the queue, so the same slot batch emits more useful tokens
+per wall-second.
+
+Reported per batch size (default 1 / 64 / 256):
+  * useful generated tokens/s, end-to-end (prefill + decode, post-warmup)
+  * p50 / p99 per-token decode latency (one slot-batch step = one token
+    for every active request)
+and for the prefill comparison at prompt length >= 256:
+  * chunked prefill (ONE linear_scan per chunk) vs the per-token loop.
+
+    PYTHONPATH=src python -m benchmarks.decode_throughput \
+        [--arch minimalist-lm-360m] [--batches 1,64,256] [--gen 16]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs import get_config
+from repro.models import build_model
+from repro.serve import DecoderStepModel, ServeEngine
+from repro.serve.prefill import chunked_prefill
+
+
+def _workload(rng, cfg, n, pmean, gmean, bucket):
+    """Mixed lengths, bucketed to ``bucket`` so prefill compiles O(1) shapes."""
+    plens = [max(bucket, bucket * int(rng.integers(1, max(2, pmean // bucket) + 1)))
+             for _ in range(n)]
+    glens = [int(rng.integers(max(1, gmean // 2), gmean + 1)) for _ in range(n)]
+    prompts = [rng.integers(0, cfg.vocab, size=p, dtype=np.int64)
+               for p in plens]
+    return prompts, glens
+
+
+def _baseline_step_fn(model):
+    @jax.jit
+    def step(params, cache, tok, pos):
+        logits, cache = model.decode_step(params, tok, cache, pos)
+        return (jnp.argmax(logits[:, -1, :], -1).astype(jnp.int32),
+                cache)
+    return step
+
+
+def _run_baseline(model, params, prompts, glens, max_len, batch, step):
+    """Static waves of `batch` padded requests; per-step latencies out."""
+    lat = []
+    done_tokens = 0
+    t0 = time.perf_counter()
+    for w in range(0, len(prompts), batch):
+        wave_p = prompts[w:w + batch]
+        wave_g = glens[w:w + batch]
+        P = max(len(p) for p in wave_p)
+        G = max(wave_g)
+        toks = jnp.asarray(np.stack([np.resize(p, P) for p in wave_p]),
+                           jnp.int32)
+        cache = model.init_cache(len(wave_p), max_len)
+        tok = None
+        for t in range(P):                       # per-token prefill
+            tok, cache = step(params, cache, toks[:, t:t + 1], jnp.int32(t))
+        tok.block_until_ready()
+        for t in range(G):                       # lock-step decode
+            s0 = time.perf_counter()
+            tok, cache = step(params, cache, tok[:, None], jnp.int32(P + t))
+            tok.block_until_ready()
+            lat.append(time.perf_counter() - s0)
+        done_tokens += sum(wave_g)               # useful tokens only
+    return done_tokens / (time.perf_counter() - t0), np.array(lat)
+
+
+def _warm_engine(sm, params, batch, plens):
+    """Compile every shape the timed run can hit: admission waves are
+    padded to powers of two per prompt-length bucket, plus the decode
+    step at the slot-batch shape (writes use all-OOB slots: dropped)."""
+    state = sm.init_state(batch)
+    cap = 1 << (max(1, batch) - 1).bit_length()
+    for P in sorted(set(plens)):
+        B = 1
+        while B <= cap:
+            toks = np.zeros((B, P), np.int64)
+            last, carry = sm.prefill(params, toks)
+            sm.write_slots(state, carry, np.full(B, batch, np.int32))
+            np.asarray(sm.emit(last))
+            B *= 2
+    sm.step(params, np.zeros(batch, np.int32), state,
+            np.zeros(batch, np.int32), np.ones(batch, bool))
+
+
+def _run_engine(sm, params, prompts, glens, batch):
+    eng = ServeEngine(sm, params, slots=batch)
+    lat = []
+    t0 = time.perf_counter()
+    for p, g in zip(prompts, glens):
+        eng.submit(p, max_new_tokens=g)
+    while eng.waiting or eng.active.any():
+        eng.admit()                    # keep admission prefill out of the
+        s0 = time.perf_counter()       # per-token decode latency samples
+        eng.step()
+        lat.append(time.perf_counter() - s0)
+    return eng.n_emitted / (time.perf_counter() - t0), np.array(lat), eng
+
+
+def _prefill_compare(model, params, cfg, P, chunk):
+    sm = DecoderStepModel(model, max_len=P + 2, prefill_chunk=chunk)
+    toks = jnp.asarray(
+        np.random.default_rng(3).integers(0, cfg.vocab, size=(1, P)),
+        jnp.int32)
+
+    @jax.jit
+    def step(params, cache, tok, pos):
+        logits, cache = model.decode_step(params, tok, cache, pos)
+        return logits, cache
+
+    def chunked():
+        last, cache = chunked_prefill(sm, params, toks, chunk=chunk)
+        jax.block_until_ready(last)
+
+    def per_token():
+        cache = model.init_cache(1, P + 2)
+        logits = None
+        for t in range(P):
+            logits, cache = step(params, cache, toks[:, t:t + 1],
+                                 jnp.int32(t))
+        jax.block_until_ready(logits)
+
+    out = {}
+    for name, fn in [("chunked", chunked), ("per_token", per_token)]:
+        fn()                                       # compile
+        times = []
+        for _ in range(3):
+            s0 = time.perf_counter()
+            fn()
+            times.append(time.perf_counter() - s0)
+        out[name] = sorted(times)[1]
+    return out
+
+
+def run(arch="minimalist-lm-360m", batches=(1, 64, 256), gen=16,
+        prompt=32, chunk=16, prefill_lens=(256, 512)):
+    cfg = get_config(arch + "-smoke")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(7)
+    rows = []
+
+    for batch in batches:
+        prompts, glens = _workload(rng, cfg, 2 * batch, prompt, gen, chunk)
+        max_len = max(len(p) for p in prompts) + max(glens) + 1
+        step = _baseline_step_fn(model)
+        sm = DecoderStepModel(model, max_len=max_len, prefill_chunk=chunk)
+        # warmup both paths at the timed shapes (compile cost out)
+        _run_baseline(model, params, prompts[:batch], [2] * batch,
+                      max_len, batch, step)
+        _warm_engine(sm, params, batch, [len(p) for p in prompts])
+
+        tps_b, lat_b = _run_baseline(model, params, prompts, glens,
+                                     max_len, batch, step)
+        tps_e, lat_e, eng = _run_engine(sm, params, prompts, glens, batch)
+        for name, tps, lat in [("static_batch", tps_b, lat_b),
+                               ("engine", tps_e, lat_e)]:
+            rows.append({
+                "name": f"decode/{name}/batch{batch}",
+                "us_per_call": f"{np.median(lat)*1e6:.0f}",
+                "derived": f"tok_s={tps:.1f};p50_ms={np.percentile(lat,50)*1e3:.2f};"
+                           f"p99_ms={np.percentile(lat,99)*1e3:.2f}",
+            })
+        rows[-1]["derived"] += f";speedup={tps_e/tps_b:.2f}x;util={eng.utilization:.2f}"
+
+    for P in prefill_lens:
+        t = _prefill_compare(model, params, cfg, P, chunk=min(P, 128))
+        rows.append({
+            "name": f"prefill/P{P}",
+            "us_per_call": f"{t['chunked']*1e6:.0f}",
+            "derived": f"chunked_s={t['chunked']:.4f};"
+                       f"per_token_s={t['per_token']:.4f};"
+                       f"speedup={t['per_token']/t['chunked']:.1f}x",
+        })
+    return emit(rows)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="minimalist-lm-360m")
+    ap.add_argument("--batches", default="1,64,256")
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--prompt", type=int, default=32)
+    ap.add_argument("--chunk", type=int, default=16)
+    ap.add_argument("--prefill-lens", default="256,512")
+    args = ap.parse_args(argv)
+    run(arch=args.arch,
+        batches=tuple(int(b) for b in args.batches.split(",")),
+        gen=args.gen, prompt=args.prompt, chunk=args.chunk,
+        prefill_lens=tuple(int(p) for p in args.prefill_lens.split(",")))
+
+
+if __name__ == "__main__":
+    main()

@@ -104,6 +104,9 @@ class ModelConfig:
     #   ssm_impl: xla | fused (Pallas kernel) | stub
     attention_impl: str = "naive"
     ssm_impl: str = "xla"
+    # linear-scan backend for recurrent mixers (minGRU/Mamba prefill):
+    #   seq | xla | pallas (interpret) | pallas_tpu (compiled)
+    scan_backend: str = "xla"
     # explicit sharding constraints on MoE dispatch buffers (cell B fix)
     moe_constraints: bool = False
 
@@ -180,6 +183,15 @@ class ModelConfig:
         total -= n_moe_layers * e.n_experts * 3 * d * e.d_ff_expert
         total += n_moe_layers * (e.top_k + e.n_shared) * 3 * d * e.d_ff_expert
         return int(total)
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """Continuous-batching serving knobs (consumed by
+    repro.launch.serve.build_engine)."""
+    slots: int = 8            # fixed slot-batch capacity (jit shape)
+    max_len: int = 256        # cache length for attention-bearing stacks
+    prefill_chunk: int = 256  # chunked-prefill chunk size (tokens)
 
 
 # The four assigned input-shape regimes

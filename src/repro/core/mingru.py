@@ -75,13 +75,18 @@ class MinGRUBlock(Module):
         z = quant.gate_fn(cfg)(x @ wz + bz)
         return htilde, z
 
-    def __call__(self, params, x, h0=None):
-        """x: (B, T, in_dim) -> (out (B,T,dim), h (B,T,dim))."""
+    def __call__(self, params, x, h0=None, *, backend=None):
+        """x: (B, T, in_dim) -> (out (B,T,dim), h (B,T,dim)).
+
+        ``backend`` overrides the construction-time scan backend — the
+        serving prefill selects seq/xla/pallas/pallas_tpu per request.
+        """
         B = x.shape[0]
         if h0 is None:
             h0 = jnp.zeros((B, self.dim), x.dtype)
         htilde, z = self.projections(params, x)
-        h = scan_ops.mingru_scan(z, htilde, h0, backend=self.scan_backend)
+        h = scan_ops.mingru_scan(z, htilde, h0,
+                                 backend=backend or self.scan_backend)
         return quant.output_fn(self.qcfg)(h), h
 
     def step(self, params, x_t, h_prev):
@@ -162,4 +167,25 @@ class MinimalistNetwork(Module):
         for b, s in zip(self.blocks, states):
             out, h = b.step(params[b.name], out, s)
             new_states.append(h)
+        return out, new_states
+
+    def prefill(self, params, x, states=None, *, backend=None):
+        """Consume a chunk of frames with an O(1) carry.
+
+        x: (B, T, dims[0]); ``states`` as from :meth:`initial_state` (or a
+        previous prefill/step).  Returns (y (B, T, dims[-1]), new_states)
+        where y is the readout block's output sequence — y[:, -1] equals
+        what :meth:`__call__` returns for the concatenated stream, and
+        new_states is the carry to hand to the decode loop.  One
+        ``linear_scan`` call per block, backend-selectable.
+        """
+        B = x.shape[0]
+        if states is None:
+            states = self.initial_state(B, x.dtype)
+        out = x
+        new_states = []
+        for b, s in zip(self.blocks, states):
+            out, h = b(params[b.name], out, h0=s.astype(out.dtype),
+                       backend=backend)
+            new_states.append(h[:, -1])
         return out, new_states

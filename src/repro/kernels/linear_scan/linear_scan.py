@@ -26,6 +26,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.pallas_compat import CompilerParams
+
 
 def _scan_kernel(h0_ref, a_ref, b_ref, out_ref, carry_ref, *, tblk: int):
     """One (batch, channel-block, time-chunk) grid cell."""
@@ -74,7 +76,7 @@ def linear_scan_pallas(a, b, h0, *, tblk: int = 256, dblk: int = 256,
         out_specs=pl.BlockSpec((1, tblk, dblk), lambda bi, di, ti: (bi, ti, di)),
         out_shape=jax.ShapeDtypeStruct((B, T, D), a.dtype),
         scratch_shapes=[pltpu.VMEM((1, dblk), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -27,6 +27,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.pallas_compat import CompilerParams
+
 GATE_UNITS = 63.0
 
 
@@ -60,6 +62,64 @@ def _kernel(x_ref, ch_ref, cz_ref, bh_ref, bz_ref, h0_ref, y_ref, h_ref,
     h_s[0] = jax.lax.fori_loop(0, tblk, step, h_s[0])
 
 
+def _step_kernel(x_ref, ch_ref, cz_ref, bh_ref, bz_ref, h0_ref, y_ref, h_ref,
+                 *, scale):
+    x = x_ref[...].astype(jnp.float32)                     # (B, K)
+    wh = (ch_ref[...].astype(jnp.float32) - 1.5) * scale   # (K, nblk)
+    wz = (cz_ref[...].astype(jnp.float32) - 1.5) * scale
+    pre_h = jax.lax.dot_general(x, wh, (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32) \
+        + bh_ref[...].astype(jnp.float32)
+    pre_z = jax.lax.dot_general(x, wz, (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32) \
+        + bz_ref[...].astype(jnp.float32)
+    zq = jnp.floor(jnp.clip(pre_z / 6.0 + 0.5, 0.0, 1.0) * GATE_UNITS) \
+        / GATE_UNITS
+    h = zq * pre_h + (1.0 - zq) * h0_ref[...].astype(jnp.float32)
+    h_ref[...] = h.astype(h_ref.dtype)
+    y_ref[...] = (h > 0.0).astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "nblk", "interpret"))
+def minimalist_step_pallas(x, codes_h, codes_z, scale, bh, bz, h_prev, *,
+                           nblk=128, interpret=True):
+    """ONE decode step of the fused core: projection + SAR-ADC gate +
+    capacitor-swap state update + comparator in a single kernel launch —
+    the serving engine's hot path at O(1) state.
+
+    x: (B, K) {0,1}; codes: (K, N) int8; bh/bz: (N,); h_prev: (B, N)
+    -> (y, h) each (B, N).  N % nblk == 0.
+    """
+    B, K = x.shape
+    N = codes_h.shape[1]
+    assert N % nblk == 0, (N, nblk)
+    kern = functools.partial(_step_kernel, scale=float(scale))
+    return pl.pallas_call(
+        kern,
+        grid=(N // nblk,),
+        in_specs=[
+            pl.BlockSpec((B, K), lambda n: (0, 0)),
+            pl.BlockSpec((K, nblk), lambda n: (0, n)),
+            pl.BlockSpec((K, nblk), lambda n: (0, n)),
+            pl.BlockSpec((1, nblk), lambda n: (0, n)),
+            pl.BlockSpec((1, nblk), lambda n: (0, n)),
+            pl.BlockSpec((B, nblk), lambda n: (0, n)),
+        ],
+        out_specs=[
+            pl.BlockSpec((B, nblk), lambda n: (0, n)),
+            pl.BlockSpec((B, nblk), lambda n: (0, n)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, N), x.dtype),
+            jax.ShapeDtypeStruct((B, N), jnp.float32),
+        ],
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel",)),
+        interpret=interpret,
+        name="minimalist_step",
+    )(x, codes_h, codes_z, bh.reshape(1, N), bz.reshape(1, N), h_prev)
+
+
 @functools.partial(jax.jit,
                    static_argnames=("scale", "tblk", "nblk", "interpret"))
 def minimalist_block_pallas(x, codes_h, codes_z, scale, bh, bz, h0, *,
@@ -91,7 +151,7 @@ def minimalist_block_pallas(x, codes_h, codes_z, scale, bh, bz, h0, *,
             jax.ShapeDtypeStruct((B, T, N), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((1, nblk), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
         name="minimalist_block",

@@ -11,12 +11,20 @@ import numpy as np
 
 from repro.core import quant
 from repro.kernels.minimalist_block import ref
-from repro.kernels.minimalist_block.minimalist_block import \
-    minimalist_block_pallas
+from repro.kernels.minimalist_block.minimalist_block import (
+    minimalist_block_pallas, minimalist_step_pallas)
 
 
 def _pad_to(v, m):
     return (v + m - 1) // m * m
+
+
+def _largest_divisor(n, ladder=(128, 64, 32, 16, 8, 4, 2, 1)):
+    """Biggest tile in the ladder dividing n (1 always does)."""
+    for cand in ladder:
+        if n % cand == 0:
+            return cand
+    return n
 
 
 def from_block_params(params):
@@ -44,22 +52,33 @@ def minimalist_block(x, codes_h, codes_z, scale, bh, bz, h0=None, *,
         return ref.minimalist_block_ref(x, jnp.asarray(codes_h),
                                         jnp.asarray(codes_z), scale,
                                         jnp.asarray(bh), jnp.asarray(bz), h0)
-    tblk = min(128, T) if T % min(128, T) == 0 else 1
-    for cand in (128, 64, 32, 16, 8, 4, 2, 1):
-        if T % cand == 0:
-            tblk = cand
-            break
-    nblk = N
-    for cand in (128, 64, 32, 16, 8, 4, 2, 1):
-        if N % cand == 0:
-            nblk = cand
-            break
+    tblk = _largest_divisor(T)
+    nblk = _largest_divisor(N)
     y, h = minimalist_block_pallas(
         x, jnp.asarray(codes_h, jnp.int8), jnp.asarray(codes_z, jnp.int8),
         float(scale), jnp.asarray(bh, jnp.float32),
         jnp.asarray(bz, jnp.float32), h0, tblk=tblk, nblk=nblk,
         interpret=(backend == "pallas"))
     return y, h
+
+
+def minimalist_step(x, codes_h, codes_z, scale, bh, bz, h_prev, *,
+                    backend="pallas"):
+    """Fused single-step hardware-mode decode: projection + gate + state
+    update + comparator in ONE kernel.  x: (B, K); h_prev: (B, N) ->
+    (y=Θ(h), h) each (B, N).  The serving engine's decode hot path."""
+    N = codes_h.shape[1]
+    if backend == "xla":
+        return ref.minimalist_step_ref(x, jnp.asarray(codes_h),
+                                       jnp.asarray(codes_z), scale,
+                                       jnp.asarray(bh), jnp.asarray(bz),
+                                       h_prev)
+    nblk = _largest_divisor(N)
+    return minimalist_step_pallas(
+        x, jnp.asarray(codes_h, jnp.int8), jnp.asarray(codes_z, jnp.int8),
+        float(scale), jnp.asarray(bh, jnp.float32),
+        jnp.asarray(bz, jnp.float32), h_prev, nblk=nblk,
+        interpret=(backend == "pallas"))
 
 
 def cost_model(B, T, K, N, *, dtype_bytes=2):

@@ -31,3 +31,14 @@ def minimalist_block_ref(x, codes_h, codes_z, scale, bh, bz, h0):
         hs.append(h)
     h_seq = jnp.stack(hs, axis=1)
     return (h_seq > 0.0).astype(x.dtype), h_seq
+
+
+def minimalist_step_ref(x, codes_h, codes_z, scale, bh, bz, h_prev):
+    """Single fused decode step. x: (B, K) in {0,1}; h_prev: (B, N).
+    Returns (y=Θ(h), h) each (B, N)."""
+    wh = (codes_h.astype(jnp.float32) - 1.5) * scale
+    wz = (codes_z.astype(jnp.float32) - 1.5) * scale
+    htilde = x @ wh + bh
+    z = quant.quantize_unit_6b(quant.hard_sigmoid(x @ wz + bz))
+    h = z * htilde + (1.0 - z) * h_prev
+    return (h > 0.0).astype(x.dtype), h

@@ -1,29 +1,38 @@
-"""Batched serving driver: prefill + greedy decode with per-layer caches.
+"""Serving driver: continuous-batching streaming decode (repro.serve).
 
-    PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m --smoke \
-        --batch 4 --prompt-len 32 --gen 32
+    PYTHONPATH=src python -m repro.launch.serve --arch minimalist-lm-360m \
+        --smoke --requests 16 --slots 4 --prompt-len 32 --gen 32
 
-The decode inner loop is the jitted ``serve_step`` (same function the
-multi-pod dry-run lowers at the decode_32k / long_500k shapes).  Prefill
-is implemented by stepping the cache through the prompt (cache-writing
-prefill); the O(1)-state mixers (minGRU — the paper's edge-inference case —
-and Mamba) make this linear-time with constant memory.
+The engine admits requests of mixed prompt/generation lengths into a
+fixed-capacity slot batch: prompts are consumed by the chunked prefill
+(one ``linear_scan`` per chunk for the O(1)-state mixers — the paper's
+edge-inference property), decode is ONE jitted slot-batch step per token,
+and finished sequences retire the step they complete so their slots go
+straight back into circulation.  ``--baseline`` runs the old static-batch
+loop instead (kept as the benchmark reference).
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import get_config
+from repro.configs import ServeConfig, get_config
 from repro.models import build_model
+from repro.serve import DecoderStepModel, ServeEngine
 
 
 def generate(model, params, prompts, *, max_len, gen_tokens):
-    """prompts: (B, P) int32. Returns (B, gen_tokens) generated ids."""
+    """Static-batch baseline: per-token prefill + lock-step greedy decode.
+
+    prompts: (B, P) int32. Returns (B, gen_tokens) generated ids.  Every
+    sequence occupies its batch row for the full P + gen_tokens steps —
+    the reference the continuous-batching engine is benchmarked against.
+    """
     B, P = prompts.shape
     cache = model.init_cache(B, max_len)
 
@@ -43,31 +52,79 @@ def generate(model, params, prompts, *, max_len, gen_tokens):
     return jnp.stack(out, axis=1)
 
 
+def build_engine(model, params, serve: ServeConfig = ServeConfig()):
+    sm = DecoderStepModel(model, max_len=serve.max_len,
+                          prefill_chunk=serve.prefill_chunk)
+    return ServeEngine(sm, params, slots=serve.slots)
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="smollm-360m")
+    ap.add_argument("--arch", default="minimalist-lm-360m")
     ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32,
+                    help="mean prompt length; actual lengths vary ±50%%")
+    ap.add_argument("--gen", type=int, default=32,
+                    help="mean generation budget; actual budgets vary ±50%%")
+    ap.add_argument("--prefill-chunk", type=int, default=256)
+    ap.add_argument("--max-len", type=int, default=0,
+                    help="attention cache length (default: fits the longest "
+                         "request)")
+    ap.add_argument("--scan-backend", default=None,
+                    choices=[None, "seq", "xla", "pallas", "pallas_tpu"],
+                    help="linear-scan backend for recurrent prefill")
+    ap.add_argument("--baseline", action="store_true",
+                    help="run the static-batch loop instead of the engine")
     args = ap.parse_args(argv)
+    if min(args.requests, args.gen, args.prompt_len, args.slots) < 1:
+        ap.error("--requests, --gen, --prompt-len and --slots must all "
+                 "be >= 1")
 
     cfg = get_config(args.arch + ("-smoke" if args.smoke else ""))
+    if args.scan_backend:
+        cfg = dataclasses.replace(cfg, scan_backend=args.scan_backend)
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    prompts = jax.random.randint(jax.random.PRNGKey(1),
-                                 (args.batch, args.prompt_len), 0, cfg.vocab)
+
+    rng = np.random.default_rng(1)
+    lo = max(1, args.prompt_len // 2)
+    plens = rng.integers(lo, args.prompt_len * 3 // 2 + 1, args.requests)
+    glens = rng.integers(max(1, args.gen // 2),
+                         args.gen * 3 // 2 + 1, args.requests)
+    prompts = [rng.integers(0, cfg.vocab, size=p, dtype=np.int64)
+               for p in plens]
+    max_len = args.max_len or int(plens.max() + glens.max() + 1)
+
+    if args.baseline:
+        # static batch: pad every prompt to the longest, run the worst case
+        P, G = int(plens.max()), int(glens.max())
+        batch = np.stack([np.resize(p, P) for p in prompts])
+        t0 = time.time()
+        out = generate(model, params, jnp.asarray(batch, jnp.int32),
+                       max_len=max_len, gen_tokens=G)
+        out.block_until_ready()
+        dt = time.time() - t0
+        total = args.requests * (P + G)
+        print(f"baseline: {out.shape} in {dt:.2f}s "
+              f"({total/dt:.1f} tok/s incl. prefill + compile)")
+        return out
+
+    eng = build_engine(model, params,
+                       ServeConfig(slots=args.slots, max_len=max_len,
+                                   prefill_chunk=args.prefill_chunk))
     t0 = time.time()
-    out = generate(model, params, prompts,
-                   max_len=args.prompt_len + args.gen + 1,
-                   gen_tokens=args.gen)
-    out.block_until_ready()
+    for p, g in zip(prompts, glens):
+        eng.submit(p, max_new_tokens=int(g))
+    done = eng.run()
     dt = time.time() - t0
-    total = args.batch * (args.prompt_len + args.gen)
-    print(f"generated {out.shape} in {dt:.2f}s "
-          f"({total/dt:.1f} tok/s incl. prefill + compile)")
-    print("sample:", np.asarray(out[0, :16]))
-    return out
+    total = int(plens.sum() + glens.sum())
+    print(f"engine: {len(done)} requests, {eng.n_emitted} tokens in "
+          f"{dt:.2f}s ({total/dt:.1f} tok/s incl. prefill + compile), "
+          f"slot utilization {eng.utilization:.2f}")
+    print("sample:", done[0].tokens[:16])
+    return done
 
 
 if __name__ == "__main__":

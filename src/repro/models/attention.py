@@ -149,6 +149,32 @@ class GQAAttention(Module):
         a = ("batch", "kv_len", "kv_heads", "head_dim")
         return {"k": a, "v": a}
 
+    def can_prefill(self):
+        # ring-buffer chunk writes can wrap within a chunk; the sliding-
+        # window cache keeps the scanned per-token fallback for now.
+        return not self.local
+
+    def prefill(self, params, x, cache, pos0):
+        """Chunk prefill (global attention): bulk-write K/V for positions
+        [pos0, pos0+S) and attend causally against the whole cache."""
+        assert not self.local, "sliding-window prefill uses the decode path"
+        B, S, _ = x.shape
+        positions = pos0 + jnp.arange(S)
+        q, k, v = self._qkv(params, x,
+                            jnp.broadcast_to(positions, (B, S)))
+        ck = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k.astype(cache["k"].dtype), pos0, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v.astype(cache["v"].dtype), pos0, axis=1)
+        L = ck.shape[1]
+        k_pos = jnp.arange(L)
+        mask = jnp.where(k_pos[None, :] <= positions[:, None], 0.0,
+                         NEG_INF)[None, None]            # (1, 1, S, L)
+        mask = jnp.broadcast_to(mask, (B, 1, S, L))
+        out = _sdpa(q, ck.astype(q.dtype), cv.astype(q.dtype), mask)
+        y = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
+        return y, {"k": ck, "v": cv}
+
     def decode(self, params, x, cache, pos):
         """One-step decode. x: (B, 1, D); pos: scalar current position."""
         B = x.shape[0]

@@ -84,35 +84,67 @@ class MambaBlock(Module):
     def __call__(self, params, x, positions=None):
         """x: (B, T, D) -> (B, T, D)."""
         del positions
-        B, T, _ = x.shape
-        mc, di = self.mc, self.d_inner
+        B = x.shape[0]
+        impl = self.cfg.ssm_impl
+        if impl == "xla":
+            # full-sequence eval == prefill from a blank carry; keeping one
+            # implementation keeps training and serving on the same math
+            y, _ = self.prefill(params, x, self.init_cache(B, dtype=x.dtype),
+                                0)
+            return y
         xz = x @ params["w_in"].astype(x.dtype)
         xr, z = jnp.split(xz, 2, axis=-1)
         xc = jax.nn.silu(self._conv(params, xr))
-        n = mc.d_state
-        impl = self.cfg.ssm_impl
         if impl == "fused":
             from repro.kernels.fused_ssm.ops import selective_scan
             dt, Bm, Cm, A = self._ssm_raw(params, xc)
             y = selective_scan(dt, xc, Bm, Cm, A, "pallas")
-        elif impl == "stub":
+        else:
+            assert impl == "stub", impl
             # dry-run stand-in: O(B·T·di) with grads to dt/xc/B/C/A; the
             # fused kernel's cost is added analytically by launch.dryrun
             dt, Bm, Cm, A = self._ssm_raw(params, xc)
             y = ((dt * xc) * Bm.sum(-1, keepdims=True)
                  + xc * Cm.sum(-1, keepdims=True)
                  + xc * A.sum(1)[None, None, :].astype(x.dtype))
-        else:
-            a_bar, b_bar, Cm = self._ssm_terms(params, xc)
-            h = scan_ops.linear_scan(
-                a_bar.reshape(B, T, di * n).astype(x.dtype),
-                b_bar.reshape(B, T, di * n).astype(x.dtype),
-                jnp.zeros((B, di * n), x.dtype),
-                self.scan_backend)
-            y = jnp.einsum("btdn,btn->btd", h.reshape(B, T, di, n), Cm)
         y = y + params["d_skip"].astype(x.dtype) * xc
         y = y * jax.nn.silu(z)
         return (y @ params["w_out"].astype(x.dtype)).astype(x.dtype)
+
+    # --- prefill: whole chunk against the O(1) carry ---
+    can_prefill = True
+
+    def prefill(self, params, x, cache, pos0):
+        """x: (B, S, D); cache {"ssm": (B,di,n), "conv": (B,d_conv-1,di)}.
+        One linear_scan over the chunk, conv warmed from the cached tail."""
+        del pos0
+        B, T, _ = x.shape
+        mc, di, n = self.mc, self.d_inner, self.mc.d_state
+        xz = x @ params["w_in"].astype(x.dtype)
+        xr, z = jnp.split(xz, 2, axis=-1)
+        hist = jnp.concatenate([cache["conv"].astype(x.dtype), xr], axis=1)
+        # conv weights stay f32 (promoting xc) — matches the historical
+        # full-sequence path bit-for-bit under bf16 compute
+        out = sum(hist[:, i:i + T, :] * params["conv"][i]
+                  for i in range(mc.d_conv))
+        xc = jax.nn.silu(out + params["conv_b"])
+        a_bar, b_bar, Cm = self._ssm_terms(params, xc)
+        h = scan_ops.linear_scan(
+            a_bar.reshape(B, T, di * n).astype(x.dtype),
+            b_bar.reshape(B, T, di * n).astype(x.dtype),
+            cache["ssm"].reshape(B, di * n).astype(x.dtype),
+            self.scan_backend)
+        y = jnp.einsum("btdn,btn->btd", h.reshape(B, T, di, n), Cm)
+        y = y + params["d_skip"].astype(x.dtype) * xc
+        y = y * jax.nn.silu(z)
+        y = (y @ params["w_out"].astype(x.dtype)).astype(x.dtype)
+        new_cache = {
+            # hist is (B, T + d_conv - 1, di); keep the LAST d_conv-1 rows
+            # (start index T, so d_conv == 1 yields an empty slice, not -0)
+            "ssm": h[:, -1].reshape(B, di, n).astype(cache["ssm"].dtype),
+            "conv": hist[:, T:, :].astype(cache["conv"].dtype),
+        }
+        return y, new_cache
 
     # --- decode: O(1) state ---
     def cache_spec(self, batch, length, dtype=jnp.float32):

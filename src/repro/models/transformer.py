@@ -47,12 +47,13 @@ class MinGRUMixer(Module):
     block is drop-in comparable with attention/mamba mixers.
     """
 
-    def __init__(self, cfg: ModelConfig, *, scan_backend="xla",
+    def __init__(self, cfg: ModelConfig, *, scan_backend=None,
                  dtype=jnp.float32, name="mingru"):
         self.cfg = cfg
         qcfg = _QUANT_MODES[cfg.mingru_quant]()
         self.block = MinGRUBlock(cfg.d_model, cfg.d_model, qcfg=qcfg,
-                                 scan_backend=scan_backend, dtype=dtype)
+                                 scan_backend=scan_backend or cfg.scan_backend,
+                                 dtype=dtype)
         self.name = name
 
     def init(self, key):
@@ -81,6 +82,14 @@ class MinGRUMixer(Module):
         out, h = self.block.step(params, x[:, 0, :], cache["h"])
         return out[:, None, :], {"h": h}
 
+    can_prefill = True
+
+    def prefill(self, params, x, cache, pos0):
+        """Chunk prefill: ONE linear_scan over the chunk, O(1) carry."""
+        del pos0
+        out, h = self.block(params, x, h0=cache["h"].astype(x.dtype))
+        return out, {"h": h[:, -1].astype(cache["h"].dtype)}
+
 
 def _make_mixer(cfg: ModelConfig, spec: LayerSpec, dtype):
     if spec.kind == ATTN:
@@ -90,7 +99,7 @@ def _make_mixer(cfg: ModelConfig, spec: LayerSpec, dtype):
     if spec.kind == MLA:
         return MLAAttention(cfg, dtype=dtype)
     if spec.kind == MAMBA:
-        return MambaBlock(cfg, dtype=dtype)
+        return MambaBlock(cfg, scan_backend=cfg.scan_backend, dtype=dtype)
     if spec.kind == MINGRU:
         return MinGRUMixer(cfg, dtype=dtype)
     raise ValueError(f"unknown block kind {spec.kind}")
@@ -135,10 +144,8 @@ class DecoderLayer(Module):
             a["norm2"] = self.norm2.axes()
         return a
 
-    def __call__(self, params, x, positions=None):
-        h = self.mixer(params["mixer"], self.norm1(params["norm1"], x),
-                       positions=positions)
-        x = x + h
+    def _mlp_tail(self, params, x):
+        """Residual MLP tail shared by __call__ / decode / prefill."""
         if self.mlp:
             m = self.mlp(params["mlp"], self.norm2(params["norm2"], x))
             if isinstance(m, tuple):   # MoE returns (out, aux)
@@ -146,16 +153,28 @@ class DecoderLayer(Module):
             x = x + m
         return x
 
+    def __call__(self, params, x, positions=None):
+        h = self.mixer(params["mixer"], self.norm1(params["norm1"], x),
+                       positions=positions)
+        return self._mlp_tail(params, x + h)
+
     def decode(self, params, x, cache, pos):
         h, new_cache = self.mixer.decode(
             params["mixer"], self.norm1(params["norm1"], x), cache, pos)
-        x = x + h
-        if self.mlp:
-            m = self.mlp(params["mlp"], self.norm2(params["norm2"], x))
-            if isinstance(m, tuple):
-                m = m[0]
-            x = x + m
-        return x, new_cache
+        return self._mlp_tail(params, x + h), new_cache
+
+    def prefill(self, params, x, cache, pos0):
+        """Consume a whole chunk (B, S, D) against the cache in one call."""
+        h, new_cache = self.mixer.prefill(
+            params["mixer"], self.norm1(params["norm1"], x), cache, pos0)
+        return self._mlp_tail(params, x + h), new_cache
+
+    def can_prefill(self):
+        fn = getattr(self.mixer, "prefill", None)
+        if fn is None:
+            return False
+        ok = getattr(self.mixer, "can_prefill", True)
+        return ok() if callable(ok) else bool(ok)
 
     def cache_spec(self, batch, length, dtype=jnp.bfloat16):
         if hasattr(self.mixer, "cache_spec"):
@@ -341,6 +360,50 @@ class DecoderLM(Module):
         return jax.tree_util.tree_map(
             lambda s: jnp.zeros(s.shape, s.dtype),
             self.cache_spec(batch, length, dtype))
+
+    def supports_prefill(self) -> bool:
+        """True when every layer can consume whole chunks against its cache
+        (the serving engine falls back to a scanned per-token prefill
+        otherwise — e.g. sliding-window or MLA attention stacks)."""
+        return all(l.can_prefill() for _, l, _ in self._all_layers())
+
+    def prefill(self, params, tokens, cache, pos0):
+        """Consume a prompt chunk. tokens: (B, S); pos0: scalar int (first
+        absolute position of the chunk). Returns (last-token logits
+        (B, 1, V), new cache) — the cache carry feeds decode_step (or the
+        next chunk)."""
+        x = self.embed(params["embed"], tokens).astype(self.compute_dtype())
+        new_cache = dict(cache)
+        for l in self.head_layers:
+            x, new_cache[l.name] = l.prefill(params[l.name], x,
+                                             cache[l.name], pos0)
+        if self.scan_layers:
+            def body(carry, rep):
+                h = carry
+                rep_params, rep_cache = rep
+                out_cache = {}
+                for l in self.unit_layers:
+                    h, out_cache[l.name] = l.prefill(
+                        rep_params[l.name], h, rep_cache[l.name], pos0)
+                return h, out_cache
+
+            stacked_p = {l.name: params[l.name] for l in self.unit_layers}
+            stacked_c = {l.name: cache[l.name] for l in self.unit_layers}
+            x, updated = jax.lax.scan(body, x, (stacked_p, stacked_c))
+            for l in self.unit_layers:
+                new_cache[l.name] = updated[l.name]
+        else:
+            for r in range(self.cfg.n_repeats):
+                for l in self.unit_layers:
+                    nm = f"{l.name}_r{r}"
+                    x, new_cache[nm] = l.prefill(params[nm], x,
+                                                 cache[nm], pos0)
+        for l in self.tail_layers:
+            x, new_cache[l.name] = l.prefill(params[l.name], x,
+                                             cache[l.name], pos0)
+        x = self.final_norm(params["final_norm"], x[:, -1:, :])
+        head = params["embed"] if self.cfg.tie_embeddings else params["lm_head"]
+        return self.embed.attend(head, x), new_cache
 
     def decode_step(self, params, tokens, cache, pos):
         """tokens: (B, 1); pos: scalar int. Returns (logits, new cache)."""

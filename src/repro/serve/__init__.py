@@ -1,0 +1,22 @@
+"""Continuous-batching streaming inference for O(1)-state recurrent stacks.
+
+The paper's central serving property — the minGRU collapses to a single
+constant-memory recurrent step — is what makes slot-based continuous
+batching trivial here: a slot is (hidden state, position), admission is a
+state write, retirement is a state free.  No paged KV allocator needed for
+the pure recurrent stacks; attention stacks ride along behind the same
+StepModel protocol with per-slot position tracking.
+
+  * :mod:`repro.serve.protocol` — the StepModel contract + adapters for
+    DecoderLM (LM generation) and MinimalistNetwork (frame streaming)
+  * :mod:`repro.serve.prefill`  — chunked prompt prefill (one linear_scan
+    per chunk instead of a per-token Python loop)
+  * :mod:`repro.serve.engine`   — the fixed-capacity slot scheduler
+"""
+from repro.serve.engine import Request, ServeEngine
+from repro.serve.prefill import chunked_prefill
+from repro.serve.protocol import (DecoderStepModel, MinimalistStepModel,
+                                  StepModel)
+
+__all__ = ["Request", "ServeEngine", "chunked_prefill", "StepModel",
+           "DecoderStepModel", "MinimalistStepModel"]

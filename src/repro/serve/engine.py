@@ -1,0 +1,229 @@
+"""Fixed-capacity continuous-batching scheduler.
+
+The engine owns ``slots`` recurrent states (one per in-flight request) plus
+per-slot position / budget counters.  Requests of arbitrary prompt and
+generation lengths are admitted into free slots as they open up and retired
+the step they finish — the decode step itself is ONE jitted program over
+the full slot batch whose shapes never change, so XLA compiles it exactly
+once per engine (no slot compaction, no retraces).
+
+Request lifecycle::
+
+    submit() -> WAITING -> [admit: chunked prefill -> state write] ->
+    RUNNING (slot batch decode, inactive slots masked) -> retire ->
+    FINISHED (tokens / stream outputs collected on the host)
+
+Two request flavors, selected by the StepModel:
+
+  * autoregressive (DecoderLM): the prompt is prefilled in chunks at
+    admission; emitted tokens feed back as the next input until
+    ``max_new_tokens`` (or ``eos_id``) is reached.
+  * streaming (MinimalistNetwork): input frames are fed one per step —
+    the paper's edge case where samples arrive in real time — and every
+    per-frame output is recorded; the request retires when its stream is
+    exhausted.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Any, List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray                 # (P,) int32 tokens | (P, d_in) frames
+    max_new_tokens: int = 0            # 0 for pure streaming requests
+    eos_id: Optional[int] = None
+    # filled by the engine:
+    outputs: List[Any] = dataclasses.field(default_factory=list)
+    finished: bool = False
+
+    @property
+    def tokens(self) -> np.ndarray:
+        """Generated token ids (LM) / per-frame outputs (streaming)."""
+        return np.asarray(self.outputs)
+
+
+class ServeEngine:
+    """Continuous-batching engine over any :class:`StepModel`."""
+
+    def __init__(self, step_model, params, *, slots: int = 8):
+        self.sm = step_model
+        self.params = params
+        self.slots = int(slots)
+        if self.slots < 1:
+            raise ValueError("slots must be >= 1")
+        self.state = step_model.init_state(self.slots)
+        self.free_mask = (1 << self.slots) - 1     # bit i set = slot i free
+        self.waiting: deque[Request] = deque()
+        self.slot_req: List[Optional[Request]] = [None] * self.slots
+        self.pos = np.zeros(self.slots, np.int32)
+        self.remaining = np.zeros(self.slots, np.int64)
+        self.active = np.zeros(self.slots, bool)
+        self._cur: Optional[np.ndarray] = None     # next input per slot
+        self._uid = 0
+        # telemetry
+        self.n_steps = 0
+        self.n_emitted = 0          # all tokens, incl. admission prefill
+        self._n_decoded = 0         # tokens emitted by slot-batch steps
+        self.finished: List[Request] = []
+
+    # ------------------------------------------------------------------
+    # submission / admission
+    # ------------------------------------------------------------------
+    def submit(self, prompt, max_new_tokens: int = 0,
+               eos_id: Optional[int] = None) -> Request:
+        prompt = np.asarray(prompt)
+        if len(prompt) < 1:
+            raise ValueError("empty prompt")
+        if self.sm.autoregressive:
+            assert prompt.ndim == 1 and max_new_tokens >= 1, \
+                "LM requests need a (P,) prompt and max_new_tokens >= 1"
+            prompt = prompt.astype(np.int32)
+            # attention-bearing stacks write K/V at absolute positions:
+            # past max_len the slice write clamps and decodes garbage
+            if getattr(self.sm, "positional", False):
+                need = len(prompt) + max_new_tokens
+                if need > self.sm.max_len:
+                    raise ValueError(
+                        f"request needs {need} cache positions but the "
+                        f"engine was built with max_len={self.sm.max_len}")
+        req = Request(self._uid, prompt, max_new_tokens, eos_id)
+        self._uid += 1
+        self.waiting.append(req)
+        return req
+
+    def _alloc_slot(self) -> int:
+        bit = int(self.free_mask & -self.free_mask)
+        self.free_mask = int(self.free_mask) ^ bit
+        return bit.bit_length() - 1
+
+    def _free_slot(self, slot: int):
+        self.free_mask = int(self.free_mask) | (1 << int(slot))
+        self.slot_req[slot] = None
+        self.active[slot] = False
+
+    @staticmethod
+    def _pow2(n: int) -> int:
+        return 1 << (n - 1).bit_length()
+
+    def _pad_slots(self, slots):
+        """Pad an admission wave's slot list to a power of two with
+        out-of-bounds indices — the scatter drops them, and jit compiles
+        at most log2(slots) admission shapes per prompt-length bucket."""
+        padded = np.full(self._pow2(len(slots)), self.slots, np.int32)
+        padded[:len(slots)] = slots
+        return padded
+
+    def admit(self):
+        """Move waiting requests into free slots, one WAVE at a time:
+        same-length prompts prefill as one batched chunked call, their
+        carries land in one scatter write, and the wave costs one host
+        sync — admission overhead amortizes over the wave."""
+        admitted = []
+        while self.waiting and self.free_mask:
+            req = self.waiting.popleft()
+            slot = self._alloc_slot()
+            self.slot_req[slot] = req
+            self.active[slot] = True
+            admitted.append((req, slot))
+            if self._cur is None:
+                shape = (self.slots,) + tuple(req.prompt.shape[1:])
+                self._cur = np.zeros(shape, req.prompt.dtype)
+        if not admitted:
+            return
+        if not self.sm.autoregressive:
+            # streaming: blank state reset for the whole wave in one write
+            slots = [s for _r, s in admitted]
+            pad = self._pad_slots(slots)
+            blank = self.sm.init_state(len(pad))
+            self.state = self.sm.write_slots(self.state, blank, pad)
+            for req, slot in admitted:
+                self.pos[slot] = 0
+                self.remaining[slot] = len(req.prompt)
+                self._cur[slot] = req.prompt[0]
+            return
+        groups: dict = {}
+        for req, slot in admitted:
+            groups.setdefault(len(req.prompt), []).append((req, slot))
+        for plen, group in groups.items():
+            slots = [s for _r, s in group]
+            pad = self._pad_slots(slots)
+            prompts = [r.prompt for r, _s in group]
+            prompts += [prompts[-1]] * (len(pad) - len(group))
+            last, carry = self.sm.prefill(self.params, np.stack(prompts))
+            self.state = self.sm.write_slots(self.state, carry, pad)
+            tok0 = np.asarray(self.sm.emit(last))
+            for i, (req, slot) in enumerate(group):
+                t = int(tok0[i])
+                req.outputs.append(t)
+                self.n_emitted += 1
+                self.pos[slot] = plen
+                self.remaining[slot] = req.max_new_tokens - 1
+                self._cur[slot] = t
+                if self.remaining[slot] <= 0 or t == req.eos_id:
+                    self._retire(slot)
+
+    # ------------------------------------------------------------------
+    # decode
+    # ------------------------------------------------------------------
+    def _retire(self, slot: int):
+        req = self.slot_req[slot]
+        req.finished = True
+        self.finished.append(req)
+        self._free_slot(slot)
+
+    def step(self):
+        """Admit what fits, then run ONE slot-batched decode step."""
+        self.admit()
+        if not self.active.any():
+            return
+        active = jnp.asarray(self.active)
+        pos = jnp.asarray(self.pos)
+        x = jnp.asarray(self._cur)
+        out, self.state = self.sm.step(self.params, x, self.state, pos,
+                                       active)
+        emitted = np.asarray(out)
+        self.n_steps += 1
+        for slot in np.flatnonzero(self.active):
+            req = self.slot_req[slot]
+            req.outputs.append(emitted[slot].copy())
+            self.n_emitted += 1
+            self._n_decoded += 1
+            self.pos[slot] += 1
+            self.remaining[slot] -= 1
+            if self.sm.autoregressive:
+                self._cur[slot] = emitted[slot]
+                done = (self.remaining[slot] <= 0
+                        or emitted[slot] == req.eos_id)
+            else:
+                done = self.remaining[slot] <= 0
+                if not done:
+                    self._cur[slot] = req.prompt[self.pos[slot]]
+            if done:
+                self._retire(slot)
+
+    def run(self, max_steps: Optional[int] = None) -> List[Request]:
+        """Drive until every submitted request finishes; returns them in
+        completion order."""
+        steps = 0
+        while self.waiting or self.active.any():
+            self.step()
+            steps += 1
+            if max_steps is not None and steps >= max_steps:
+                break
+        return self.finished
+
+    # ------------------------------------------------------------------
+    @property
+    def utilization(self) -> float:
+        """Decode-emitted tokens per slot-step actually paid for (tokens
+        produced by admission prefill are excluded — they cost prefill
+        FLOPs, not decode slot-steps)."""
+        paid = self.n_steps * self.slots
+        return self._n_decoded / paid if paid else 0.0

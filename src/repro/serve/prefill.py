@@ -1,0 +1,76 @@
+"""Chunked prompt prefill.
+
+Replaces the per-token Python prefill loop of the old ``launch.serve`` with
+at most two compiled programs per prompt-length class:
+
+  * fast path — the model consumes a whole chunk per call
+    (``DecoderLM.prefill``): each O(1)-state mixer runs ONE ``linear_scan``
+    over the chunk (backend-selectable via ``ModelConfig.scan_backend``:
+    seq / xla / pallas / pallas_tpu) and global attention bulk-writes its
+    K/V block.  The final carry feeds the decode loop.
+  * fallback — stacks with a mixer that cannot consume chunks against its
+    cache (sliding-window rings, MLA) run a ``lax.scan`` of single-token
+    ``decode_step`` calls: still one XLA program, no Python-level loop.
+
+Prompts are split into ``chunk``-sized pieces plus one remainder piece, so
+any prompt length compiles at most two chunk shapes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _fast_prefill_fn(model):
+    def run(params, tokens, cache, pos0):
+        logits, cache = model.prefill(params, tokens, cache, pos0)
+        return logits[:, -1, :], cache
+    return run
+
+
+def _scan_prefill_fn(model):
+    def run(params, tokens, cache, pos0):
+        P = tokens.shape[1]
+        # step token 0 outside the scan: its logits seed the carry with
+        # the exact dtype decode_step produces
+        logits0, cache = model.decode_step(params, tokens[:, :1],
+                                           cache, pos0)
+
+        def body(carry, xs):
+            cache, _ = carry
+            tok, pos = xs
+            logits, cache = model.decode_step(params, tok[:, None],
+                                              cache, pos)
+            return (cache, logits[:, -1, :]), None
+
+        (cache, last), _ = jax.lax.scan(
+            body, (cache, logits0[:, -1, :]),
+            (tokens[:, 1:].T,
+             pos0 + 1 + jnp.arange(P - 1, dtype=jnp.int32)))
+        return last, cache
+    return run
+
+
+def chunked_prefill(step_model, params, tokens, *, chunk=256, pos0=0):
+    """Consume a whole prompt. tokens: (B, P) -> (last logits (B, V_pad),
+    cache carry with batch B) ready for the decode loop."""
+    model = step_model.model
+    B, P = tokens.shape
+    if model.supports_prefill():
+        if step_model._jit_prefill_fast is None:
+            step_model._jit_prefill_fast = jax.jit(_fast_prefill_fn(model))
+        fn = step_model._jit_prefill_fast
+    else:
+        if step_model._jit_prefill_scan is None:
+            step_model._jit_prefill_scan = jax.jit(_scan_prefill_fn(model))
+        fn = step_model._jit_prefill_scan
+    tmpl = step_model._cache_templates
+    if B not in tmpl:   # zeros are immutable and never donated: reusable
+        tmpl[B] = model.init_cache(B, step_model.max_len)
+    cache = tmpl[B]
+    chunk = max(1, int(chunk))
+    last = None
+    for start in range(0, P, chunk):
+        piece = tokens[:, start:start + chunk]
+        last, cache = fn(params, piece, cache, jnp.int32(pos0 + start))
+    return last, cache

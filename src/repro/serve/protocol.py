@@ -1,0 +1,270 @@
+"""The StepModel protocol: what the serving engine requires of a model.
+
+A StepModel reduces any supported architecture to four operations over a
+slot-batched recurrent state (every leaf carries the slot axis first):
+
+  * ``init_state(batch)``                      — blank per-slot state
+  * ``prefill(params, xs, pos0=0)``            — consume an admission
+                                                 wave's prompts from a
+                                                 fresh internal state
+  * ``step(params, x, state, pos, active)``    — one slot-batch decode
+                                                 step (vector pos/active)
+  * ``emit(out)``                              — output -> recorded value
+                                                 (and feedback for LMs)
+
+Two adapters are provided:
+
+  * :class:`DecoderStepModel` — any ``models.transformer.DecoderLM``
+    (minGRU / Mamba / attention / hybrid stacks).  Pure O(1)-state stacks
+    take the direct batched ``decode_step`` with a dummy position (their
+    mixers are position-free); attention-bearing stacks are vmapped over
+    slots so each slot keeps its own absolute position in the KV cache.
+  * :class:`MinimalistStepModel` — the paper's raw ``MinimalistNetwork``
+    (frame streaming, e.g. per-sample sMNIST classification), optionally
+    through the fused single-step Pallas kernel on exported 2 b codes.
+"""
+from __future__ import annotations
+
+import warnings
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ATTN, ATTN_LOCAL, MLA
+
+
+class StepModel:
+    """Contract only; see module docstring."""
+
+    #: LM generation (emit feeds back as the next input) vs frame streaming
+    #: (inputs always come from the request's own sequence).
+    autoregressive: bool = True
+
+    def init_state(self, batch):
+        raise NotImplementedError
+
+    def prefill(self, params, xs, pos0=0):
+        """xs: (B, P, …) an admission wave's prompts (equal lengths) ->
+        (last_out (B, …), carry state with batch B)."""
+        raise NotImplementedError
+
+    def step(self, params, x, state, pos, active):
+        """ONE slot-batch decode step.  Returns (emitted, merged_state):
+        the emitted value per slot (token id / output vector) and the
+        state with inactive slots frozen — both produced inside a single
+        jitted program so the hot path is one dispatch + one host sync."""
+        raise NotImplementedError
+
+    def emit(self, out):
+        raise NotImplementedError
+
+    def write_slots(self, state, batch_state, slots):
+        """Scatter a batched carry (batch axis aligned with ``slots``) into
+        the slot batch.  Entries of ``slots`` >= capacity are padding and
+        dropped (JAX scatter OOB-drop semantics) — admission waves pad the
+        group batch to a power of two so jit shapes stay bounded."""
+        raise NotImplementedError
+
+
+def _axis_mask(active, leaf, axis=0):
+    """Broadcast (slots,) bool over a leaf whose slot dim sits at ``axis``."""
+    shape = [1] * leaf.ndim
+    shape[axis] = active.shape[0]
+    return active.reshape(shape)
+
+
+def masked_update(state, new_state, active, axis=0):
+    """Freeze inactive slots: new value where active, old where not."""
+    return jax.tree_util.tree_map(
+        lambda n, o: jnp.where(_axis_mask(active, n, axis), n, o),
+        new_state, state)
+
+
+# ---------------------------------------------------------------------------
+# DecoderLM adapter
+# ---------------------------------------------------------------------------
+
+class DecoderStepModel(StepModel):
+    """StepModel over a DecoderLM; state = the per-layer decode caches."""
+
+    autoregressive = True
+
+    def __init__(self, model, *, max_len: int = 256,
+                 prefill_chunk: int = 256):
+        self.model = model
+        self.max_len = int(max_len)
+        self.prefill_chunk = int(prefill_chunk)
+        self.vocab = model.cfg.vocab
+        kinds = {s.kind for s in model.cfg.layer_specs()}
+        # position-free stacks: every mixer carries O(1) state and ignores
+        # absolute position -> one batched decode_step, never retraced.
+        self.positional = bool(kinds & {ATTN, ATTN_LOCAL, MLA})
+        # in the model's native cache layout, scanned-unit leaves carry the
+        # layer-repeat axis FIRST — their slot (batch) axis is 1, not 0.
+        self._slot_axis = {name: (1 if mode == "scanned" else 0)
+                           for name, _l, mode in model._all_layers()}
+        if any(s.moe for s in model.cfg.layer_specs()):
+            # MoEMLP pools every token of a call into ONE capacity-limited
+            # dispatch (C = f(B*S)), so routing/dropping — and therefore
+            # the generated text — depends on chunk size and on which
+            # neighbors share the wave/slot batch.
+            warnings.warn(
+                f"{model.cfg.name}: MoE expert-capacity routing depends on "
+                "the co-batched tokens; serving outputs will vary with "
+                "concurrent traffic and prefill chunking", stacklevel=2)
+        self._jit_step = jax.jit(self._step_impl)
+        self._jit_write = jax.jit(self._write_impl)
+        self.emit = jax.jit(self._emit_impl)
+        # populated lazily by serve.prefill.chunked_prefill
+        self._jit_prefill_fast = None
+        self._jit_prefill_scan = None
+        self._cache_templates = {}
+
+    # -- state ----------------------------------------------------------
+    def init_state(self, batch):
+        if not self.positional:
+            return self.model.init_cache(batch, self.max_len)
+        # per-slot unit caches (inner batch 1), stacked on the slot axis
+        unit = self.model.cache_spec(1, self.max_len)
+        return jax.tree_util.tree_map(
+            lambda s: jnp.zeros((batch,) + s.shape, s.dtype), unit)
+
+    # -- prefill (an admission wave of same-length prompts) -------------
+    def prefill(self, params, xs, pos0=0):
+        """xs: (B, P) int32 prompts.  Chunked via serve.prefill."""
+        from repro.serve.prefill import chunked_prefill
+        return chunked_prefill(self, params, xs,
+                               chunk=self.prefill_chunk, pos0=pos0)
+
+    # -- decode ---------------------------------------------------------
+    def _step_impl(self, params, tok, state, pos, active):
+        if not self.positional:
+            logits, new_state = self.model.decode_step(
+                params, tok[:, None], state, jnp.int32(0))
+            logits = logits[:, -1, :]
+            merged = {}
+            for name, sub in state.items():
+                ax = self._slot_axis[name]
+                merged[name] = masked_update(sub, new_state[name],
+                                             active, axis=ax)
+        else:
+            vstep = jax.vmap(self.model.decode_step,
+                             in_axes=(None, 0, 0, 0))
+            logits, new_state = vstep(params, tok[:, None, None], state, pos)
+            logits = logits[:, 0, -1, :]
+            merged = masked_update(state, new_state, active)
+        return self._emit_impl(logits), merged
+
+    def step(self, params, tok, state, pos, active):
+        """tok: (slots,) int32; pos, active: (slots,)."""
+        return self._jit_step(params, tok, state, pos, active)
+
+    def _emit_impl(self, logits):
+        """Greedy over the REAL vocab (ignore Megatron padding columns)."""
+        return jnp.argmax(logits[..., :self.vocab], -1).astype(jnp.int32)
+
+    # -- slot writes ----------------------------------------------------
+    def _write_impl(self, state, batch_state, slots):
+        out = {}
+        for name, sub in state.items():
+            ax = self._slot_axis[name]
+
+            def upd(s, v, ax=ax):
+                if self.positional:
+                    # stacked layout (slots, *unit): bring the cache batch
+                    # axis to the front, re-insert its singleton, scatter.
+                    v2 = jnp.expand_dims(jnp.moveaxis(v, ax, 0), 1 + ax)
+                    return s.at[slots].set(v2.astype(s.dtype))
+                if ax == 0:
+                    return s.at[slots].set(v.astype(s.dtype))
+                return s.at[:, slots].set(v.astype(s.dtype))
+
+            out[name] = jax.tree_util.tree_map(upd, sub, batch_state[name])
+        return out
+
+    def write_slots(self, state, batch_state, slots):
+        """Install an admission wave's prefill carry into its slots."""
+        return self._jit_write(state, batch_state, jnp.asarray(slots,
+                                                               jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# MinimalistNetwork adapter (paper's edge-streaming case)
+# ---------------------------------------------------------------------------
+
+class MinimalistStepModel(StepModel):
+    """Frame-streaming StepModel over ``core.mingru.MinimalistNetwork``.
+
+    ``use_fused_kernel=True`` serves the exported hardware model through
+    the fused single-step Pallas kernel (kernels.minimalist_block) — pass
+    the *trained block params* as usual; the 2 b-code export
+    (:func:`repro.kernels.minimalist_block.ops.from_block_params`) is
+    cached per params object and redone (with a fresh jit trace, since
+    the codes are baked in as constants) whenever a different params
+    pytree is passed.
+    """
+
+    autoregressive = False
+
+    def __init__(self, net, *, scan_backend=None, use_fused_kernel=False,
+                 kernel_backend="pallas"):
+        self.net = net
+        self.scan_backend = scan_backend
+        self.use_fused_kernel = use_fused_kernel
+        self.kernel_backend = kernel_backend
+        self._exported = None
+        self._export_src = None
+        self._jit_step = jax.jit(self._step_impl)
+        self._jit_write = jax.jit(self._write_impl)
+
+    def _export(self, params):
+        """(Re)export 2 b codes when a different params object arrives.
+        The codes enter the fused step as jit CONSTANTS, so the step jit
+        is rebuilt alongside them — otherwise stale weights would serve
+        silently after a checkpoint reload or QAT phase change."""
+        if self._exported is None or self._export_src is not params:
+            from repro.kernels.minimalist_block import ops as mb_ops
+            self._exported = [mb_ops.from_block_params(params[b.name])
+                              for b in self.net.blocks]
+            self._export_src = params
+            self._jit_step = jax.jit(self._step_impl)
+        return self._exported
+
+    def init_state(self, batch):
+        return self.net.initial_state(batch)
+
+    def _raw_step(self, params, x, state):
+        if self.use_fused_kernel:
+            from repro.kernels.minimalist_block import ops as mb_ops
+            out, new_states = x, []
+            for i, exp in enumerate(self._exported):
+                y, h = mb_ops.minimalist_step(
+                    out, *exp, state[i], backend=self.kernel_backend)
+                new_states.append(h)
+                # readout layer: the analog h is the result (no comparator)
+                out = h if i == len(self._exported) - 1 else y
+            return out, new_states
+        return self.net.step(params, x, state)
+
+    def _step_impl(self, params, x, state, pos, active):
+        del pos
+        out, new_state = self._raw_step(params, x, state)
+        return out, masked_update(state, new_state, active)
+
+    def step(self, params, x, state, pos, active):
+        """x: (slots, d_in) frames; pos unused (position-free)."""
+        if self.use_fused_kernel:
+            self._export(params)        # host-side, once; jit sees constants
+        return self._jit_step(params, x, state, pos, active)
+
+    def emit(self, out):
+        return out
+
+    def _write_impl(self, state, batch_state, slots):
+        return jax.tree_util.tree_map(
+            lambda s, v: s.at[slots].set(v.astype(s.dtype)),
+            state, batch_state)
+
+    def write_slots(self, state, batch_state, slots):
+        return self._jit_write(state, batch_state,
+                               jnp.asarray(slots, jnp.int32))

@@ -1,9 +1,11 @@
 """Pallas imc_mvm kernel vs charge-sharing oracle."""
+import pytest
+
+pytest.importorskip("hypothesis")  # optional test extra; skip on minimal installs
 import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from hypothesis import given, settings
 
 from repro.kernels.imc_mvm import ops, ref

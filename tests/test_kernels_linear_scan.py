@@ -1,11 +1,13 @@
 """Pallas linear_scan kernel vs pure-jnp oracle: shape/dtype sweeps,
 gradients, and hypothesis property tests on the recurrence algebra."""
+import pytest
+
+pytest.importorskip("hypothesis")  # optional test extra; skip on minimal installs
 import hypothesis
 import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from hypothesis import given, settings
 
 from repro.kernels.linear_scan import ops, ref

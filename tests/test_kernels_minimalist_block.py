@@ -74,3 +74,28 @@ def test_cost_model():
     # weight traffic is int8 codes: 2·K·N bytes — 4× less than bf16
     assert 2 * 64 * 64 <= b
     assert f > 0
+
+
+@pytest.mark.parametrize("B,K,N", [(1, 4, 8), (3, 16, 24), (2, 64, 130)])
+def test_fused_step_matches_block_step(B, K, N):
+    """The single-step serving kernel == the software hardware-mode step
+    == slicing one step out of the full fused block."""
+    blk, params = _block(K, N, seed=B + K)
+    exported = ops.from_block_params(params)
+    x = (jax.random.uniform(jax.random.PRNGKey(2), (B, K)) > 0.5
+         ).astype(jnp.float32)
+    h_prev = jax.random.normal(jax.random.PRNGKey(3), (B, N))
+
+    y_pl, h_pl = ops.minimalist_step(x, *exported, h_prev, backend="pallas")
+    y_ref, h_ref = ops.minimalist_step(x, *exported, h_prev, backend="xla")
+    np.testing.assert_allclose(np.asarray(h_pl), np.asarray(h_ref),
+                               atol=2e-5)
+
+    _y_sw, h_sw = blk.step(params, x, h_prev)
+    np.testing.assert_allclose(np.asarray(h_pl), np.asarray(h_sw),
+                               atol=2e-5, rtol=1e-5)
+
+    _yb, hb = ops.minimalist_block(x[:, None, :], *exported, h0=h_prev,
+                                   backend="pallas")
+    np.testing.assert_allclose(np.asarray(h_pl), np.asarray(hb[:, 0]),
+                               atol=2e-5)

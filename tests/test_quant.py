@@ -1,4 +1,7 @@
 """Quantizer properties (paper §2) — hypothesis-driven."""
+import pytest
+
+pytest.importorskip("hypothesis")  # optional test extra; skip on minimal installs
 import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
