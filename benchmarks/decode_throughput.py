@@ -11,8 +11,12 @@ Reported per batch size (default 1 / 64 / 256):
   * useful generated tokens/s, end-to-end (prefill + decode, post-warmup)
   * p50 / p99 per-token decode latency (one slot-batch step = one token
     for every active request)
+  * sampled decode (temperature/top-k/top-p per slot) vs greedy — the
+    overhead of the in-step sampling pipeline (same compiled program)
 and for the prefill comparison at prompt length >= 256:
-  * chunked prefill (ONE linear_scan per chunk) vs the per-token loop.
+  * chunked prefill (ONE linear_scan per chunk) vs the per-token loop
+  * grid-padded chunking (one compiled chunk shape) vs legacy remainder
+    chunking across ragged prompt lengths, compile counts included.
 
     PYTHONPATH=src python -m benchmarks.decode_throughput \
         [--arch minimalist-lm-360m] [--batches 1,64,256] [--gen 16]
@@ -27,7 +31,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit
-from repro.configs import get_config
+from repro.configs import SamplingParams, get_config
 from repro.models import build_model
 from repro.serve import DecoderStepModel, ServeEngine
 from repro.serve.prefill import chunked_prefill
@@ -80,28 +84,36 @@ def _run_baseline(model, params, prompts, glens, max_len, batch, step):
 
 def _warm_engine(sm, params, batch, plens):
     """Compile every shape the timed run can hit: admission waves are
-    padded to powers of two per prompt-length bucket, plus the decode
-    step at the slot-batch shape (writes use all-OOB slots: dropped)."""
+    padded to powers of two per prompt-length bucket (grid padding makes
+    all prompt lengths share one chunk program per wave size), the
+    per-wave admission sampler, plus the decode step at the slot-batch
+    shape (writes use all-OOB slots: dropped).  jnp arrays throughout so
+    the warm dispatch signatures match the engine's exactly."""
+    from repro.common import pow2ceil
+    from repro.serve.sampling import greedy_arrays
     state = sm.init_state(batch)
-    cap = 1 << (max(1, batch) - 1).bit_length()
+    cap = pow2ceil(max(1, batch))
     for P in sorted(set(plens)):
         B = 1
         while B <= cap:
-            toks = np.zeros((B, P), np.int64)
+            toks = jnp.zeros((B, P), jnp.int32)
             last, carry = sm.prefill(params, toks)
             sm.write_slots(state, carry, np.full(B, batch, np.int32))
-            np.asarray(sm.emit(last))
+            np.asarray(sm.sample(last, greedy_arrays(B),
+                                 np.full(B, P, np.int32)))
             B *= 2
-    sm.step(params, np.zeros(batch, np.int32), state,
-            np.zeros(batch, np.int32), np.ones(batch, bool))
+    sm.step(params, jnp.zeros(batch, jnp.int32), state,
+            jnp.zeros(batch, jnp.int32), jnp.ones(batch, bool))
 
 
-def _run_engine(sm, params, prompts, glens, batch):
+def _run_engine(sm, params, prompts, glens, batch, sampled=False):
     eng = ServeEngine(sm, params, slots=batch)
     lat = []
     t0 = time.perf_counter()
-    for p, g in zip(prompts, glens):
-        eng.submit(p, max_new_tokens=g)
+    for i, (p, g) in enumerate(zip(prompts, glens)):
+        sampling = SamplingParams(temperature=0.8, top_k=50, top_p=0.95,
+                                  seed=i) if sampled else None
+        eng.submit(p, max_new_tokens=g, sampling=sampling)
     while eng.waiting or eng.active.any():
         eng.admit()                    # keep admission prefill out of the
         s0 = time.perf_counter()       # per-token decode latency samples
@@ -145,6 +157,65 @@ def _prefill_compare(model, params, cfg, P, chunk):
     return out
 
 
+def _attn_prefill_compare(P, chunk):
+    """Sliding-window and MLA stacks: the new chunked fast path vs the
+    scanned per-token prefill they used to fall back to (PR 2)."""
+    import warnings as _warnings
+    rows = []
+    for label, arch in (("windowed", "gemma3-4b"),
+                        ("mla", "deepseek-v3-671b")):
+        cfg = get_config(arch + "-smoke")
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        with _warnings.catch_warnings():
+            _warnings.simplefilter("ignore")   # deepseek smoke is MoE
+            sm = DecoderStepModel(model, max_len=P + 2, prefill_chunk=chunk)
+        toks = jnp.asarray(np.random.default_rng(4).integers(
+            0, cfg.vocab, size=(1, P)), jnp.int32)
+        out = {}
+        for mode, scan in (("chunked", False), ("scanned", True)):
+            def go():
+                last, _ = chunked_prefill(sm, params, toks, chunk=chunk,
+                                          force_scan=scan)
+                jax.block_until_ready(last)
+            go()                               # compile
+            times = []
+            for _ in range(3):
+                s0 = time.perf_counter()
+                go()
+                times.append(time.perf_counter() - s0)
+            out[mode] = sorted(times)[1]
+        rows.append({
+            "name": f"prefill_attn/{label}/P{P}",
+            "us_per_call": f"{out['chunked']*1e6:.0f}",
+            "derived": f"chunked_s={out['chunked']:.4f};"
+                       f"scanned_s={out['scanned']:.4f};"
+                       f"speedup={out['scanned']/out['chunked']:.1f}x",
+        })
+    return rows
+
+
+def _grid_compare(model, params, cfg, P, chunk):
+    """Ragged prompt lengths, cold start: grid padding compiles ONE chunk
+    shape; legacy remainder chunking compiles one program per distinct
+    remainder — the compile class this PR removes."""
+    rng = np.random.default_rng(5)
+    lens = sorted({max(1, P - d) for d in (7, 5, 3, 1, 0)})
+    prompts = [jnp.asarray(rng.integers(0, cfg.vocab, size=(1, p)),
+                           jnp.int32) for p in lens]
+    out = {}
+    for mode, pad in (("padded", True), ("remainder", False)):
+        sm = DecoderStepModel(model, max_len=P + 2, prefill_chunk=chunk)
+        s0 = time.perf_counter()
+        for toks in prompts:
+            last, _ = chunked_prefill(sm, params, toks, chunk=chunk,
+                                      pad_to_grid=pad)
+        jax.block_until_ready(last)
+        out[mode] = time.perf_counter() - s0
+        out[mode + "_compiles"] = sm._jit_prefill_fast._cache_size()
+    return out
+
+
 def run(arch="minimalist-lm-360m", batches=(1, 64, 256), gen=16,
         prompt=32, chunk=16, prefill_lens=(256, 512)):
     cfg = get_config(arch + "-smoke")
@@ -166,15 +237,20 @@ def run(arch="minimalist-lm-360m", batches=(1, 64, 256), gen=16,
         tps_b, lat_b = _run_baseline(model, params, prompts, glens,
                                      max_len, batch, step)
         tps_e, lat_e, eng = _run_engine(sm, params, prompts, glens, batch)
+        tps_s, lat_s, _ = _run_engine(sm, params, prompts, glens, batch,
+                                      sampled=True)
         for name, tps, lat in [("static_batch", tps_b, lat_b),
-                               ("engine", tps_e, lat_e)]:
+                               ("engine", tps_e, lat_e),
+                               ("engine_sampled", tps_s, lat_s)]:
             rows.append({
                 "name": f"decode/{name}/batch{batch}",
                 "us_per_call": f"{np.median(lat)*1e6:.0f}",
                 "derived": f"tok_s={tps:.1f};p50_ms={np.percentile(lat,50)*1e3:.2f};"
                            f"p99_ms={np.percentile(lat,99)*1e3:.2f}",
             })
-        rows[-1]["derived"] += f";speedup={tps_e/tps_b:.2f}x;util={eng.utilization:.2f}"
+        rows[-1]["derived"] += (f";sampling_overhead={tps_e/max(tps_s,1e-9):.2f}x"
+                                f";compiled_steps={sm._jit_step._cache_size()}")
+        rows[-2]["derived"] += f";speedup={tps_e/tps_b:.2f}x;util={eng.utilization:.2f}"
 
     for P in prefill_lens:
         t = _prefill_compare(model, params, cfg, P, chunk=min(P, 128))
@@ -185,6 +261,17 @@ def run(arch="minimalist-lm-360m", batches=(1, 64, 256), gen=16,
                        f"per_token_s={t['per_token']:.4f};"
                        f"speedup={t['per_token']/t['chunked']:.1f}x",
         })
+        g = _grid_compare(model, params, cfg, P, chunk=min(P, 128))
+        rows.append({
+            "name": f"prefill_grid/P{P}",
+            "us_per_call": f"{g['padded']*1e6:.0f}",
+            "derived": f"padded_s={g['padded']:.4f};"
+                       f"remainder_s={g['remainder']:.4f};"
+                       f"padded_compiles={g['padded_compiles']};"
+                       f"remainder_compiles={g['remainder_compiles']};"
+                       f"cold_speedup={g['remainder']/g['padded']:.1f}x",
+        })
+        rows.extend(_attn_prefill_compare(P, chunk=min(P, 128)))
     return emit(rows)
 
 

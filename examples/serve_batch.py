@@ -14,7 +14,7 @@ import time
 import jax
 import numpy as np
 
-from repro.configs import ServeConfig, get_config
+from repro.configs import SamplingParams, ServeConfig, get_config
 from repro.launch.serve import build_engine, generate
 from repro.models import build_model
 
@@ -35,15 +35,21 @@ def main():
         jax.block_until_ready(out)
         dt_base = time.time() - t0
 
-        # continuous batching: mixed lengths, slots recycle as requests end
+        # continuous batching: mixed lengths, slots recycle as requests
+        # end; every other request samples (temperature/top-k/top-p) with
+        # its own seed — greedy and sampled share ONE compiled step, and
+        # each sampled stream is reproducible regardless of co-batching
         eng = build_engine(model, params,
                            ServeConfig(slots=B, max_len=2 * (P + G),
                                        prefill_chunk=P))
         t0 = time.time()
-        for _ in range(2 * B):           # twice the requests, same slots
+        for i in range(2 * B):           # twice the requests, same slots
             plen = int(rng.integers(P // 2, P + 1))
+            sampling = SamplingParams(temperature=0.8, top_k=50,
+                                      top_p=0.95, seed=i) if i % 2 else None
             eng.submit(rng.integers(0, cfg.vocab, size=plen),
-                       max_new_tokens=int(rng.integers(G // 2, G + 1)))
+                       max_new_tokens=int(rng.integers(G // 2, G + 1)),
+                       sampling=sampling)
         done = eng.run()
         dt_eng = time.time() - t0
         print(f"{arch:24s} baseline {B*(P+G)/dt_base:7.1f} tok/s | "

@@ -1,2 +1,10 @@
 from repro.common.pytree import tree_size_bytes, tree_param_count, map_with_axes
 from repro.common.precision import Policy, DEFAULT_POLICY
+
+
+def pow2ceil(n: int) -> int:
+    """Smallest power of two >= n (n >= 1; pow2ceil(0) == 1).  The ONE
+    bucket-rounding rule shared by serving admission waves, prefill chunk
+    capping, and benchmark warm-up — these must agree or warmed jit
+    shapes desynchronize from the engine's and retrace."""
+    return 1 << max(0, int(n) - 1).bit_length()

@@ -1,6 +1,7 @@
 from repro.configs.base import (ATTN, ATTN_LOCAL, MAMBA, MINGRU, MLA,
                                 LayerSpec, MambaConfig, MLAConfig, ModelConfig,
-                                MoEConfig, ServeConfig, SHAPES)
+                                MoEConfig, SamplingParams, ServeConfig,
+                                SHAPES)
 from repro.configs.archs import (ARCHS, ASSIGNED, LONG_CONTEXT_OK,
                                  MINIMALIST_SMNIST_DIMS, get_config,
                                  input_specs, reduced, shape_supported)

@@ -194,6 +194,35 @@ class ServeConfig:
     prefill_chunk: int = 256  # chunked-prefill chunk size (tokens)
 
 
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request decoding knobs (see repro.serve.sampling).
+
+    The defaults are greedy argmax.  ``seed`` is folded with the request
+    uid and the absolute token position into a counter-based PRNG key, so
+    a request's tokens are bitwise reproducible regardless of co-batched
+    traffic; knobs travel as per-slot ARRAYS through the one jitted
+    decode step, never as retrace-triggering constants.
+    """
+    temperature: float = 0.0  # <= 0 means greedy
+    top_k: int = 0            # 0 disables
+    top_p: float = 1.0        # >= 1 disables; else minimal nucleus
+    seed: int = 0
+
+    def validate(self):
+        """Bounds match the per-slot knob dtypes (serve.sampling): values
+        outside them would overflow the slot arrays at admission time."""
+        if not self.temperature >= 0:          # NaN fails this too
+            raise ValueError("temperature must be >= 0 and not NaN")
+        if not 0 <= self.top_k <= 2**31 - 1:
+            raise ValueError("top_k must be in [0, 2**31)")
+        if self.top_p <= 0:
+            raise ValueError("top_p must be > 0 (>= 1 disables the filter)")
+        if not 0 <= self.seed <= 2**32 - 1:
+            raise ValueError("seed must be a uint32 (in [0, 2**32))")
+        return self
+
+
 # The four assigned input-shape regimes
 SHAPES = {
     "train_4k": dict(kind="train", seq_len=4096, global_batch=256),

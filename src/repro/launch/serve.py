@@ -4,12 +4,15 @@
         --smoke --requests 16 --slots 4 --prompt-len 32 --gen 32
 
 The engine admits requests of mixed prompt/generation lengths into a
-fixed-capacity slot batch: prompts are consumed by the chunked prefill
-(one ``linear_scan`` per chunk for the O(1)-state mixers — the paper's
-edge-inference property), decode is ONE jitted slot-batch step per token,
-and finished sequences retire the step they complete so their slots go
-straight back into circulation.  ``--baseline`` runs the old static-batch
-loop instead (kept as the benchmark reference).
+fixed-capacity slot batch: prompts are consumed by the grid-padded
+chunked prefill (one ``linear_scan`` per chunk for the O(1)-state mixers
+— the paper's edge-inference property — and exactly one compiled chunk
+shape across ragged prompt lengths), decode is ONE jitted slot-batch step
+per token, and finished sequences retire the step they complete so their
+slots go straight back into circulation.  ``--temperature/--top-k/--top-p``
+turn on per-request sampling (counter-based PRNG: reproducible per
+request, same compiled step as greedy).  ``--baseline`` runs the old
+static-batch loop instead (kept as the benchmark reference).
 """
 from __future__ import annotations
 
@@ -21,7 +24,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import ServeConfig, get_config
+from repro.configs import SamplingParams, ServeConfig, get_config
 from repro.models import build_model
 from repro.serve import DecoderStepModel, ServeEngine
 
@@ -75,6 +78,15 @@ def main(argv=None):
     ap.add_argument("--scan-backend", default=None,
                     choices=[None, "seq", "xla", "pallas", "pallas_tpu"],
                     help="linear-scan backend for recurrent prefill")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="sampling temperature (0 = greedy argmax)")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="top-k filter (0 disables)")
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="nucleus mass (1.0 disables)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="per-request PRNG seed base (request i uses "
+                         "seed+i; decoding is reproducible per request)")
     ap.add_argument("--baseline", action="store_true",
                     help="run the static-batch loop instead of the engine")
     args = ap.parse_args(argv)
@@ -115,8 +127,13 @@ def main(argv=None):
                        ServeConfig(slots=args.slots, max_len=max_len,
                                    prefill_chunk=args.prefill_chunk))
     t0 = time.time()
-    for p, g in zip(prompts, glens):
-        eng.submit(p, max_new_tokens=int(g))
+    for i, (p, g) in enumerate(zip(prompts, glens)):
+        sampling = None
+        if args.temperature > 0:
+            sampling = SamplingParams(temperature=args.temperature,
+                                      top_k=args.top_k, top_p=args.top_p,
+                                      seed=args.seed + i)
+        eng.submit(p, max_new_tokens=int(g), sampling=sampling)
     done = eng.run()
     dt = time.time() - t0
     total = int(plens.sum() + glens.sum())

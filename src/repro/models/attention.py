@@ -150,28 +150,66 @@ class GQAAttention(Module):
         return {"k": a, "v": a}
 
     def can_prefill(self):
-        # ring-buffer chunk writes can wrap within a chunk; the sliding-
-        # window cache keeps the scanned per-token fallback for now.
-        return not self.local
+        return True
 
-    def prefill(self, params, x, cache, pos0):
-        """Chunk prefill (global attention): bulk-write K/V for positions
-        [pos0, pos0+S) and attend causally against the whole cache."""
-        assert not self.local, "sliding-window prefill uses the decode path"
+    def prefill(self, params, x, cache, pos0, length=None):
+        """Chunk prefill.  Tokens at in-chunk index >= ``length`` are grid
+        padding: masked out of attention and never written to the cache
+        (``length=None`` means the whole chunk is valid).
+
+        Global: scatter K/V at absolute positions [pos0, pos0+length) and
+        attend causally against the whole cache.  Sliding-window: attend
+        each query against (ring snapshot ++ in-chunk K/V), then perform a
+        wrap-aware masked ring scatter of the last min(L, length) valid
+        tokens — exactly one writer per ring slot, so chunk writes that
+        cross the ring boundary neither clobber live entries nor skip
+        slots (the ROADMAP wrap bug)."""
         B, S, _ = x.shape
+        if length is None:
+            length = jnp.int32(S)
         positions = pos0 + jnp.arange(S)
         q, k, v = self._qkv(params, x,
                             jnp.broadcast_to(positions, (B, S)))
-        ck = jax.lax.dynamic_update_slice_in_dim(
-            cache["k"], k.astype(cache["k"].dtype), pos0, axis=1)
-        cv = jax.lax.dynamic_update_slice_in_dim(
-            cache["v"], v.astype(cache["v"].dtype), pos0, axis=1)
-        L = ck.shape[1]
-        k_pos = jnp.arange(L)
-        mask = jnp.where(k_pos[None, :] <= positions[:, None], 0.0,
-                         NEG_INF)[None, None]            # (1, 1, S, L)
-        mask = jnp.broadcast_to(mask, (B, 1, S, L))
-        out = _sdpa(q, ck.astype(q.dtype), cv.astype(q.dtype), mask)
+        L = cache["k"].shape[1]
+        i = jnp.arange(S)
+        valid = i < length
+        if not self.local:
+            # index L is out of bounds -> the scatter drops padding writes
+            idx = jnp.where(valid & (positions < L), positions, L)
+            ck = cache["k"].at[:, idx].set(k.astype(cache["k"].dtype))
+            cv = cache["v"].at[:, idx].set(v.astype(cache["v"].dtype))
+            k_pos = jnp.arange(L)
+            mask = jnp.where(k_pos[None, :] <= positions[:, None], 0.0,
+                             NEG_INF)[None, None]        # (1, 1, S, L)
+            mask = jnp.broadcast_to(mask, (B, 1, S, L))
+            out = _sdpa(q, ck.astype(q.dtype), cv.astype(q.dtype), mask)
+        else:
+            # the ring retains only L positions, so the effective window
+            # matches the scanned decode path: min(window, L)
+            W = min(self.window, L)
+            # ring snapshot: entry j holds the latest position <= pos0-1
+            # congruent to j (mod L); queries may not see entries this
+            # chunk is about to overwrite, hence snapshot-then-write
+            j = jnp.arange(L)
+            ring_pos = (pos0 - 1) - ((pos0 - 1 - j) % L)
+            ring_m = ((ring_pos >= 0) & (pos0 >= 1))[None, :] \
+                & (positions[:, None] - ring_pos[None, :] < W)
+            in_m = ((positions[None, :] <= positions[:, None])
+                    & (positions[:, None] - positions[None, :] < W)
+                    & valid[None, :])
+            mask = jnp.where(jnp.concatenate([ring_m, in_m], axis=1),
+                             0.0, NEG_INF)               # (S, L+S)
+            mask = jnp.broadcast_to(mask[None, None], (B, 1, S, L + S))
+            kk = jnp.concatenate([cache["k"].astype(q.dtype), k], axis=1)
+            vv = jnp.concatenate([cache["v"].astype(q.dtype), v], axis=1)
+            out = _sdpa(q, kk, vv, mask)
+            # ring write: of the valid tokens, only the last L survive a
+            # wrap — dropping the aliased older ones keeps one writer per
+            # slot (duplicate-index scatter order is unspecified)
+            wmask = valid & (i >= length - L)
+            idx = jnp.where(wmask, (pos0 + i) % L, L)
+            ck = cache["k"].at[:, idx].set(k.astype(cache["k"].dtype))
+            cv = cache["v"].at[:, idx].set(v.astype(cache["v"].dtype))
         y = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
         return y, {"k": ck, "v": cv}
 
@@ -301,6 +339,46 @@ class MLAAttention(Module):
         return jax.tree_util.tree_map(
             lambda s: jnp.zeros(s.shape, s.dtype),
             self.cache_spec(batch, length, dtype))
+
+    def can_prefill(self):
+        return True
+
+    def prefill(self, params, x, cache, pos0, length=None):
+        """Chunk prefill with the compressed latent cache: scatter the
+        chunk's latents at absolute positions [pos0, pos0+length), then run
+        the same weight-absorbed attention as ``decode`` for all S queries
+        at once (identical math, batched over the chunk).  Tokens at
+        in-chunk index >= ``length`` are grid padding — never written, and
+        causally masked for every valid query."""
+        c, m = self.cfg, self.m
+        B, S, _ = x.shape
+        if length is None:
+            length = jnp.int32(S)
+        positions = pos0 + jnp.arange(S)
+        q_nope, q_rope, ckv, k_rope = self._latents(
+            params, x, jnp.broadcast_to(positions, (B, S)))
+        L = cache["ckv"].shape[1]
+        i = jnp.arange(S)
+        # index L is out of bounds -> the scatter drops padding writes
+        idx = jnp.where((i < length) & (positions < L), positions, L)
+        cc = cache["ckv"].at[:, idx].set(ckv.astype(cache["ckv"].dtype))
+        cr = cache["krope"].at[:, idx].set(
+            k_rope.astype(cache["krope"].dtype))
+        w_uk = params["w_ukv"][:, :, :m.qk_nope_head_dim].astype(x.dtype)
+        w_uv = params["w_ukv"][:, :, m.qk_nope_head_dim:].astype(x.dtype)
+        q_abs = jnp.einsum("bshk,rhk->bshr", q_nope, w_uk)
+        scale = 1.0 / math.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+        scores = (jnp.einsum("bshr,blr->bhsl", q_abs, cc.astype(x.dtype))
+                  + jnp.einsum("bshk,blk->bhsl", q_rope,
+                               cr.astype(x.dtype)))
+        mask = jnp.where(jnp.arange(L)[None, :] <= positions[:, None],
+                         0.0, NEG_INF)[None, None]       # (1, 1, S, L)
+        w = jax.nn.softmax(scores.astype(jnp.float32) * scale + mask,
+                           -1).astype(x.dtype)
+        o_latent = jnp.einsum("bhsl,blr->bshr", w, cc.astype(x.dtype))
+        out = jnp.einsum("bshr,rhk->bshk", o_latent, w_uv)
+        y = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
+        return y, {"ckv": cc, "krope": cr}
 
     def decode(self, params, x, cache, pos):
         c, m = self.cfg, self.m

@@ -114,9 +114,12 @@ class MambaBlock(Module):
     # --- prefill: whole chunk against the O(1) carry ---
     can_prefill = True
 
-    def prefill(self, params, x, cache, pos0):
+    def prefill(self, params, x, cache, pos0, length=None):
         """x: (B, S, D); cache {"ssm": (B,di,n), "conv": (B,d_conv-1,di)}.
-        One linear_scan over the chunk, conv warmed from the cached tail."""
+        One linear_scan over the chunk, conv warmed from the cached tail.
+        ``length`` selects the carries at the last VALID token when the
+        chunk tail is grid padding (scan and conv are causal, so padded
+        inputs never contaminate the selected carry)."""
         del pos0
         B, T, _ = x.shape
         mc, di, n = self.mc, self.d_inner, self.mc.d_state
@@ -138,11 +141,21 @@ class MambaBlock(Module):
         y = y + params["d_skip"].astype(x.dtype) * xc
         y = y * jax.nn.silu(z)
         y = (y @ params["w_out"].astype(x.dtype)).astype(x.dtype)
-        new_cache = {
+        if length is None:
             # hist is (B, T + d_conv - 1, di); keep the LAST d_conv-1 rows
             # (start index T, so d_conv == 1 yields an empty slice, not -0)
-            "ssm": h[:, -1].reshape(B, di, n).astype(cache["ssm"].dtype),
-            "conv": hist[:, T:, :].astype(cache["conv"].dtype),
+            ssm_c, conv_c = h[:, -1], hist[:, T:, :]
+        else:
+            # carries at the last valid token: ssm state after position
+            # length-1, conv tail = the d_conv-1 inputs before `length`
+            # (hist rows [length, length + d_conv - 1))
+            ssm_c = jax.lax.dynamic_index_in_dim(h, length - 1, axis=1,
+                                                 keepdims=False)
+            conv_c = jax.lax.dynamic_slice_in_dim(hist, length,
+                                                  mc.d_conv - 1, axis=1)
+        new_cache = {
+            "ssm": ssm_c.reshape(B, di, n).astype(cache["ssm"].dtype),
+            "conv": conv_c.astype(cache["conv"].dtype),
         }
         return y, new_cache
 

@@ -84,11 +84,19 @@ class MinGRUMixer(Module):
 
     can_prefill = True
 
-    def prefill(self, params, x, cache, pos0):
-        """Chunk prefill: ONE linear_scan over the chunk, O(1) carry."""
+    def prefill(self, params, x, cache, pos0, length=None):
+        """Chunk prefill: ONE linear_scan over the chunk, O(1) carry.
+        ``length`` selects the carry at the last VALID token when the
+        chunk tail is grid padding (the scan is causal, so padded inputs
+        never reach h[length-1])."""
         del pos0
         out, h = self.block(params, x, h0=cache["h"].astype(x.dtype))
-        return out, {"h": h[:, -1].astype(cache["h"].dtype)}
+        if length is None:
+            carry = h[:, -1]
+        else:
+            carry = jax.lax.dynamic_index_in_dim(h, length - 1, axis=1,
+                                                 keepdims=False)
+        return out, {"h": carry.astype(cache["h"].dtype)}
 
 
 def _make_mixer(cfg: ModelConfig, spec: LayerSpec, dtype):
@@ -163,10 +171,12 @@ class DecoderLayer(Module):
             params["mixer"], self.norm1(params["norm1"], x), cache, pos)
         return self._mlp_tail(params, x + h), new_cache
 
-    def prefill(self, params, x, cache, pos0):
-        """Consume a whole chunk (B, S, D) against the cache in one call."""
+    def prefill(self, params, x, cache, pos0, length=None):
+        """Consume a whole chunk (B, S, D) against the cache in one call.
+        ``length`` = number of valid (non-grid-padding) leading tokens."""
         h, new_cache = self.mixer.prefill(
-            params["mixer"], self.norm1(params["norm1"], x), cache, pos0)
+            params["mixer"], self.norm1(params["norm1"], x), cache, pos0,
+            length=length)
         return self._mlp_tail(params, x + h), new_cache
 
     def can_prefill(self):
@@ -367,16 +377,19 @@ class DecoderLM(Module):
         otherwise — e.g. sliding-window or MLA attention stacks)."""
         return all(l.can_prefill() for _, l, _ in self._all_layers())
 
-    def prefill(self, params, tokens, cache, pos0):
+    def prefill(self, params, tokens, cache, pos0, length=None):
         """Consume a prompt chunk. tokens: (B, S); pos0: scalar int (first
-        absolute position of the chunk). Returns (last-token logits
-        (B, 1, V), new cache) — the cache carry feeds decode_step (or the
-        next chunk)."""
+        absolute position of the chunk); length: number of valid leading
+        tokens (None = all S; the rest are grid padding that every layer
+        masks out of its cache update). Returns (logits at the last VALID
+        token (B, 1, V), new cache) — the cache carry feeds decode_step
+        (or the next chunk)."""
         x = self.embed(params["embed"], tokens).astype(self.compute_dtype())
         new_cache = dict(cache)
         for l in self.head_layers:
             x, new_cache[l.name] = l.prefill(params[l.name], x,
-                                             cache[l.name], pos0)
+                                             cache[l.name], pos0,
+                                             length=length)
         if self.scan_layers:
             def body(carry, rep):
                 h = carry
@@ -384,7 +397,8 @@ class DecoderLM(Module):
                 out_cache = {}
                 for l in self.unit_layers:
                     h, out_cache[l.name] = l.prefill(
-                        rep_params[l.name], h, rep_cache[l.name], pos0)
+                        rep_params[l.name], h, rep_cache[l.name], pos0,
+                        length=length)
                 return h, out_cache
 
             stacked_p = {l.name: params[l.name] for l in self.unit_layers}
@@ -397,11 +411,17 @@ class DecoderLM(Module):
                 for l in self.unit_layers:
                     nm = f"{l.name}_r{r}"
                     x, new_cache[nm] = l.prefill(params[nm], x,
-                                                 cache[nm], pos0)
+                                                 cache[nm], pos0,
+                                                 length=length)
         for l in self.tail_layers:
             x, new_cache[l.name] = l.prefill(params[l.name], x,
-                                             cache[l.name], pos0)
-        x = self.final_norm(params["final_norm"], x[:, -1:, :])
+                                             cache[l.name], pos0,
+                                             length=length)
+        if length is None:
+            x = x[:, -1:, :]
+        else:
+            x = jax.lax.dynamic_slice_in_dim(x, length - 1, 1, axis=1)
+        x = self.final_norm(params["final_norm"], x)
         head = params["embed"] if self.cfg.tie_embeddings else params["lm_head"]
         return self.embed.attend(head, x), new_cache
 

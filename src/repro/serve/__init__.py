@@ -9,14 +9,21 @@ StepModel protocol with per-slot position tracking.
 
   * :mod:`repro.serve.protocol` — the StepModel contract + adapters for
     DecoderLM (LM generation) and MinimalistNetwork (frame streaming)
-  * :mod:`repro.serve.prefill`  — chunked prompt prefill (one linear_scan
-    per chunk instead of a per-token Python loop)
+  * :mod:`repro.serve.sampling` — per-request temperature/top-k/top-p
+    with a counter-based PRNG (fold_in(seed, uid, pos)): reproducible
+    per request, retrace-free in the slot batch
+  * :mod:`repro.serve.prefill`  — grid-padded masked chunked prefill
+    (one linear_scan / K-V block write per chunk; exactly one compiled
+    chunk shape across ragged prompt lengths)
   * :mod:`repro.serve.engine`   — the fixed-capacity slot scheduler
 """
+from repro.configs.base import SamplingParams
 from repro.serve.engine import Request, ServeEngine
 from repro.serve.prefill import chunked_prefill
 from repro.serve.protocol import (DecoderStepModel, MinimalistStepModel,
                                   StepModel)
+from repro.serve.sampling import sample_tokens
 
-__all__ = ["Request", "ServeEngine", "chunked_prefill", "StepModel",
-           "DecoderStepModel", "MinimalistStepModel"]
+__all__ = ["Request", "SamplingParams", "ServeEngine", "chunked_prefill",
+           "sample_tokens", "StepModel", "DecoderStepModel",
+           "MinimalistStepModel"]

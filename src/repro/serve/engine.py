@@ -17,7 +17,12 @@ Two request flavors, selected by the StepModel:
 
   * autoregressive (DecoderLM): the prompt is prefilled in chunks at
     admission; emitted tokens feed back as the next input until
-    ``max_new_tokens`` (or ``eos_id``) is reached.
+    ``max_new_tokens`` (or ``eos_id``) is reached.  Each request may
+    carry :class:`~repro.configs.base.SamplingParams` — the knobs ride
+    as per-slot arrays through the one jitted decode step (greedy and
+    sampled traffic share a single compiled program), and the PRNG is
+    counter-based (fold_in(seed, uid, pos)) so a request's tokens are
+    reproducible regardless of co-batched traffic.
   * streaming (MinimalistNetwork): input frames are fed one per step —
     the paper's edge case where samples arrive in real time — and every
     per-frame output is recorded; the request retires when its stream is
@@ -32,6 +37,20 @@ from typing import Any, List, Optional
 import jax.numpy as jnp
 import numpy as np
 
+from repro.common import pow2ceil
+from repro.configs.base import SamplingParams
+from repro.serve.sampling import KNOB_DTYPES, KNOB_GREEDY
+
+_GREEDY = SamplingParams()
+
+
+def _knob_values(req):
+    """A request's per-slot knob values (schema: sampling.KNOB_DTYPES)."""
+    sp = req.sampling
+    return {"seed": sp.seed, "uid": req.uid & 0x7FFFFFFF,
+            "temperature": sp.temperature, "top_k": sp.top_k,
+            "top_p": sp.top_p}
+
 
 @dataclasses.dataclass
 class Request:
@@ -39,6 +58,7 @@ class Request:
     prompt: np.ndarray                 # (P,) int32 tokens | (P, d_in) frames
     max_new_tokens: int = 0            # 0 for pure streaming requests
     eos_id: Optional[int] = None
+    sampling: SamplingParams = _GREEDY
     # filled by the engine:
     outputs: List[Any] = dataclasses.field(default_factory=list)
     finished: bool = False
@@ -65,6 +85,10 @@ class ServeEngine:
         self.pos = np.zeros(self.slots, np.int32)
         self.remaining = np.zeros(self.slots, np.int64)
         self.active = np.zeros(self.slots, bool)
+        # per-slot sampling knobs: plain DATA through the one jitted step
+        # (greedy defaults; a sampled request overwrites them at admission)
+        self.knobs = {k: np.full(self.slots, KNOB_GREEDY[k], KNOB_DTYPES[k])
+                      for k in KNOB_DTYPES}
         self._cur: Optional[np.ndarray] = None     # next input per slot
         self._uid = 0
         # telemetry
@@ -77,10 +101,18 @@ class ServeEngine:
     # submission / admission
     # ------------------------------------------------------------------
     def submit(self, prompt, max_new_tokens: int = 0,
-               eos_id: Optional[int] = None) -> Request:
+               eos_id: Optional[int] = None,
+               sampling: Optional[SamplingParams] = None) -> Request:
         prompt = np.asarray(prompt)
         if len(prompt) < 1:
             raise ValueError("empty prompt")
+        if sampling is None:
+            sampling = _GREEDY
+        else:
+            sampling.validate()
+            if not self.sm.autoregressive:
+                raise ValueError(
+                    "sampling only applies to autoregressive requests")
         if self.sm.autoregressive:
             assert prompt.ndim == 1 and max_new_tokens >= 1, \
                 "LM requests need a (P,) prompt and max_new_tokens >= 1"
@@ -93,7 +125,7 @@ class ServeEngine:
                     raise ValueError(
                         f"request needs {need} cache positions but the "
                         f"engine was built with max_len={self.sm.max_len}")
-        req = Request(self._uid, prompt, max_new_tokens, eos_id)
+        req = Request(self._uid, prompt, max_new_tokens, eos_id, sampling)
         self._uid += 1
         self.waiting.append(req)
         return req
@@ -107,16 +139,29 @@ class ServeEngine:
         self.free_mask = int(self.free_mask) | (1 << int(slot))
         self.slot_req[slot] = None
         self.active[slot] = False
+        for k, v in KNOB_GREEDY.items():
+            self.knobs[k][slot] = v
 
-    @staticmethod
-    def _pow2(n: int) -> int:
-        return 1 << (n - 1).bit_length()
+    def _set_sampling(self, slot: int, req: Request):
+        for k, v in _knob_values(req).items():
+            self.knobs[k][slot] = v
+
+    def _wave_sampling(self, group, pad_len):
+        """Per-request sampling knob arrays for an admission wave (padding
+        rows replicate the last request; their draws are discarded).
+        Built as numpy first so handing them to jit is a plain device put
+        (a list literal would trace a tiny convert program per wave size)."""
+        reqs = [r for r, _s in group]
+        reqs += [reqs[-1]] * (pad_len - len(group))
+        vals = [_knob_values(r) for r in reqs]
+        return {k: np.asarray([v[k] for v in vals], KNOB_DTYPES[k])
+                for k in KNOB_DTYPES}
 
     def _pad_slots(self, slots):
         """Pad an admission wave's slot list to a power of two with
         out-of-bounds indices — the scatter drops them, and jit compiles
         at most log2(slots) admission shapes per prompt-length bucket."""
-        padded = np.full(self._pow2(len(slots)), self.slots, np.int32)
+        padded = np.full(pow2ceil(len(slots)), self.slots, np.int32)
         padded[:len(slots)] = slots
         return padded
 
@@ -158,7 +203,12 @@ class ServeEngine:
             prompts += [prompts[-1]] * (len(pad) - len(group))
             last, carry = self.sm.prefill(self.params, np.stack(prompts))
             self.state = self.sm.write_slots(self.state, carry, pad)
-            tok0 = np.asarray(self.sm.emit(last))
+            # the wave's first generated token sits at position plen — its
+            # draw uses the same counter-based (seed, uid, pos) key family
+            # as the decode loop, so it is reproducible under any batching
+            tok0 = np.asarray(self.sm.sample(
+                last, self._wave_sampling(group, len(pad)),
+                np.full(len(pad), plen, np.int32)))
             for i, (req, slot) in enumerate(group):
                 t = int(tok0[i])
                 req.outputs.append(t)
@@ -166,6 +216,7 @@ class ServeEngine:
                 self.pos[slot] = plen
                 self.remaining[slot] = req.max_new_tokens - 1
                 self._cur[slot] = t
+                self._set_sampling(slot, req)
                 if self.remaining[slot] <= 0 or t == req.eos_id:
                     self._retire(slot)
 
@@ -186,8 +237,11 @@ class ServeEngine:
         active = jnp.asarray(self.active)
         pos = jnp.asarray(self.pos)
         x = jnp.asarray(self._cur)
+        sampling = None
+        if self.sm.autoregressive:
+            sampling = {k: jnp.asarray(v) for k, v in self.knobs.items()}
         out, self.state = self.sm.step(self.params, x, self.state, pos,
-                                       active)
+                                       active, sampling)
         emitted = np.asarray(out)
         self.n_steps += 1
         for slot in np.flatnonzero(self.active):

@@ -1,19 +1,26 @@
 """Chunked prompt prefill.
 
-Replaces the per-token Python prefill loop of the old ``launch.serve`` with
-at most two compiled programs per prompt-length class:
+Two program families per prompt-length class:
 
-  * fast path — the model consumes a whole chunk per call
-    (``DecoderLM.prefill``): each O(1)-state mixer runs ONE ``linear_scan``
-    over the chunk (backend-selectable via ``ModelConfig.scan_backend``:
-    seq / xla / pallas / pallas_tpu) and global attention bulk-writes its
-    K/V block.  The final carry feeds the decode loop.
-  * fallback — stacks with a mixer that cannot consume chunks against its
-    cache (sliding-window rings, MLA) run a ``lax.scan`` of single-token
-    ``decode_step`` calls: still one XLA program, no Python-level loop.
+  * fast path (default) — **grid-padded masked prefill**: the prompt is
+    padded up to a multiple of ``chunk`` and consumed as equal-shape
+    chunks by ``DecoderLM.prefill``; the number of VALID tokens in each
+    chunk rides along as a traced scalar, so every layer masks the
+    padding out of its cache update inside ONE compiled program.  Each
+    O(1)-state mixer runs ONE ``linear_scan`` per chunk
+    (backend-selectable via ``ModelConfig.scan_backend``), global
+    attention scatter-writes its K/V block, sliding-window attention does
+    a wrap-aware masked ring scatter, and MLA scatter-writes its latent
+    cache.  Any prompt length compiles exactly one chunk shape — the
+    remainder-shape compile class is gone.
+  * fallback — a ``lax.scan`` of single-token ``decode_step`` calls:
+    still one XLA program, no Python-level loop.  Kept as the
+    definitional reference (``force_scan=True``) and for any future
+    mixer without a chunk path.
 
-Prompts are split into ``chunk``-sized pieces plus one remainder piece, so
-any prompt length compiles at most two chunk shapes.
+``pad_to_grid=False`` restores the legacy remainder behavior (chunk
+pieces + one ragged remainder piece, one compile per distinct remainder)
+— retained for the padded-vs-remainder benchmark comparison.
 """
 from __future__ import annotations
 
@@ -22,8 +29,9 @@ import jax.numpy as jnp
 
 
 def _fast_prefill_fn(model):
-    def run(params, tokens, cache, pos0):
-        logits, cache = model.prefill(params, tokens, cache, pos0)
+    def run(params, tokens, cache, pos0, length):
+        logits, cache = model.prefill(params, tokens, cache, pos0,
+                                      length=length)
         return logits[:, -1, :], cache
     return run
 
@@ -51,26 +59,38 @@ def _scan_prefill_fn(model):
     return run
 
 
-def chunked_prefill(step_model, params, tokens, *, chunk=256, pos0=0):
-    """Consume a whole prompt. tokens: (B, P) -> (last logits (B, V_pad),
-    cache carry with batch B) ready for the decode loop."""
+def chunked_prefill(step_model, params, tokens, *, chunk=256, pos0=0,
+                    pad_to_grid=True, force_scan=False):
+    """Consume a whole prompt. tokens: (B, P) -> (last-valid-token logits
+    (B, V_pad), cache carry with batch B) ready for the decode loop."""
     model = step_model.model
+    tokens = jnp.asarray(tokens, jnp.int32)
     B, P = tokens.shape
-    if model.supports_prefill():
-        if step_model._jit_prefill_fast is None:
-            step_model._jit_prefill_fast = jax.jit(_fast_prefill_fn(model))
-        fn = step_model._jit_prefill_fast
-    else:
-        if step_model._jit_prefill_scan is None:
-            step_model._jit_prefill_scan = jax.jit(_scan_prefill_fn(model))
-        fn = step_model._jit_prefill_scan
+    chunk = max(1, int(chunk))
     tmpl = step_model._cache_templates
     if B not in tmpl:   # zeros are immutable and never donated: reusable
         tmpl[B] = model.init_cache(B, step_model.max_len)
     cache = tmpl[B]
-    chunk = max(1, int(chunk))
+    if force_scan or not model.supports_prefill():
+        if step_model._jit_prefill_scan is None:
+            step_model._jit_prefill_scan = jax.jit(_scan_prefill_fn(model))
+        fn = step_model._jit_prefill_scan
+        last = None
+        for start in range(0, P, chunk):
+            piece = tokens[:, start:start + chunk]
+            last, cache = fn(params, piece, cache, jnp.int32(pos0 + start))
+        return last, cache
+    if step_model._jit_prefill_fast is None:
+        step_model._jit_prefill_fast = jax.jit(_fast_prefill_fn(model))
+    fn = step_model._jit_prefill_fast
+    if pad_to_grid and P % chunk:
+        tokens = jnp.pad(tokens, ((0, 0), (0, chunk - P % chunk)))
     last = None
-    for start in range(0, P, chunk):
+    for start in range(0, tokens.shape[1], chunk):
         piece = tokens[:, start:start + chunk]
-        last, cache = fn(params, piece, cache, jnp.int32(pos0 + start))
+        # valid-token count is a TRACED scalar: every chunk of a given
+        # width shares one compiled program regardless of padding
+        valid = min(P - start, piece.shape[1])
+        last, cache = fn(params, piece, cache, jnp.int32(pos0 + start),
+                         jnp.int32(valid))
     return last, cache

@@ -7,10 +7,18 @@ slot-batched recurrent state (every leaf carries the slot axis first):
   * ``prefill(params, xs, pos0=0)``            — consume an admission
                                                  wave's prompts from a
                                                  fresh internal state
-  * ``step(params, x, state, pos, active)``    — one slot-batch decode
-                                                 step (vector pos/active)
-  * ``emit(out)``                              — output -> recorded value
-                                                 (and feedback for LMs)
+  * ``step(params, x, state, pos, active, sampling=None)``
+                                               — one slot-batch decode
+                                                 step (vector pos/active;
+                                                 per-slot sampling knobs,
+                                                 emitted value feeds back
+                                                 for LMs)
+
+LM adapters additionally expose ``sample(logits, sampling, pos)`` — the
+admission-wave token draw (the engine samples the first generated token
+from the prefill logits with the same counter-based keys the decode step
+uses).  ``emit(out)`` survives as an optional greedy-argmax debugging
+helper; the engine no longer calls it.
 
 Two adapters are provided:
 
@@ -30,7 +38,9 @@ import warnings
 import jax
 import jax.numpy as jnp
 
+from repro.common import pow2ceil
 from repro.configs.base import ATTN, ATTN_LOCAL, MLA
+from repro.serve.sampling import greedy_arrays, sample_tokens
 
 
 class StepModel:
@@ -48,14 +58,18 @@ class StepModel:
         (last_out (B, …), carry state with batch B)."""
         raise NotImplementedError
 
-    def step(self, params, x, state, pos, active):
+    def step(self, params, x, state, pos, active, sampling=None):
         """ONE slot-batch decode step.  Returns (emitted, merged_state):
         the emitted value per slot (token id / output vector) and the
         state with inactive slots frozen — both produced inside a single
-        jitted program so the hot path is one dispatch + one host sync."""
+        jitted program so the hot path is one dispatch + one host sync.
+        ``sampling`` is a dict of per-slot knob ARRAYS (see
+        repro.serve.sampling) or None for all-greedy; either way the
+        same program runs — knobs are data, not trace constants."""
         raise NotImplementedError
 
     def emit(self, out):
+        """Optional: raw output -> recorded value (greedy debugging aid)."""
         raise NotImplementedError
 
     def write_slots(self, state, batch_state, slots):
@@ -114,7 +128,9 @@ class DecoderStepModel(StepModel):
                 "concurrent traffic and prefill chunking", stacklevel=2)
         self._jit_step = jax.jit(self._step_impl)
         self._jit_write = jax.jit(self._write_impl)
+        self._jit_sample = jax.jit(self._sample_impl)
         self.emit = jax.jit(self._emit_impl)
+        self._greedy = {}           # per-batch greedy sampling arrays
         # populated lazily by serve.prefill.chunked_prefill
         self._jit_prefill_fast = None
         self._jit_prefill_scan = None
@@ -131,13 +147,18 @@ class DecoderStepModel(StepModel):
 
     # -- prefill (an admission wave of same-length prompts) -------------
     def prefill(self, params, xs, pos0=0):
-        """xs: (B, P) int32 prompts.  Chunked via serve.prefill."""
+        """xs: (B, P) int32 prompts.  Grid-padded chunking via
+        serve.prefill, with the chunk capped at the next power of two of
+        the prompt: a 10-token prompt pays a 16-wide chunk, not the full
+        ``prefill_chunk`` — padding waste stays < 2x while the chunk
+        program family stays log2-bounded (each width compiles once and
+        serves every prompt length that buckets to it)."""
         from repro.serve.prefill import chunked_prefill
-        return chunked_prefill(self, params, xs,
-                               chunk=self.prefill_chunk, pos0=pos0)
+        chunk = min(self.prefill_chunk, pow2ceil(xs.shape[1]))
+        return chunked_prefill(self, params, xs, chunk=chunk, pos0=pos0)
 
     # -- decode ---------------------------------------------------------
-    def _step_impl(self, params, tok, state, pos, active):
+    def _step_impl(self, params, tok, state, pos, active, samp):
         if not self.positional:
             logits, new_state = self.model.decode_step(
                 params, tok[:, None], state, jnp.int32(0))
@@ -153,14 +174,46 @@ class DecoderStepModel(StepModel):
             logits, new_state = vstep(params, tok[:, None, None], state, pos)
             logits = logits[:, 0, -1, :]
             merged = masked_update(state, new_state, active)
-        return self._emit_impl(logits), merged
+        # the token produced from input position p lands at position p+1 —
+        # the PRNG key folds in the GENERATED token's position, so the
+        # admission-sampled first token (at pos = prompt length) and the
+        # decode stream never collide on a counter value
+        return self._sample_impl(logits, samp, pos + 1), merged
 
-    def step(self, params, tok, state, pos, active):
-        """tok: (slots,) int32; pos, active: (slots,)."""
-        return self._jit_step(params, tok, state, pos, active)
+    def step(self, params, tok, state, pos, active, sampling=None):
+        """tok: (slots,) int32; pos, active: (slots,); sampling: dict of
+        per-slot knob arrays (None -> all-greedy arrays of the same
+        dtypes, so greedy/sampled traffic share ONE compiled program)."""
+        if sampling is None:
+            n = int(tok.shape[0])
+            if n not in self._greedy:
+                self._greedy[n] = greedy_arrays(n)
+            sampling = self._greedy[n]
+        return self._jit_step(params, tok, state, pos, active, sampling)
+
+    def _sample_impl(self, logits, samp, pos):
+        """Per-row counter-keyed sampling over the REAL vocab; greedy rows
+        (temperature <= 0) take the argmax path inside the same program.
+        A runtime cond skips the whole stochastic pipeline (sorts, PRNG)
+        when EVERY slot is greedy, so all-greedy traffic keeps the plain
+        argmax hot path without a second compiled program."""
+        lg = logits[..., :self.vocab].astype(jnp.float32)
+        return jax.lax.cond(
+            jnp.any(samp["temperature"] > 0.0),
+            lambda: sample_tokens(lg, samp["seed"], samp["uid"], pos,
+                                  samp["temperature"], samp["top_k"],
+                                  samp["top_p"]),
+            lambda: jnp.argmax(lg, -1).astype(jnp.int32))
+
+    def sample(self, logits, sampling, pos):
+        """Draw one token per row of ``logits`` (admission-wave shape)."""
+        return self._jit_sample(logits, sampling, jnp.asarray(pos,
+                                                              jnp.int32))
 
     def _emit_impl(self, logits):
-        """Greedy over the REAL vocab (ignore Megatron padding columns)."""
+        """Greedy over the REAL vocab (ignore Megatron padding columns).
+        Kept as a debugging helper — the serving paths go through
+        sample()/step(), whose greedy branch is this same argmax."""
         return jnp.argmax(logits[..., :self.vocab], -1).astype(jnp.int32)
 
     # -- slot writes ----------------------------------------------------
@@ -251,8 +304,10 @@ class MinimalistStepModel(StepModel):
         out, new_state = self._raw_step(params, x, state)
         return out, masked_update(state, new_state, active)
 
-    def step(self, params, x, state, pos, active):
-        """x: (slots, d_in) frames; pos unused (position-free)."""
+    def step(self, params, x, state, pos, active, sampling=None):
+        """x: (slots, d_in) frames; pos unused (position-free); sampling
+        ignored — frame streaming emits analog outputs, not tokens."""
+        del sampling
         if self.use_fused_kernel:
             self._export(params)        # host-side, once; jit sees constants
         return self._jit_step(params, x, state, pos, active)

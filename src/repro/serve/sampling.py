@@ -1,0 +1,89 @@
+"""Per-request stochastic decoding for the serving engine.
+
+Counter-based PRNG: every sampled token draws its randomness from
+
+    key = fold_in(fold_in(PRNGKey(seed), uid), pos)
+
+so a request's stream depends only on its own ``(seed, uid)`` and the
+absolute position of the token being generated — never on which other
+requests share the slot batch, how admission waves were grouped, or how
+many times the engine restarted a step.  The whole pipeline
+(temperature -> top-k -> top-p -> Gumbel draw) is pure elementwise math
+over the slot axis (one ``vmap``), so it lives INSIDE the single jitted
+decode step: greedy and sampled traffic share one compiled program and
+per-slot knobs arrive as arrays, never as retrace-triggering constants.
+
+Filter semantics (matching the common serving convention):
+
+  * ``temperature <= 0`` — greedy argmax (the stochastic path is fully
+    bypassed for that slot).
+  * ``top_k > 0``        — keep logits >= the k-th largest value (ties at
+    the boundary are all kept); ``top_k == 0`` disables.
+  * ``top_p < 1``        — keep the MINIMAL nucleus: tokens are ranked by
+    probability and kept while the mass accumulated BEFORE a token is
+    still < top_p, so the kept set is the smallest prefix whose total
+    mass reaches top_p; ``top_p >= 1`` disables.
+
+Filters compose in that order on the temperature-scaled logits.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def request_key(seed, uid, pos):
+    """The counter-based per-token key: fold_in(seed, uid, pos)."""
+    key = jax.random.PRNGKey(seed)
+    return jax.random.fold_in(jax.random.fold_in(key, uid), pos)
+
+
+def _sample_row(logits, seed, uid, pos, temperature, top_k, top_p):
+    """One slot's token draw. logits: (V,) over the REAL vocab."""
+    V = logits.shape[-1]
+    logits = logits.astype(jnp.float32)
+    greedy_tok = jnp.argmax(logits).astype(jnp.int32)
+    scaled = logits / jnp.maximum(temperature, 1e-6)
+    # top-k: threshold at the k-th largest scaled logit
+    kth = jnp.sort(scaled)[::-1][jnp.clip(top_k, 1, V) - 1]
+    use_k = (top_k > 0) & (top_k < V)
+    scaled = jnp.where(use_k & (scaled < kth), -jnp.inf, scaled)
+    # top-p: minimal nucleus of the (possibly top-k-truncated) distribution
+    probs = jax.nn.softmax(scaled)
+    order = jnp.argsort(-probs)
+    mass_before = jnp.cumsum(probs[order]) - probs[order]
+    keep_sorted = (mass_before < jnp.clip(top_p, 1e-6, 1.0)) | (top_p >= 1.0)
+    keep = jnp.zeros((V,), bool).at[order].set(keep_sorted)
+    scaled = jnp.where(keep, scaled, -jnp.inf)
+    tok = jax.random.categorical(request_key(seed, uid, pos), scaled)
+    return jnp.where(temperature <= 0.0, greedy_tok, tok.astype(jnp.int32))
+
+
+#: Batched draw over the slot/wave axis.  All arguments are (B, …) arrays;
+#: each row is sampled independently from its own counter-based key, which
+#: is what makes a request's tokens reproducible under any co-batching.
+sample_tokens = jax.vmap(_sample_row)
+
+
+#: The per-slot knob schema.  Every producer of knob arrays (the engine's
+#: slot state, admission waves, greedy defaults) MUST use these dtypes —
+#: exact agreement is what keeps every traffic mix on ONE compiled decode
+#: step (a drifted dtype would silently retrace).
+KNOB_DTYPES = {
+    "seed": jnp.uint32,
+    "uid": jnp.int32,
+    "temperature": jnp.float32,
+    "top_k": jnp.int32,
+    "top_p": jnp.float32,
+}
+
+#: Knob values that reproduce greedy argmax.
+KNOB_GREEDY = {"seed": 0, "uid": 0, "temperature": 0.0, "top_k": 0,
+               "top_p": 1.0}
+
+
+def greedy_arrays(n):
+    """Per-slot sampling knobs that reproduce greedy argmax (the defaults
+    the engine installs in every slot until a sampled request claims it)."""
+    return {k: jnp.full((n,), KNOB_GREEDY[k], KNOB_DTYPES[k])
+            for k in KNOB_DTYPES}

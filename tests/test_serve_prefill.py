@@ -1,0 +1,189 @@
+"""Grid-padded masked chunked prefill (repro.serve.prefill): single-shape
+compile class, sliding-window ring wrap regression, and fast-path vs
+scanned-reference equivalence for every attention family.
+
+Equivalence checks compare tensors at bf16-appropriate tolerances, never
+greedy tokens across program families — cross-program one-ULP argmax ties
+flip tokens on random-init bf16 models (recorded from PR 1)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import MLA, LayerSpec, MLAConfig, ModelConfig
+from repro.models import build_model
+from repro.models.attention import GQAAttention
+from repro.serve import DecoderStepModel, chunked_prefill
+
+
+def _tree_allclose(a, b, atol, rtol):
+    jax.tree_util.tree_map(
+        lambda x, y: np.testing.assert_allclose(
+            np.asarray(x, np.float32), np.asarray(y, np.float32),
+            atol=atol, rtol=rtol), a, b)
+
+
+MLA_TEST_CFG = ModelConfig(
+    # MLA-only stack (no MoE: expert-capacity routing varies with chunking,
+    # which would confound a prefill-equivalence test)
+    name="mla-dense-test", d_model=32, n_layers=2, vocab=128,
+    n_heads=2, n_kv_heads=2, head_dim=16, d_ff=64,
+    pattern=(LayerSpec(MLA),),
+    mla=MLAConfig(q_lora_rank=16, kv_lora_rank=8, qk_nope_head_dim=8,
+                  qk_rope_head_dim=4, v_head_dim=8))
+
+
+# ---------------------------------------------------------------------------
+# compile class
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ["minimalist-lm-360m", "gemma3-4b"])
+def test_grid_padded_prefill_compiles_one_chunk_shape(arch):
+    """Ragged prompt lengths all flow through EXACTLY one compiled chunk
+    program (the remainder-shape compile class is gone); the legacy
+    remainder mode compiles one program per distinct remainder."""
+    cfg = get_config(arch + "-smoke")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    lens = (3, 5, 8, 13, 21)
+    full = {}
+    sm = DecoderStepModel(model, max_len=32, prefill_chunk=8)
+    for P in lens:
+        toks = rng.integers(0, cfg.vocab, size=(1, P))
+        last, _ = chunked_prefill(sm, params, toks, chunk=8)
+        full[P] = (toks, last)
+    assert sm._jit_prefill_fast._cache_size() == 1
+    # legacy remainder mode: every distinct remainder is its own program
+    legacy = DecoderStepModel(model, max_len=32, prefill_chunk=8)
+    for P in lens:
+        toks, last = full[P]
+        llast, _ = chunked_prefill(legacy, params, toks, chunk=8,
+                                   pad_to_grid=False)
+        np.testing.assert_allclose(np.asarray(llast, np.float32),
+                                   np.asarray(last, np.float32),
+                                   atol=0.05, rtol=0.05)
+    assert legacy._jit_prefill_fast._cache_size() > 1
+
+
+def test_padded_and_unpadded_prefill_agree():
+    """Grid padding is numerically inert: same last-token logits and same
+    cache carry as the legacy remainder chunking, for every stack kind."""
+    for arch in ("minimalist-lm-360m", "falcon-mamba-7b", "smollm-360m"):
+        cfg = get_config(arch + "-smoke")
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        toks = jax.random.randint(jax.random.PRNGKey(3), (2, 13), 0,
+                                  cfg.vocab)
+        sm = DecoderStepModel(model, max_len=24, prefill_chunk=8)
+        lp, cp = chunked_prefill(sm, params, toks, chunk=8)
+        lu, cu = chunked_prefill(sm, params, toks, chunk=8,
+                                 pad_to_grid=False)
+        np.testing.assert_allclose(np.asarray(lp, np.float32),
+                                   np.asarray(lu, np.float32),
+                                   atol=2e-2, rtol=2e-2)
+        _tree_allclose(cp, cu, 2e-2, 2e-2)
+
+
+# ---------------------------------------------------------------------------
+# sliding-window ring buffer
+# ---------------------------------------------------------------------------
+
+def test_sliding_window_chunk_write_wrap_regression():
+    """Chunk writes that cross the ring boundary neither clobber live
+    entries nor skip slots: the wrapped cache and the attention outputs
+    match the per-token decode reference exactly (same layer, f32)."""
+    cfg = get_config("gemma3-4b-smoke")          # window = 8
+    attn = GQAAttention(cfg, local=True)
+    params = attn.init(jax.random.PRNGKey(0))
+    L = 8
+    cache0 = attn.init_cache(1, L, dtype=jnp.float32)
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal((1, 16, cfg.d_model)),
+                    jnp.float32)
+    # reference: per-token decode through positions 0..15 (ring wraps at 8)
+    ref_cache, ref_y = cache0, []
+    for t in range(16):
+        y, ref_cache = attn.decode(params, x[:, t:t + 1], ref_cache,
+                                   jnp.int32(t))
+        ref_y.append(y[:, 0])
+    # chunked: positions 0..4, then a chunk 5..15 that wraps the ring
+    y1, cache = attn.prefill(params, x[:, :5], cache0, jnp.int32(0),
+                             length=jnp.int32(5))
+    y2, cache = attn.prefill(params, x[:, 5:], cache, jnp.int32(5),
+                             length=jnp.int32(11))
+    got_y = jnp.concatenate([y1, y2], axis=1)
+    np.testing.assert_allclose(np.asarray(got_y[0]),
+                               np.asarray(jnp.stack(ref_y, 1)[0]),
+                               atol=1e-5, rtol=1e-5)
+    _tree_allclose(cache, ref_cache, 1e-6, 1e-6)
+
+
+def test_sliding_window_masked_tail_never_written():
+    """Grid-padding tokens in a wrapping chunk must not scatter into ring
+    slots that still hold live positions."""
+    cfg = get_config("gemma3-4b-smoke")
+    attn = GQAAttention(cfg, local=True)
+    params = attn.init(jax.random.PRNGKey(0))
+    L = 8
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.standard_normal((1, 12, cfg.d_model)), jnp.float32)
+    cache = attn.init_cache(1, L, dtype=jnp.float32)
+    _, cache = attn.prefill(params, x[:, :6], cache, jnp.int32(0),
+                            length=jnp.int32(6))
+    # chunk of width 6 at pos0=6 with only 3 valid tokens: the padded
+    # tail (positions 9..11) would alias ring slots 1..3 (live: 1..3+8?)
+    # — slots of positions 1..3 — if the write mask leaked
+    _, got = attn.prefill(params, x[:, 6:], cache, jnp.int32(6),
+                          length=jnp.int32(3))
+    ref = attn.init_cache(1, L, dtype=jnp.float32)
+    for t in range(9):
+        _, ref = attn.decode(params, x[:, t:t + 1], ref, jnp.int32(t))
+    _tree_allclose(got, ref, 1e-6, 1e-6)
+
+
+# ---------------------------------------------------------------------------
+# fast path vs scanned reference (sliding window + MLA)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch,P,chunk", [
+    ("gemma3-4b", 21, 8),      # mixed local/global GQA, ring wraps (L=8)
+    ("gemma3-4b", 29, 12),     # chunk larger than the ring
+])
+def test_windowed_chunked_prefill_matches_scan(arch, P, chunk):
+    cfg = get_config(arch + "-smoke")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    assert model.supports_prefill()
+    sm = DecoderStepModel(model, max_len=P + 8, prefill_chunk=chunk)
+    toks = jax.random.randint(jax.random.PRNGKey(4), (2, P), 0, cfg.vocab)
+    lf, cf = chunked_prefill(sm, params, toks, chunk=chunk)
+    ls, cs = chunked_prefill(sm, params, toks, chunk=chunk,
+                             force_scan=True)
+    np.testing.assert_allclose(np.asarray(lf, np.float32),
+                               np.asarray(ls, np.float32),
+                               atol=0.05, rtol=0.05)
+    _tree_allclose(cf, cs, 0.05, 0.05)
+
+
+def test_mla_chunked_prefill_matches_scan_and_decode_continues():
+    model = build_model(MLA_TEST_CFG)
+    params = model.init(jax.random.PRNGKey(0))
+    assert model.supports_prefill()
+    sm = DecoderStepModel(model, max_len=32, prefill_chunk=8)
+    toks = jax.random.randint(jax.random.PRNGKey(5), (2, 11), 0,
+                              MLA_TEST_CFG.vocab)
+    lf, cf = chunked_prefill(sm, params, toks, chunk=8)
+    ls, cs = chunked_prefill(sm, params, toks, chunk=8, force_scan=True)
+    np.testing.assert_allclose(np.asarray(lf, np.float32),
+                               np.asarray(ls, np.float32),
+                               atol=0.05, rtol=0.05)
+    _tree_allclose(cf, cs, 0.05, 0.05)
+    # the carry feeds decode_step: both caches continue to close logits
+    nxt = jnp.argmax(lf[:, :MLA_TEST_CFG.vocab], -1)[:, None]
+    df, _ = model.decode_step(params, nxt, cf, jnp.int32(11))
+    ds, _ = model.decode_step(params, nxt, cs, jnp.int32(11))
+    np.testing.assert_allclose(np.asarray(df, np.float32),
+                               np.asarray(ds, np.float32),
+                               atol=0.05, rtol=0.05)
