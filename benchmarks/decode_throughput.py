@@ -16,7 +16,9 @@ Reported per batch size (default 1 / 64 / 256):
 and for the prefill comparison at prompt length >= 256:
   * chunked prefill (ONE linear_scan per chunk) vs the per-token loop
   * grid-padded chunking (one compiled chunk shape) vs legacy remainder
-    chunking across ragged prompt lengths, compile counts included.
+    chunking across ragged prompt lengths, compile counts included
+plus an MoE stack row (qwen3-moe smoke): batch-invariant auto dispatch
+(gather-GEMM decode + per-request prefill) vs pooled capacity dispatch.
 
     PYTHONPATH=src python -m benchmarks.decode_throughput \
         [--arch minimalist-lm-360m] [--batches 1,64,256] [--gen 16]
@@ -160,16 +162,13 @@ def _prefill_compare(model, params, cfg, P, chunk):
 def _attn_prefill_compare(P, chunk):
     """Sliding-window and MLA stacks: the new chunked fast path vs the
     scanned per-token prefill they used to fall back to (PR 2)."""
-    import warnings as _warnings
     rows = []
     for label, arch in (("windowed", "gemma3-4b"),
                         ("mla", "deepseek-v3-671b")):
         cfg = get_config(arch + "-smoke")
         model = build_model(cfg)
         params = model.init(jax.random.PRNGKey(0))
-        with _warnings.catch_warnings():
-            _warnings.simplefilter("ignore")   # deepseek smoke is MoE
-            sm = DecoderStepModel(model, max_len=P + 2, prefill_chunk=chunk)
+        sm = DecoderStepModel(model, max_len=P + 2, prefill_chunk=chunk)
         toks = jnp.asarray(np.random.default_rng(4).integers(
             0, cfg.vocab, size=(1, P)), jnp.int32)
         out = {}
@@ -214,6 +213,37 @@ def _grid_compare(model, params, cfg, P, chunk):
         out[mode] = time.perf_counter() - s0
         out[mode + "_compiles"] = sm._jit_prefill_fast._cache_size()
     return out
+
+
+def _moe_compare(batch=4, gen=8, prompt=16, chunk=8):
+    """MoE stack serving: batch-invariant auto dispatch (gather-GEMM
+    decode + per-request prefill) vs the pooled capacity dispatch the
+    training path uses — same engine, same traffic, tokens/s for both."""
+    import dataclasses
+    base = get_config("qwen3-moe-30b-a3b-smoke")
+    rows = []
+    out = {}
+    for mode in ("auto", "pooled"):
+        cfg = dataclasses.replace(
+            base, moe=dataclasses.replace(base.moe, dispatch=mode))
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        rng = np.random.default_rng(11)
+        prompts, glens = _workload(rng, cfg, 2 * batch, prompt, gen, chunk)
+        max_len = max(len(p) for p in prompts) + max(glens) + 1
+        sm = DecoderStepModel(model, max_len=max_len, prefill_chunk=chunk)
+        _warm_engine(sm, params, batch, [len(p) for p in prompts])
+        tps, lat, _eng = _run_engine(sm, params, prompts, glens, batch)
+        out[mode] = tps
+        rows.append({
+            "name": f"decode_moe/{mode}/batch{batch}",
+            "us_per_call": f"{np.median(lat)*1e6:.0f}",
+            "derived": f"tok_s={tps:.1f};"
+                       f"p50_ms={np.percentile(lat,50)*1e3:.2f}",
+        })
+    rows[-1]["derived"] += \
+        f";auto_vs_pooled={out['auto']/max(out['pooled'],1e-9):.2f}x"
+    return rows
 
 
 def run(arch="minimalist-lm-360m", batches=(1, 64, 256), gen=16,
@@ -272,6 +302,7 @@ def run(arch="minimalist-lm-360m", batches=(1, 64, 256), gen=16,
                        f"cold_speedup={g['remainder']/g['padded']:.1f}x",
         })
         rows.extend(_attn_prefill_compare(P, chunk=min(P, 128)))
+    rows.extend(_moe_compare(gen=gen))
     return emit(rows)
 
 

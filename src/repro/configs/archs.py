@@ -207,7 +207,8 @@ def reduced(cfg: ModelConfig) -> ModelConfig:
     )
     if cfg.moe:
         kw["moe"] = MoEConfig(n_experts=4, top_k=2, d_ff_expert=32,
-                              n_shared=cfg.moe.n_shared)
+                              n_shared=cfg.moe.n_shared,
+                              dispatch=cfg.moe.dispatch)
     if cfg.mla:
         kw["mla"] = MLAConfig(q_lora_rank=32, kv_lora_rank=16,
                               qk_nope_head_dim=16, qk_rope_head_dim=8,

@@ -21,6 +21,10 @@ MAMBA = "mamba"          # Mamba-1 selective SSM
 MINGRU = "mingru"        # paper's minGRU time-mixing block
 
 
+#: Legal values of :attr:`MoEConfig.dispatch`.
+MOE_DISPATCH_MODES = ("pooled", "per_request", "auto")
+
+
 @dataclasses.dataclass(frozen=True)
 class MoEConfig:
     n_experts: int
@@ -33,6 +37,33 @@ class MoEConfig:
     # each group's shard; only the combine's partial-sum crosses the mesh
     # (§Perf cell B). groups=1 reproduces single-pool dispatch.
     groups: int = 1
+    # How tokens reach their experts (see models.moe):
+    #   "pooled"      — every token of a call shares one capacity-limited
+    #                   dispatch (Switch-style drops, EP sharding, aux loss;
+    #                   the training semantics).  Routing depends on the
+    #                   co-batched tokens, so served outputs vary with
+    #                   concurrent traffic and prefill chunking.
+    #   "per_request" — tokens are grouped by request (batch row) at the
+    #                   drop-free capacity bound: routing is pure per-token
+    #                   top-k, independent of neighbors and of chunking.
+    #   "auto"        — training keeps "pooled"; serving prefill uses
+    #                   "per_request" and the slot-batch decode step uses
+    #                   the capacity-free gather-GEMM path.  This is the
+    #                   default: training semantics are untouched while
+    #                   serving becomes batch-invariant.
+    dispatch: str = "auto"
+
+    def __post_init__(self):
+        if self.dispatch not in MOE_DISPATCH_MODES:
+            raise ValueError(
+                f"dispatch must be one of {MOE_DISPATCH_MODES}, "
+                f"got {self.dispatch!r}")
+        if self.groups < 1:
+            raise ValueError(f"groups must be >= 1, got {self.groups}")
+        if not 1 <= self.top_k <= self.n_experts:
+            raise ValueError(
+                f"top_k must be in [1, n_experts={self.n_experts}], "
+                f"got {self.top_k}")
 
 
 @dataclasses.dataclass(frozen=True)

@@ -147,6 +147,7 @@ def optimized_cfg(cfg, mesh):
     if cfg.moe is not None:
         info = mesh_info(mesh)["axes"]
         dp = info.get("pod", 1) * info.get("data", 1)
+        # (dispatch is already pinned to "pooled" by lower_cell)
         kw["moe"] = dataclasses.replace(cfg.moe, groups=dp)
     return dataclasses.replace(cfg, **kw)
 
@@ -313,6 +314,14 @@ def lower_cell(arch: str, shape: str, mesh, *, remat="full", zero1=False,
                impl="baseline"):
     """Lower + compile one (arch, shape) on a mesh. Returns result dict."""
     cfg = get_config(arch)
+    if cfg.moe is not None:
+        # cost cells model the pooled EP capacity dispatch on every route
+        # (decode included): the serving-side gather-GEMM / per-request
+        # paths exist for batch-invariance, not as a production EP
+        # lowering, and would distort the HBM/FLOPs proof
+        import dataclasses
+        cfg = dataclasses.replace(cfg, moe=dataclasses.replace(
+            cfg.moe, dispatch="pooled"))
     if impl == "optimized":
         cfg = optimized_cfg(cfg, mesh)
     sh = SHAPES[shape]

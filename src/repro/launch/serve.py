@@ -78,6 +78,13 @@ def main(argv=None):
     ap.add_argument("--scan-backend", default=None,
                     choices=[None, "seq", "xla", "pallas", "pallas_tpu"],
                     help="linear-scan backend for recurrent prefill")
+    ap.add_argument("--moe-dispatch", default=None,
+                    choices=[None, "pooled", "per_request", "auto"],
+                    help="MoE dispatch mode (MoE stacks only): 'auto' "
+                         "(default) serves batch-invariantly — gather-GEMM "
+                         "decode + per-request prefill; 'pooled' reverts "
+                         "to the capacity-limited training dispatch, whose "
+                         "routing depends on co-batched traffic")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="sampling temperature (0 = greedy argmax)")
     ap.add_argument("--top-k", type=int, default=0,
@@ -97,6 +104,12 @@ def main(argv=None):
     cfg = get_config(args.arch + ("-smoke" if args.smoke else ""))
     if args.scan_backend:
         cfg = dataclasses.replace(cfg, scan_backend=args.scan_backend)
+    if args.moe_dispatch:
+        if cfg.moe is None:
+            ap.error(f"--moe-dispatch given but {cfg.name} has no MoE "
+                     "layers")
+        cfg = dataclasses.replace(cfg, moe=dataclasses.replace(
+            cfg.moe, dispatch=args.moe_dispatch))
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
 

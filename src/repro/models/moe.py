@@ -12,14 +12,59 @@ Design notes:
     all-to-all under SPMD — exactly a production EP dispatch.
   * Capacity-factor token dropping (standard at scale); dropped tokens pass
     through the residual stream untouched.
+
+Batch-invariant serving dispatch (``MoEConfig.dispatch``): the pooled
+path above makes a token's routing depend on every other token in the
+call — expert capacity is a function of the pool size, and drops depend
+on which neighbors compete for a full expert.  For serving that breaks
+the determinism contract (outputs would vary with co-batched traffic and
+prefill chunking), so two more dispatch paths exist:
+
+  * ``per_request`` — tokens are grouped by batch row (the serving
+    engine's request axis) at the drop-free capacity bound ``C = S``
+    (top-k ids are distinct, so one expert receives at most S tokens
+    from an S-token row): every token always reaches its top-k experts,
+    so routing is pure per-token top-k and independent of neighbors AND
+    of how the prompt was chunked.
+  * gather-GEMM (decode) — for single-token rows the capacity buffer
+    disappears entirely: each token gathers its k ``(D, F)`` expert
+    weight slices and runs k small GEMMs.  FLOPs scale with ``top_k``,
+    not ``n_experts``, and no cross-token structure exists at all.
+
+``resolve_dispatch`` maps the config knob x execution route (train /
+prefill / decode) to one of these paths; ``"auto"`` keeps pooled
+semantics for training (Switch aux loss, EP sharding, capacity drops)
+and batch-invariant paths for serving.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import MoEConfig
+from repro.configs.base import MOE_DISPATCH_MODES, MoEConfig
 from repro.models.module import Module, fan_in_init
+
+#: Execution routes threaded from models.transformer: full-sequence
+#: training/eval, chunked prompt prefill, single-token decode.
+ROUTES = ("train", "prefill", "decode")
+
+
+def resolve_dispatch(dispatch: str, route: str) -> str:
+    """Config knob x execution route -> concrete dispatch path.
+
+    Returns one of "pooled" | "per_request" | "gather".  ``auto`` keeps
+    the training path pooled (aux loss / EP / capacity drops untouched)
+    and picks the batch-invariant path per serving route.
+    """
+    if route not in ROUTES:
+        raise ValueError(f"route must be one of {ROUTES}, got {route!r}")
+    if dispatch not in MOE_DISPATCH_MODES:     # mirrors MoEConfig validation
+        raise ValueError(f"dispatch must be one of {MOE_DISPATCH_MODES}, "
+                         f"got {dispatch!r}")
+    if dispatch in ("pooled", "per_request"):
+        return dispatch
+    return {"train": "pooled", "prefill": "per_request",
+            "decode": "gather"}[route]
 
 
 class DenseMLP(Module):
@@ -106,11 +151,7 @@ class MoEMLP(Module):
         """Sort-based dispatch for ONE token group. xt: (NL, D)."""
         e = self.moe
         NL, D = xt.shape
-        logits = (xt @ params["router"].astype(dtype)).astype(jnp.float32)
-        probs = jax.nn.softmax(logits, -1)                       # (NL, E)
-        gate_vals, expert_ids = jax.lax.top_k(probs, e.top_k)    # (NL, k)
-        gate_vals = gate_vals / jnp.clip(
-            gate_vals.sum(-1, keepdims=True), 1e-9)              # renormalize
+        gate_vals, expert_ids, probs = self._route(params, xt, dtype)
 
         flat_e = expert_ids.reshape(-1)                          # (NL*k,)
         order = jnp.argsort(flat_e)                              # stable
@@ -139,22 +180,43 @@ class MoEMLP(Module):
         contrib = contrib * gates.astype(dtype)
         return jnp.zeros((NL, D), dtype).at[meta["token_of"]].add(contrib)
 
-    def __call__(self, params, x):
-        """x: (B, S, D) -> (B, S, D); also returns aux losses dict.
+    def _route(self, params, xt, dtype):
+        """Shared router head: xt (N, D) -> (renormalized top-k gate
+        values (N, k), expert ids (N, k), full probs (N, E))."""
+        e = self.moe
+        logits = (xt @ params["router"].astype(dtype)).astype(jnp.float32)
+        probs = jax.nn.softmax(logits, -1)                       # (N, E)
+        gate_vals, expert_ids = jax.lax.top_k(probs, e.top_k)    # (N, k)
+        gate_vals = gate_vals / jnp.clip(
+            gate_vals.sum(-1, keepdims=True), 1e-9)              # renormalize
+        return gate_vals, expert_ids, probs
 
-        With ``moe.groups`` = the DP degree (and groups along the batch
-        dim), the scatter/gather never cross data shards — only the expert
-        GEMM's operands move over the "model" axis and the combine's
-        partial sums are all-reduced (§Perf cell B).
-        """
+    def _gather_ffn(self, params, xt, dtype):
+        """Capacity-free gather-GEMM dispatch. xt: (N, D), one token per
+        row.  Each token gathers its k (D, F) expert slices and runs k
+        small GEMMs — no capacity buffer, no sorting, no cross-token
+        structure: a token's output depends only on its own activations,
+        which is exactly the decode-step batch-invariance guarantee."""
+        gate_vals, expert_ids, probs = self._route(params, xt, dtype)
+        wg = params["w_gate"].astype(dtype)[expert_ids]          # (N, k, D, F)
+        wu = params["w_up"].astype(dtype)[expert_ids]
+        wd = params["w_down"].astype(dtype)[expert_ids]          # (N, k, F, D)
+        g = jnp.einsum("nd,nkdf->nkf", xt, wg)
+        u = jnp.einsum("nd,nkdf->nkf", xt, wu)
+        y = jnp.einsum("nkf,nkfd->nkd", jax.nn.silu(g) * u, wd)
+        out = jnp.einsum("nkd,nk->nd", y, gate_vals.astype(dtype))
+        return out, probs, expert_ids
+
+    def _grouped_ffn(self, params, x, G, C):
+        """Sort-based dispatch over G token groups at capacity C.
+        x: (B, S, D) reshaped to (G, B*S//G, D) groups."""
         e = self.moe
         B, S, D = x.shape
-        G = e.groups if B % max(e.groups, 1) == 0 else 1
-        xt = x.reshape(G, B * S // G, D)
+        NL = B * S // G
+        xt = x.reshape(G, NL, D)
         if self.constraints:
             xt = _constrain(xt, ("pod", "data"), None, None)
 
-        C = self.capacity(B * S // G, e)
         xe, meta = jax.vmap(
             lambda t: self._dispatch_group(params, t, x.dtype, C))(xt)
         if self.constraints:
@@ -168,13 +230,57 @@ class MoEMLP(Module):
         if self.constraints:
             ye = _constrain(ye, ("pod", "data"), "model", None, None)
 
-        NL = B * S // G
         out = jax.vmap(
             lambda y, m: self._combine_group(y, m, NL, D, x.dtype, C)
         )(ye, meta)
         if self.constraints:
             out = _constrain(out, ("pod", "data"), None, None)
-        out = out.reshape(B, S, D)
+        return out.reshape(B, S, D), meta
+
+    def __call__(self, params, x, route="train"):
+        """x: (B, S, D) -> (B, S, D); also returns aux losses dict.
+
+        ``route`` ("train" | "prefill" | "decode") and the config's
+        ``dispatch`` knob select the dispatch path (see module docstring
+        and :func:`resolve_dispatch`).
+
+        Pooled path: with ``moe.groups`` = the DP degree (and groups
+        along the batch dim), the scatter/gather never cross data shards
+        — only the expert GEMM's operands move over the "model" axis and
+        the combine's partial sums are all-reduced (§Perf cell B).
+
+        Per-request path: G = B (one group per batch row = per serving
+        request) at the drop-free capacity bound C = S — routing
+        reduces to per-token top-k, invariant to co-batched rows and to
+        prompt chunking.
+        """
+        e = self.moe
+        B, S, D = x.shape
+        mode = resolve_dispatch(e.dispatch, route)
+
+        if mode == "gather":
+            out, probs, expert_ids = self._gather_ffn(
+                params, x.reshape(B * S, D), x.dtype)
+            out = out.reshape(B, S, D)
+            if self.shared:
+                out = out + self.shared(params["shared"], x)
+            me = probs.mean(0)                                   # (E,)
+            ce = jnp.bincount(expert_ids.reshape(-1),
+                              length=e.n_experts) / expert_ids.size
+            return out, {"aux_loss": e.n_experts * jnp.sum(me * ce),
+                         "dropped_frac": jnp.float32(0.0)}
+
+        if mode == "per_request":
+            G = B                       # one dispatch group per request row
+            # drop-free bound: top_k expert ids are DISTINCT per token, so
+            # any one expert receives at most S tokens from an S-token row
+            C = S
+        else:                           # pooled
+            # groups must divide the batch; clamp guards a degenerate
+            # B < groups call (and groups=0 is rejected by MoEConfig)
+            G = max(1, e.groups if B % max(e.groups, 1) == 0 else 1)
+            C = self.capacity(B * S // G, e)
+        out, meta = self._grouped_ffn(params, x, G, C)
 
         if self.shared:
             out = out + self.shared(params["shared"], x)

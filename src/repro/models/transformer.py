@@ -152,12 +152,18 @@ class DecoderLayer(Module):
             a["norm2"] = self.norm2.axes()
         return a
 
-    def _mlp_tail(self, params, x):
-        """Residual MLP tail shared by __call__ / decode / prefill."""
+    def _mlp_tail(self, params, x, route="train"):
+        """Residual MLP tail shared by __call__ / decode / prefill.
+        ``route`` selects the MoE dispatch path (models.moe): training
+        keeps the pooled capacity dispatch, serving prefill groups per
+        request row, and the decode step takes the capacity-free
+        gather-GEMM — the batch-invariance contract the engine relies on."""
         if self.mlp:
-            m = self.mlp(params["mlp"], self.norm2(params["norm2"], x))
-            if isinstance(m, tuple):   # MoE returns (out, aux)
-                m = m[0]
+            h = self.norm2(params["norm2"], x)
+            if isinstance(self.mlp, MoEMLP):
+                m, _aux = self.mlp(params["mlp"], h, route=route)
+            else:
+                m = self.mlp(params["mlp"], h)
             x = x + m
         return x
 
@@ -169,7 +175,7 @@ class DecoderLayer(Module):
     def decode(self, params, x, cache, pos):
         h, new_cache = self.mixer.decode(
             params["mixer"], self.norm1(params["norm1"], x), cache, pos)
-        return self._mlp_tail(params, x + h), new_cache
+        return self._mlp_tail(params, x + h, route="decode"), new_cache
 
     def prefill(self, params, x, cache, pos0, length=None):
         """Consume a whole chunk (B, S, D) against the cache in one call.
@@ -177,7 +183,7 @@ class DecoderLayer(Module):
         h, new_cache = self.mixer.prefill(
             params["mixer"], self.norm1(params["norm1"], x), cache, pos0,
             length=length)
-        return self._mlp_tail(params, x + h), new_cache
+        return self._mlp_tail(params, x + h, route="prefill"), new_cache
 
     def can_prefill(self):
         fn = getattr(self.mixer, "prefill", None)

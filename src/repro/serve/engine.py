@@ -21,8 +21,9 @@ Two request flavors, selected by the StepModel:
     carry :class:`~repro.configs.base.SamplingParams` — the knobs ride
     as per-slot arrays through the one jitted decode step (greedy and
     sampled traffic share a single compiled program), and the PRNG is
-    counter-based (fold_in(seed, uid, pos)) so a request's tokens are
-    reproducible regardless of co-batched traffic.
+    counter-based (fold_in(seed, uid_lo, uid_hi, pos) — the FULL
+    submission uid reaches the key as two 32-bit words) so a request's
+    tokens are reproducible regardless of co-batched traffic.
   * streaming (MinimalistNetwork): input frames are fed one per step —
     the paper's edge case where samples arrive in real time — and every
     per-frame output is recorded; the request retires when its stream is
@@ -41,13 +42,17 @@ from repro.common import pow2ceil
 from repro.configs.base import SamplingParams
 from repro.serve.sampling import KNOB_DTYPES, KNOB_GREEDY
 
-_GREEDY = SamplingParams()
-
-
 def _knob_values(req):
-    """A request's per-slot knob values (schema: sampling.KNOB_DTYPES)."""
+    """A request's per-slot knob values (schema: sampling.KNOB_DTYPES).
+
+    The uid is folded into the counter-based PRNG key as two 32-bit
+    words (low bits + the bits above them) so the FULL uid reaches the
+    key — a single masked word would give requests whose uids differ by
+    its period (e.g. 2**31 under the old ``& 0x7FFFFFFF`` mask)
+    bitwise-identical sampled streams."""
     sp = req.sampling
-    return {"seed": sp.seed, "uid": req.uid & 0x7FFFFFFF,
+    return {"seed": sp.seed, "uid": req.uid & 0xFFFFFFFF,
+            "uid_hi": (req.uid >> 32) & 0xFFFFFFFF,
             "temperature": sp.temperature, "top_k": sp.top_k,
             "top_p": sp.top_p}
 
@@ -58,7 +63,11 @@ class Request:
     prompt: np.ndarray                 # (P,) int32 tokens | (P, d_in) frames
     max_new_tokens: int = 0            # 0 for pure streaming requests
     eos_id: Optional[int] = None
-    sampling: SamplingParams = _GREEDY
+    # default_factory: every request owns its params instance — a shared
+    # class-level default would let one request's (user-)mutated knobs
+    # silently leak into every other default-sampled request
+    sampling: SamplingParams = dataclasses.field(
+        default_factory=SamplingParams)
     # filled by the engine:
     outputs: List[Any] = dataclasses.field(default_factory=list)
     finished: bool = False
@@ -107,7 +116,7 @@ class ServeEngine:
         if len(prompt) < 1:
             raise ValueError("empty prompt")
         if sampling is None:
-            sampling = _GREEDY
+            sampling = SamplingParams()    # fresh instance per request
         else:
             sampling.validate()
             if not self.sm.autoregressive:

@@ -21,6 +21,20 @@ Two program families per prompt-length class:
 ``pad_to_grid=False`` restores the legacy remainder behavior (chunk
 pieces + one ragged remainder piece, one compile per distinct remainder)
 — retained for the padded-vs-remainder benchmark comparison.
+
+MoE request boundary: the batch axis of ``tokens`` IS the request axis
+(one admission-wave row per request), and both prefill families thread
+that boundary into the MoE layers — ``DecoderLM.prefill`` routes with
+``route="prefill"`` (per-request grouped dispatch: one drop-free group
+per batch row) and the scanned fallback's ``decode_step`` routes with
+``route="decode"`` (capacity-free gather-GEMM).  Both reduce to pure
+per-token top-k routing, so chunked and scanned prefill produce
+IDENTICAL routing — and grid padding is routing-inert too (padded tokens
+compete with nobody).  Routing identity, not bitwise output identity:
+the two paths run differently-shaped expert GEMMs, so their outputs
+agree only at numerical tolerance (like every other fast-vs-scan pair in
+tests/test_serve_prefill.py).  Only ``MoEConfig.dispatch="pooled"``
+reverts to the chunking-dependent pooled capacity dispatch.
 """
 from __future__ import annotations
 

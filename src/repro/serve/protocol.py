@@ -33,8 +33,6 @@ Two adapters are provided:
 """
 from __future__ import annotations
 
-import warnings
-
 import jax
 import jax.numpy as jnp
 
@@ -117,15 +115,25 @@ class DecoderStepModel(StepModel):
         # layer-repeat axis FIRST — their slot (batch) axis is 1, not 0.
         self._slot_axis = {name: (1 if mode == "scanned" else 0)
                            for name, _l, mode in model._all_layers()}
-        if any(s.moe for s in model.cfg.layer_specs()):
-            # MoEMLP pools every token of a call into ONE capacity-limited
-            # dispatch (C = f(B*S)), so routing/dropping — and therefore
-            # the generated text — depends on chunk size and on which
-            # neighbors share the wave/slot batch.
+        # MoE stacks: the decode step routes through the capacity-free
+        # gather-GEMM path and chunked prefill through per-request
+        # grouping (models.moe, MoEConfig.dispatch="auto"), so routing —
+        # and therefore the generated text — no longer depends on the
+        # co-batched traffic or the prefill chunking.  Only an explicit
+        # dispatch="pooled" opts back into batch-DEPENDENT serving (the
+        # training semantics, capacity drops included) — that one still
+        # warns, because there the old caveat remains true.
+        self.moe_dispatch = (model.cfg.moe.dispatch
+                             if any(s.moe for s in model.cfg.layer_specs())
+                             else None)
+        if self.moe_dispatch == "pooled":
+            import warnings
             warnings.warn(
-                f"{model.cfg.name}: MoE expert-capacity routing depends on "
-                "the co-batched tokens; serving outputs will vary with "
-                "concurrent traffic and prefill chunking", stacklevel=2)
+                f"{model.cfg.name}: dispatch='pooled' pools every token of "
+                "a call into one capacity-limited dispatch — serving "
+                "outputs will vary with concurrent traffic and prefill "
+                "chunking (use 'auto' or 'per_request' for batch-invariant "
+                "routing)", stacklevel=2)
         self._jit_step = jax.jit(self._step_impl)
         self._jit_write = jax.jit(self._write_impl)
         self._jit_sample = jax.jit(self._sample_impl)
@@ -200,7 +208,8 @@ class DecoderStepModel(StepModel):
         lg = logits[..., :self.vocab].astype(jnp.float32)
         return jax.lax.cond(
             jnp.any(samp["temperature"] > 0.0),
-            lambda: sample_tokens(lg, samp["seed"], samp["uid"], pos,
+            lambda: sample_tokens(lg, samp["seed"], samp["uid"],
+                                  samp["uid_hi"], pos,
                                   samp["temperature"], samp["top_k"],
                                   samp["top_p"]),
             lambda: jnp.argmax(lg, -1).astype(jnp.int32))

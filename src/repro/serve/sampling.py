@@ -2,9 +2,11 @@
 
 Counter-based PRNG: every sampled token draws its randomness from
 
-    key = fold_in(fold_in(PRNGKey(seed), uid), pos)
+    key = fold_in(fold_in(fold_in(PRNGKey(seed), uid_lo), uid_hi), pos)
 
-so a request's stream depends only on its own ``(seed, uid)`` and the
+(the request uid split into its low 32 bits and the bits above them, so
+the FULL uid reaches the key — no mask aliasing between long-lived
+requests), so a request's stream depends only on its own ``(seed, uid)`` and the
 absolute position of the token being generated — never on which other
 requests share the slot batch, how admission waves were grouped, or how
 many times the engine restarted a step.  The whole pipeline
@@ -32,13 +34,19 @@ import jax
 import jax.numpy as jnp
 
 
-def request_key(seed, uid, pos):
-    """The counter-based per-token key: fold_in(seed, uid, pos)."""
+def request_key(seed, uid, pos, uid_hi=0):
+    """The counter-based per-token key: fold_in(seed, uid, uid_hi, pos).
+
+    The request uid is folded in as TWO words (low 32 bits + the bits
+    above them) so the full uid reaches the key — a single masked fold
+    would alias requests whose uids differ by a multiple of the mask
+    period into bitwise-identical sampled streams."""
     key = jax.random.PRNGKey(seed)
-    return jax.random.fold_in(jax.random.fold_in(key, uid), pos)
+    key = jax.random.fold_in(jax.random.fold_in(key, uid), uid_hi)
+    return jax.random.fold_in(key, pos)
 
 
-def _sample_row(logits, seed, uid, pos, temperature, top_k, top_p):
+def _sample_row(logits, seed, uid, uid_hi, pos, temperature, top_k, top_p):
     """One slot's token draw. logits: (V,) over the REAL vocab."""
     V = logits.shape[-1]
     logits = logits.astype(jnp.float32)
@@ -55,7 +63,8 @@ def _sample_row(logits, seed, uid, pos, temperature, top_k, top_p):
     keep_sorted = (mass_before < jnp.clip(top_p, 1e-6, 1.0)) | (top_p >= 1.0)
     keep = jnp.zeros((V,), bool).at[order].set(keep_sorted)
     scaled = jnp.where(keep, scaled, -jnp.inf)
-    tok = jax.random.categorical(request_key(seed, uid, pos), scaled)
+    tok = jax.random.categorical(request_key(seed, uid, pos, uid_hi),
+                                 scaled)
     return jnp.where(temperature <= 0.0, greedy_tok, tok.astype(jnp.int32))
 
 
@@ -71,15 +80,16 @@ sample_tokens = jax.vmap(_sample_row)
 #: step (a drifted dtype would silently retrace).
 KNOB_DTYPES = {
     "seed": jnp.uint32,
-    "uid": jnp.int32,
+    "uid": jnp.uint32,       # low 32 bits of the request uid
+    "uid_hi": jnp.uint32,    # bits 32..63 — folded separately (full uid)
     "temperature": jnp.float32,
     "top_k": jnp.int32,
     "top_p": jnp.float32,
 }
 
 #: Knob values that reproduce greedy argmax.
-KNOB_GREEDY = {"seed": 0, "uid": 0, "temperature": 0.0, "top_k": 0,
-               "top_p": 1.0}
+KNOB_GREEDY = {"seed": 0, "uid": 0, "uid_hi": 0, "temperature": 0.0,
+               "top_k": 0, "top_p": 1.0}
 
 
 def greedy_arrays(n):

@@ -80,6 +80,38 @@ def test_aux_loss_prefers_balance():
     assert float(aux_bad["aux_loss"]) > balanced
 
 
+def test_moe_config_validates_groups_and_dispatch():
+    """groups=0 used to slip past the divisibility guard and divide by
+    zero at trace time; it is now rejected at construction, along with
+    unknown dispatch modes and out-of-range top_k."""
+    with pytest.raises(ValueError, match="groups"):
+        MoEConfig(n_experts=4, top_k=2, d_ff_expert=8, groups=0)
+    with pytest.raises(ValueError, match="groups"):
+        MoEConfig(n_experts=4, top_k=2, d_ff_expert=8, groups=-1)
+    with pytest.raises(ValueError, match="dispatch"):
+        MoEConfig(n_experts=4, top_k=2, d_ff_expert=8, dispatch="magic")
+    with pytest.raises(ValueError, match="top_k"):
+        MoEConfig(n_experts=4, top_k=5, d_ff_expert=8)
+    with pytest.raises(ValueError, match="top_k"):
+        MoEConfig(n_experts=4, top_k=0, d_ff_expert=8)
+
+
+def test_indivisible_batch_falls_back_to_one_group():
+    """A batch the group count does not divide clamps to G=1 (and even a
+    config that bypassed validation cannot reach the G=0 division)."""
+    moe = MoEConfig(n_experts=4, top_k=2, d_ff_expert=8, groups=3)
+    m = MoEMLP(8, moe)
+    params = m.init(jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 6, 8))  # 2 % 3 != 0
+    out, _ = m(params, x)
+    assert out.shape == x.shape
+    # forcibly corrupt groups past the frozen-dataclass validation: the
+    # runtime clamp (not ZeroDivisionError) must still hold
+    object.__setattr__(moe, "groups", 0)
+    out0, _ = m(params, x)
+    np.testing.assert_array_equal(np.asarray(out0), np.asarray(out))
+
+
 def test_gradients_flow_through_dispatch():
     moe = MoEConfig(n_experts=4, top_k=2, d_ff_expert=8)
     m = MoEMLP(8, moe)

@@ -365,6 +365,51 @@ def test_engine_lifecycle_sampled_and_streaming_interleaved(lm, net):
             np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
+def test_default_sampling_params_not_shared_between_requests(lm):
+    """Every default-sampled request owns its OWN SamplingParams instance
+    (default_factory) — mutating one request's params (even forcibly,
+    through the frozen dataclass) must never leak into another request's
+    knobs."""
+    cfg, model, params = lm
+    sm = DecoderStepModel(model, max_len=32, prefill_chunk=8)
+    eng = ServeEngine(sm, params, slots=2)
+    r1 = eng.submit(np.arange(3) % cfg.vocab, max_new_tokens=1)
+    r2 = eng.submit(np.arange(4) % cfg.vocab, max_new_tokens=1)
+    assert r1.sampling is not r2.sampling
+    from repro.serve.engine import Request
+    assert Request(0, np.arange(2)).sampling \
+        is not Request(1, np.arange(2)).sampling
+    object.__setattr__(r1.sampling, "temperature", 9.9)
+    assert r2.sampling.temperature == 0.0
+    assert Request(2, np.arange(2)).sampling.temperature == 0.0
+
+
+def test_uid_collision_beyond_32_bits_regression():
+    """Counter keys fold the FULL request uid: uids that differ by 2**31
+    (the old ``& 0x7FFFFFFF`` mask period) or by 2**32 (beyond one
+    32-bit word) must NOT produce bitwise-identical sampled streams."""
+    from repro.serve.engine import Request, _knob_values
+    from repro.serve.sampling import KNOB_DTYPES, sample_tokens
+
+    def stream(uid, n=16, V=1024):
+        req = Request(uid, np.arange(3),
+                      sampling=SamplingParams(temperature=1.0, seed=7))
+        kv = _knob_values(req)
+        lg = jnp.zeros((1, V))            # flat: draws expose the key
+        return [int(sample_tokens(
+            lg, *(jnp.asarray([kv[k]], KNOB_DTYPES[k])
+                  for k in ("seed", "uid", "uid_hi")),
+            jnp.asarray([p], jnp.int32),
+            jnp.asarray([1.0], jnp.float32),
+            jnp.asarray([0], jnp.int32),
+            jnp.asarray([1.0], jnp.float32))[0]) for p in range(n)]
+
+    base = stream(5)
+    assert base == stream(5)                      # stable
+    assert base != stream(5 + 2**31)              # the pinned collision
+    assert base != stream(5 + 2**32)              # folds the high word too
+
+
 def test_submit_rejects_bad_sampling(lm, net):
     cfg, model, params = lm
     sm = DecoderStepModel(model, max_len=16)

@@ -25,8 +25,8 @@ def _tree_allclose(a, b, atol, rtol):
 
 
 MLA_TEST_CFG = ModelConfig(
-    # MLA-only stack (no MoE: expert-capacity routing varies with chunking,
-    # which would confound a prefill-equivalence test)
+    # MLA-only stack (kept MoE-free so this test isolates the latent-cache
+    # path; MoE chunking invariance is pinned in tests/test_serve_moe.py)
     name="mla-dense-test", d_model=32, n_layers=2, vocab=128,
     n_heads=2, n_kv_heads=2, head_dim=16, d_ff=64,
     pattern=(LayerSpec(MLA),),

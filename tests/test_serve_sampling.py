@@ -25,11 +25,12 @@ def _logits(key, V, spread=4.0):
     return lg + jnp.arange(V) * 1e-3      # strict total order
 
 
-def _draw(logits, *, seed=0, uid=0, pos=0, temperature=1.0, top_k=0,
-          top_p=1.0):
+def _draw(logits, *, seed=0, uid=0, uid_hi=0, pos=0, temperature=1.0,
+          top_k=0, top_p=1.0):
     return int(sample_tokens(
         logits[None],
-        jnp.asarray([seed], jnp.uint32), jnp.asarray([uid], jnp.int32),
+        jnp.asarray([seed], jnp.uint32), jnp.asarray([uid], jnp.uint32),
+        jnp.asarray([uid_hi], jnp.uint32),
         jnp.asarray([pos], jnp.int32),
         jnp.asarray([temperature], jnp.float32),
         jnp.asarray([top_k], jnp.int32),
@@ -101,7 +102,8 @@ def test_counter_key_reproducible_across_cobatch(key, seed, nbatch):
             lg,
             jnp.asarray([seed] + [rng.integers(2**31)
                                   for _ in neighbors], jnp.uint32),
-            jnp.asarray(range(B), jnp.int32),
+            jnp.asarray(range(B), jnp.uint32),
+            jnp.asarray([0] * B, jnp.uint32),
             jnp.asarray([3] * B, jnp.int32),
             jnp.asarray([0.9] + [float(rng.uniform(0, 2))
                                  for _ in neighbors], jnp.float32),
