@@ -18,7 +18,9 @@ and for the prefill comparison at prompt length >= 256:
   * grid-padded chunking (one compiled chunk shape) vs legacy remainder
     chunking across ragged prompt lengths, compile counts included
 plus an MoE stack row (qwen3-moe smoke): batch-invariant auto dispatch
-(gather-GEMM decode + per-request prefill) vs pooled capacity dispatch.
+(gather-GEMM decode + per-request prefill) vs pooled capacity dispatch,
+and a sharded row: the engine on a local DxM device mesh (TP params /
+caches, DP slots — see README §Sharded serving) vs the no-mesh engine.
 
     PYTHONPATH=src python -m benchmarks.decode_throughput \
         [--arch minimalist-lm-360m] [--batches 1,64,256] [--gen 16]
@@ -100,7 +102,10 @@ def _warm_engine(sm, params, batch, plens):
         while B <= cap:
             toks = jnp.zeros((B, P), jnp.int32)
             last, carry = sm.prefill(params, toks)
-            sm.write_slots(state, carry, np.full(B, batch, np.int32))
+            # thread the returned state: a mesh-bound StepModel DONATES
+            # the incoming state buffer, so the old reference is dead
+            state = sm.write_slots(state, carry, np.full(B, batch,
+                                                         np.int32))
             np.asarray(sm.sample(last, greedy_arrays(B),
                                  np.full(B, P, np.int32)))
             B *= 2
@@ -215,6 +220,53 @@ def _grid_compare(model, params, cfg, P, chunk):
     return out
 
 
+def _sharded_compare(model, params, cfg, batch=4, gen=8, prompt=16,
+                     chunk=8, mesh_spec=""):
+    """Engine on a local DxM device mesh vs the no-mesh engine: tokens/s
+    and per-step latency, so the perf trajectory records sharded decode.
+    The mesh defaults to the largest (data<=2) x (model<=2) grid the
+    local devices allow — on a 1-device host that is 1x1, which measures
+    the pure overhead of the sharded path (placement + SPMD annotations);
+    force more CPU devices with XLA_FLAGS=--xla_force_host_platform_
+    device_count=N to record real TP/DP rows."""
+    from repro.launch.mesh import make_local_mesh, mesh_info
+    from repro.launch.serve import parse_mesh
+    n = len(jax.devices())
+    if mesh_spec:
+        mesh = parse_mesh(mesh_spec)
+    else:
+        m = 2 if n >= 2 else 1
+        d = 2 if n >= 2 * m and batch % 2 == 0 else 1
+        mesh = make_local_mesh(model=m, data=d)
+    info = mesh_info(mesh)
+    d, m = info["dp"], info["tp"]
+    rng = np.random.default_rng(13)
+    prompts, glens = _workload(rng, cfg, 2 * batch, prompt, gen, chunk)
+    max_len = max(len(p) for p in prompts) + max(glens) + 1
+    rows, out = [], {}
+    for label, use_mesh in (("single", None), (f"mesh_{d}x{m}", mesh)):
+        sm = DecoderStepModel(model, max_len=max_len, prefill_chunk=chunk)
+        if use_mesh is not None:
+            sm.bind_mesh(use_mesh, batch)
+            p = sm.place_params(params)
+        else:
+            p = params
+        _warm_engine(sm, p, batch, [len(q) for q in prompts])
+        tps, lat, _eng = _run_engine(sm, p, prompts, glens, batch)
+        out[label] = tps
+        rows.append({
+            "name": f"decode_sharded/{label}/batch{batch}",
+            "us_per_call": f"{np.median(lat)*1e6:.0f}",
+            "derived": f"tok_s={tps:.1f};"
+                       f"p50_ms={np.percentile(lat,50)*1e3:.2f};"
+                       f"p99_ms={np.percentile(lat,99)*1e3:.2f}",
+        })
+    single, mesh_tps = out["single"], out[f"mesh_{d}x{m}"]
+    rows[-1]["derived"] += (f";dp={info['dp']};tp={info['tp']};"
+                            f"vs_single={mesh_tps/max(single,1e-9):.2f}x")
+    return rows
+
+
 def _moe_compare(batch=4, gen=8, prompt=16, chunk=8):
     """MoE stack serving: batch-invariant auto dispatch (gather-GEMM
     decode + per-request prefill) vs the pooled capacity dispatch the
@@ -247,7 +299,7 @@ def _moe_compare(batch=4, gen=8, prompt=16, chunk=8):
 
 
 def run(arch="minimalist-lm-360m", batches=(1, 64, 256), gen=16,
-        prompt=32, chunk=16, prefill_lens=(256, 512)):
+        prompt=32, chunk=16, prefill_lens=(256, 512), mesh_spec=""):
     cfg = get_config(arch + "-smoke")
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
@@ -302,6 +354,8 @@ def run(arch="minimalist-lm-360m", batches=(1, 64, 256), gen=16,
                        f"cold_speedup={g['remainder']/g['padded']:.1f}x",
         })
         rows.extend(_attn_prefill_compare(P, chunk=min(P, 128)))
+    rows.extend(_sharded_compare(model, params, cfg, gen=gen,
+                                 mesh_spec=mesh_spec))
     rows.extend(_moe_compare(gen=gen))
     return emit(rows)
 
@@ -314,11 +368,15 @@ def main(argv=None):
     ap.add_argument("--prompt", type=int, default=32)
     ap.add_argument("--chunk", type=int, default=16)
     ap.add_argument("--prefill-lens", default="256,512")
+    ap.add_argument("--mesh", default="",
+                    help="DxM mesh for the sharded row (default: largest "
+                         "2x2-capped grid the local devices allow)")
     args = ap.parse_args(argv)
     run(arch=args.arch,
         batches=tuple(int(b) for b in args.batches.split(",")),
         gen=args.gen, prompt=args.prompt, chunk=args.chunk,
-        prefill_lens=tuple(int(p) for p in args.prefill_lens.split(",")))
+        prefill_lens=tuple(int(p) for p in args.prefill_lens.split(",")),
+        mesh_spec=args.mesh)
 
 
 if __name__ == "__main__":

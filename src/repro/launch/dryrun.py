@@ -145,10 +145,9 @@ def optimized_cfg(cfg, mesh):
     if cfg.mamba is not None:
         kw["ssm_impl"] = "stub"
     if cfg.moe is not None:
-        info = mesh_info(mesh)["axes"]
-        dp = info.get("pod", 1) * info.get("data", 1)
         # (dispatch is already pinned to "pooled" by lower_cell)
-        kw["moe"] = dataclasses.replace(cfg.moe, groups=dp)
+        kw["moe"] = dataclasses.replace(cfg.moe,
+                                        groups=mesh_info(mesh)["dp"])
     return dataclasses.replace(cfg, **kw)
 
 
@@ -164,9 +163,8 @@ def kernel_costs(cfg, shape, mesh):
     from repro.kernels.fused_ssm.ops import cost_model as ssm_cost
 
     sh = SHAPES[shape]
-    info = mesh_info(mesh)["axes"]
-    dp = info.get("pod", 1) * info.get("data", 1)
-    tp = info.get("model", 1)
+    info = mesh_info(mesh)
+    dp, tp = info["dp"], info["tp"]
     B = max(sh["global_batch"] // dp, 1)
     S = sh["seq_len"]
     train = sh["kind"] == "train"
@@ -241,12 +239,16 @@ def _lower_inner(model, cfg, shape, mesh, *, zero1, donate, rules):
     c_spec = shd.cache_specs(model.cache_axes(), c_shapes, mesh)
     c_shard = shd.named_sharding_tree(c_spec, mesh)
     c_args = shd.attach(c_shapes, c_shard)
-    tok = jax.ShapeDtypeStruct((B, 1), jnp.int32)
-    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    # decode inputs through the SAME per-slot spec builder the serving
+    # engine uses (repro.serve.protocol) — dim0 is the slot/batch axis
+    io = {"tok": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+          "pos": jax.ShapeDtypeStruct((), jnp.int32)}
+    io_args = shd.attach(io, shd.named_sharding_tree(
+        shd.slot_specs(io, mesh), mesh))
     jitted = jax.jit(build_serve_step(model),
                      donate_argnums=(1,) if donate else (),
                      out_shardings=(None, c_shard))
-    return jitted.lower(p_args, c_args, tok, pos)
+    return jitted.lower(p_args, c_args, io_args["tok"], io_args["pos"])
 
 
 def _analyze(compiled):

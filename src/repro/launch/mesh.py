@@ -18,12 +18,34 @@ def make_production_mesh(*, multi_pod: bool = False):
 
 
 def make_local_mesh(model: int = 1, data: int = 1):
-    """Small mesh over however many local devices exist (tests/examples)."""
-    n = len(jax.devices())
-    assert model * data <= n, (model, data, n)
-    return jax.make_mesh((data, model), ("data", "model"))
+    """Small (data, model) mesh for tests / benchmarks / local serving.
+
+    Uses the first ``data*model`` local devices — a 2×2 mesh on an
+    8-device host is fine (the rest idle).  Asking for more devices than
+    exist raises a ValueError naming both counts, so a bad ``--mesh``
+    flag fails at startup instead of deep inside jax.
+    """
+    if model < 1 or data < 1:
+        raise ValueError(f"mesh axes must be >= 1, got data={data} "
+                         f"model={model}")
+    devices = jax.devices()
+    need, n = model * data, len(devices)
+    if need > n:
+        raise ValueError(
+            f"mesh data={data} x model={model} needs {need} devices but "
+            f"only {n} are available (set "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count=N to fake "
+            f"more on CPU)")
+    return jax.make_mesh((data, model), ("data", "model"),
+                         devices=devices[:need])
 
 
 def mesh_info(mesh) -> dict:
-    return {"axes": dict(mesh.shape),
-            "n_devices": int(np.prod(list(mesh.shape.values())))}
+    """Axis sizes plus the derived DP / TP degrees.  Meshes without a
+    "pod" axis (every local mesh) get pod=1 folded into ``dp`` — callers
+    should read ``dp``/``tp`` instead of poking at raw axis names."""
+    axes = dict(mesh.shape)
+    return {"axes": axes,
+            "n_devices": int(np.prod(list(axes.values()))),
+            "dp": int(axes.get("pod", 1)) * int(axes.get("data", 1)),
+            "tp": int(axes.get("model", 1))}

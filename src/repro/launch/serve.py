@@ -11,8 +11,10 @@ shape across ragged prompt lengths), decode is ONE jitted slot-batch step
 per token, and finished sequences retire the step they complete so their
 slots go straight back into circulation.  ``--temperature/--top-k/--top-p``
 turn on per-request sampling (counter-based PRNG: reproducible per
-request, same compiled step as greedy).  ``--baseline`` runs the old
-static-batch loop instead (kept as the benchmark reference).
+request, same compiled step as greedy).  ``--mesh DxM`` serves under a
+local device mesh (TP params/caches over "model", DP slots over "data";
+README §Sharded serving).  ``--baseline`` runs the old static-batch
+loop instead (kept as the benchmark reference).
 """
 from __future__ import annotations
 
@@ -25,6 +27,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import SamplingParams, ServeConfig, get_config
+from repro.launch.mesh import make_local_mesh, mesh_info
 from repro.models import build_model
 from repro.serve import DecoderStepModel, ServeEngine
 
@@ -55,10 +58,22 @@ def generate(model, params, prompts, *, max_len, gen_tokens):
     return jnp.stack(out, axis=1)
 
 
-def build_engine(model, params, serve: ServeConfig = ServeConfig()):
+def build_engine(model, params, serve: ServeConfig = ServeConfig(),
+                 mesh=None):
     sm = DecoderStepModel(model, max_len=serve.max_len,
                           prefill_chunk=serve.prefill_chunk)
-    return ServeEngine(sm, params, slots=serve.slots)
+    return ServeEngine(sm, params, slots=serve.slots, mesh=mesh)
+
+
+def parse_mesh(spec: str):
+    """'DxM' -> a local (data=D, model=M) mesh; '' -> None (no mesh)."""
+    if not spec:
+        return None
+    try:
+        d, m = (int(v) for v in spec.lower().split("x"))
+    except ValueError:
+        raise ValueError(f"--mesh expects DxM (e.g. 2x2), got {spec!r}")
+    return make_local_mesh(model=m, data=d)
 
 
 def main(argv=None):
@@ -94,12 +109,25 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0,
                     help="per-request PRNG seed base (request i uses "
                          "seed+i; decoding is reproducible per request)")
+    ap.add_argument("--mesh", default="",
+                    help="serve under a DxM local device mesh (e.g. 2x2 = "
+                         "data 2 x model 2): params and caches TP-shard "
+                         "over 'model' via the logical-axis rules, slots "
+                         "DP-shard over 'data'; needs D*M local devices "
+                         "(XLA_FLAGS=--xla_force_host_platform_device_"
+                         "count=N fakes them on CPU)")
     ap.add_argument("--baseline", action="store_true",
                     help="run the static-batch loop instead of the engine")
     args = ap.parse_args(argv)
     if min(args.requests, args.gen, args.prompt_len, args.slots) < 1:
         ap.error("--requests, --gen, --prompt-len and --slots must all "
                  "be >= 1")
+    if args.mesh and args.baseline:
+        ap.error("--mesh applies to the engine, not the static baseline")
+    try:
+        mesh = parse_mesh(args.mesh)
+    except ValueError as e:
+        ap.error(str(e))
 
     cfg = get_config(args.arch + ("-smoke" if args.smoke else ""))
     if args.scan_backend:
@@ -138,7 +166,12 @@ def main(argv=None):
 
     eng = build_engine(model, params,
                        ServeConfig(slots=args.slots, max_len=max_len,
-                                   prefill_chunk=args.prefill_chunk))
+                                   prefill_chunk=args.prefill_chunk),
+                       mesh=mesh)
+    if mesh is not None:
+        info = mesh_info(mesh)
+        print(f"mesh: {info['axes']} (dp={info['dp']} tp={info['tp']}, "
+              f"{info['n_devices']} devices)")
     t0 = time.time()
     for i, (p, g) in enumerate(zip(prompts, glens)):
         sampling = None

@@ -1,3 +1,5 @@
 from repro.parallel.sharding import (make_rules, param_specs, cache_specs,
-                                     batch_specs, named_sharding_tree,
-                                     DP_AXES)
+                                     serve_cache_specs, batch_specs,
+                                     slot_specs, dim0_dp_spec,
+                                     named_sharding_tree, DP_AXES,
+                                     SERVE_CACHE_RULES)

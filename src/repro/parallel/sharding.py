@@ -121,17 +121,33 @@ def opt_state_specs(param_spec_tree, params_shapes, mesh: Mesh,
     return {"m": mv, "v": mv, "step": P()}
 
 
-def batch_specs(batch_shapes, mesh: Mesh):
-    """Input batch: shard dim0 (batch) over (pod, data) when divisible."""
+def dim0_dp_spec(shape, mesh: Mesh) -> P:
+    """PartitionSpec sharding dim 0 over (pod, data) when divisible —
+    scalars and non-divisible leading dims replicate."""
     dp = _dp_axes(mesh)
     dp_size = _axis_size(mesh, dp)
+    if shape and shape[0] % max(dp_size, 1) == 0 and dp_size > 1:
+        return P(dp, *([None] * (len(shape) - 1)))
+    return P(*([None] * len(shape)))
 
-    def spec(s):
-        if s.shape and s.shape[0] % max(dp_size, 1) == 0 and dp_size > 1:
-            return P(dp, *([None] * (len(s.shape) - 1)))
-        return P(*([None] * len(s.shape)))
 
-    return jax.tree_util.tree_map(spec, batch_shapes)
+def batch_specs(batch_shapes, mesh: Mesh):
+    """Input batch: shard dim0 (batch) over (pod, data) when divisible."""
+    return jax.tree_util.tree_map(
+        lambda s: dim0_dp_spec(s.shape, mesh), batch_shapes)
+
+
+def slot_specs(shapes_tree, mesh: Mesh):
+    """Decode-side per-slot arrays (next-token ids, positions, active
+    masks, sampling knobs, admission-wave prompts): dim 0 IS the slot /
+    request axis, so it shards over the DP axes exactly like a training
+    batch; trailing dims (prompt length, frame features) replicate and
+    scalars (e.g. the decode position of a single-sequence cell) get
+    ``P()``.  Shared by the serving engine (repro.serve.protocol) and the
+    dry-run decode cells (repro.launch.dryrun) so the two stacks place
+    decode inputs identically."""
+    return jax.tree_util.tree_map(
+        lambda s: dim0_dp_spec(s.shape, mesh), shapes_tree)
 
 
 # Cache rules: batch→DP when divisible; the cache length falls back to
@@ -159,6 +175,24 @@ def cache_specs(cache_axes_tree, cache_shapes, mesh: Mesh, rules=None):
     """PartitionSpec pytree for decode caches from their logical axes."""
     rules = rules or CACHE_RULES
     return _tree_specs(cache_axes_tree, cache_shapes, rules, mesh)
+
+
+# Serving variant of the cache rules: the slot batch IS the DP axis, and
+# kv_len must stay unsharded — a decode step reads the whole cache, so a
+# length-sharded cache splits every attention softmax reduction across
+# devices, and the engine's contract (a request's tokens are invariant to
+# its placement) would silently become partition-dependent.  The dry-run's
+# long-context batch-1 SP regime keeps CACHE_RULES.
+SERVE_CACHE_RULES = dict(CACHE_RULES, kv_len=None)
+
+
+def serve_cache_specs(cache_axes_tree, cache_shapes, mesh: Mesh,
+                      rules=None):
+    """Cache specs for the serving engine's slot-batch state: slot batch
+    over DP, TP-shardable cache dims (kv_heads / d_inner / latent heads)
+    over 'model', cache length replicated (see SERVE_CACHE_RULES)."""
+    return cache_specs(cache_axes_tree, cache_shapes, mesh,
+                       rules or SERVE_CACHE_RULES)
 
 
 def named_sharding_tree(spec_tree, mesh: Mesh):

@@ -21,9 +21,9 @@ from repro.configs.base import SamplingParams
 from repro.serve.engine import Request, ServeEngine
 from repro.serve.prefill import chunked_prefill
 from repro.serve.protocol import (DecoderStepModel, MinimalistStepModel,
-                                  StepModel)
+                                  ServeShardings, StepModel)
 from repro.serve.sampling import sample_tokens
 
-__all__ = ["Request", "SamplingParams", "ServeEngine", "chunked_prefill",
-           "sample_tokens", "StepModel", "DecoderStepModel",
-           "MinimalistStepModel"]
+__all__ = ["Request", "SamplingParams", "ServeEngine", "ServeShardings",
+           "chunked_prefill", "sample_tokens", "StepModel",
+           "DecoderStepModel", "MinimalistStepModel"]

@@ -79,11 +79,17 @@ def chunked_prefill(step_model, params, tokens, *, chunk=256, pos0=0,
     (B, V_pad), cache carry with batch B) ready for the decode loop."""
     model = step_model.model
     tokens = jnp.asarray(tokens, jnp.int32)
+    if step_model.mesh is not None:
+        # wave batch over "data" (divisibility-gated); the chunk scatter
+        # then lands in TP-sharded K/V heads / MLA latents without any
+        # layer knowing — GSPMD partitions the same masked update.
+        tokens = step_model.put_slot(tokens)
     B, P = tokens.shape
     chunk = max(1, int(chunk))
     tmpl = step_model._cache_templates
     if B not in tmpl:   # zeros are immutable and never donated: reusable
-        tmpl[B] = model.init_cache(B, step_model.max_len)
+        tmpl[B] = step_model.place_cache(
+            model.init_cache(B, step_model.max_len))
     cache = tmpl[B]
     if force_scan or not model.supports_prefill():
         if step_model._jit_prefill_scan is None:

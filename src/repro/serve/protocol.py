@@ -30,15 +30,45 @@ Two adapters are provided:
   * :class:`MinimalistStepModel` — the paper's raw ``MinimalistNetwork``
     (frame streaming, e.g. per-sample sMNIST classification), optionally
     through the fused single-step Pallas kernel on exported 2 b codes.
+
+Mesh serving: ``bind_mesh(mesh, slots)`` commits an adapter to a
+``jax.sharding.Mesh`` — parameters TP-shard over "model" through the
+model's own logical-axis rule tables, the slot-batch state DP-shards
+its slot axis over "data" (``parallel.sharding.SERVE_CACHE_RULES``),
+and per-call host arrays are ``device_put`` against the slot sharding,
+so the decode step stays one compiled SPMD program.  See
+:class:`ServeShardings` and README §Sharded serving.
 """
 from __future__ import annotations
 
+import dataclasses
+from typing import Any, Optional
+
 import jax
 import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.common import pow2ceil
 from repro.configs.base import ATTN, ATTN_LOCAL, MLA
+from repro.parallel import sharding as shd
 from repro.serve.sampling import greedy_arrays, sample_tokens
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeShardings:
+    """Every placement the serving engine needs, for one (mesh, model,
+    slot count): parameters TP-shard over "model" via the model's own
+    logical-axis rule tables, the slot-batch state DP-shards its slot
+    axis over "data" (TP-shardable cache dims ride the serve cache
+    rules), and per-slot decode arrays (tokens / positions / active /
+    sampling knobs) shard like a batch.  ``replicated`` is the fully
+    replicated placement for scalars and scatter indices."""
+
+    mesh: Any
+    params: Any       # NamedSharding pytree matching the param pytree
+    state: Any        # NamedSharding pytree matching init_state(slots)
+    slot: Any         # NamedSharding for (slots,)-leading arrays
+    replicated: Any   # NamedSharding(mesh, P())
 
 
 class StepModel:
@@ -47,6 +77,48 @@ class StepModel:
     #: LM generation (emit feeds back as the next input) vs frame streaming
     #: (inputs always come from the request's own sequence).
     autoregressive: bool = True
+
+    #: bound by :meth:`bind_mesh`; ``None`` = classic single-device serving.
+    mesh = None
+    sharding: Optional[ServeShardings] = None
+    _slot_shardings = None      # (dim0, rank) -> NamedSharding cache
+
+    def shardings(self, mesh, slots, rules=None) -> ServeShardings:
+        """Compute (without binding) the placements this model's serve
+        arrays take on ``mesh`` with a ``slots``-wide slot batch."""
+        raise NotImplementedError
+
+    def bind_mesh(self, mesh, slots, rules=None) -> ServeShardings:
+        """Commit this StepModel to ``mesh``: recompute shardings and
+        rebuild the jitted programs so every compiled step runs SPMD
+        (and donates the slot state).  One mesh per StepModel — the
+        engine calls this at init when constructed with ``mesh=``."""
+        raise NotImplementedError
+
+    def place_params(self, params):
+        """device_put ``params`` against the bound mesh (identity when
+        unbound)."""
+        if self.mesh is None:
+            return params
+        return jax.device_put(params, self.sharding.params)
+
+    def put_slot(self, a):
+        """device_put one per-slot/wave array (dim0 = slot axis) against
+        the bound mesh (divisibility-gated DP; no-op when unbound).  The
+        NamedSharding per (dim0, rank) is cached — this runs ~10x per
+        decode step on the latency-critical host path."""
+        if self.mesh is None:
+            return a
+        a = jnp.asarray(a)
+        key = (a.shape[0] if a.ndim else None, a.ndim)
+        if self._slot_shardings is None:
+            self._slot_shardings = {}
+        sh = self._slot_shardings.get(key)
+        if sh is None:
+            sh = NamedSharding(self.mesh, shd.dim0_dp_spec(a.shape,
+                                                           self.mesh))
+            self._slot_shardings[key] = sh
+        return jax.device_put(a, sh)
 
     def init_state(self, batch):
         raise NotImplementedError
@@ -143,15 +215,106 @@ class DecoderStepModel(StepModel):
         self._jit_prefill_fast = None
         self._jit_prefill_scan = None
         self._cache_templates = {}
+        self._state_shardings = {}  # per-batch state placement (mesh only)
+
+    # -- mesh placement --------------------------------------------------
+    def state_spec(self, batch):
+        """ShapeDtypeStruct tree of init_state(batch) (no allocation)."""
+        if not self.positional:
+            return self.model.cache_spec(batch, self.max_len)
+        unit = self.model.cache_spec(1, self.max_len)
+        return jax.tree_util.tree_map(
+            lambda s: jax.ShapeDtypeStruct((batch,) + s.shape, s.dtype),
+            unit)
+
+    def state_axes(self):
+        """Logical axes of init_state's layout.  Native model layout for
+        O(1)-state stacks; positional stacks stack per-slot unit caches,
+        so the slot axis is prepended as a leading "batch" (the unit's
+        own singleton batch dim then loses the DP divisibility race and
+        replicates, as it should)."""
+        axes = self.model.cache_axes()
+        if not self.positional:
+            return axes
+        return jax.tree_util.tree_map(
+            lambda t: ("batch",) + tuple(t), axes,
+            is_leaf=lambda x: isinstance(x, tuple))
+
+    def _state_sharding(self, mesh, batch):
+        key = (id(mesh), batch)
+        if key not in self._state_shardings:
+            spec = shd.serve_cache_specs(self.state_axes(),
+                                         self.state_spec(batch), mesh)
+            self._state_shardings[key] = shd.named_sharding_tree(spec,
+                                                                 mesh)
+        return self._state_shardings[key]
+
+    def shardings(self, mesh, slots, rules=None) -> ServeShardings:
+        p_shapes = jax.eval_shape(self.model.init, jax.random.PRNGKey(0))
+        p_spec = shd.param_specs(self.model, p_shapes, mesh, rules)
+        return ServeShardings(
+            mesh=mesh,
+            params=shd.named_sharding_tree(p_spec, mesh),
+            state=self._state_sharding(mesh, int(slots)),
+            slot=NamedSharding(mesh, shd.dim0_dp_spec((int(slots),), mesh)),
+            replicated=NamedSharding(mesh, P()))
+
+    def bind_mesh(self, mesh, slots, rules=None) -> ServeShardings:
+        """Rebuild the jitted programs for SPMD serving on ``mesh``:
+
+        * the decode step and the admission scatter pin their state
+          output to the serve cache shardings (so the engine's carried
+          state never drifts placement between steps — one compiled
+          program, not a placement-chasing family) and DONATE the
+          incoming state buffer;
+        * per-call host arrays are device_put against the slot sharding
+          by :meth:`step` / :meth:`sample` / :meth:`write_slots`;
+        * prefill templates and compiled programs are dropped so
+          serve.prefill rebuilds them placed.
+        """
+        slots = int(slots)
+        if (self.mesh is mesh
+                and getattr(self, "_bound_slots", None) == slots
+                and getattr(self, "_bound_rules", None) == rules):
+            return self.sharding
+        self._state_shardings = {}
+        self._slot_shardings = {}
+        self.mesh = mesh
+        self._bound_slots = slots
+        self._bound_rules = rules
+        self.sharding = self.shardings(mesh, slots, rules)
+        self._jit_step = jax.jit(
+            self._step_impl, donate_argnums=(2,),
+            out_shardings=(self.sharding.slot, self.sharding.state))
+        self._jit_write = jax.jit(self._write_impl, donate_argnums=(0,),
+                                  out_shardings=self.sharding.state)
+        self._jit_sample = jax.jit(self._sample_impl)
+        self._greedy = {}
+        self._jit_prefill_fast = None
+        self._jit_prefill_scan = None
+        self._cache_templates = {}
+        return self.sharding
+
+    def place_cache(self, cache):
+        """Place a NATIVE-layout prefill cache (batch = wave size) against
+        the serve cache rules (used by serve.prefill for its templates)."""
+        if self.mesh is None:
+            return cache
+        shapes = jax.tree_util.tree_map(
+            lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), cache)
+        spec = shd.serve_cache_specs(self.model.cache_axes(), shapes,
+                                     self.mesh)
+        return jax.device_put(cache,
+                              shd.named_sharding_tree(spec, self.mesh))
 
     # -- state ----------------------------------------------------------
     def init_state(self, batch):
-        if not self.positional:
-            return self.model.init_cache(batch, self.max_len)
-        # per-slot unit caches (inner batch 1), stacked on the slot axis
-        unit = self.model.cache_spec(1, self.max_len)
-        return jax.tree_util.tree_map(
-            lambda s: jnp.zeros((batch,) + s.shape, s.dtype), unit)
+        state = jax.tree_util.tree_map(
+            lambda s: jnp.zeros(s.shape, s.dtype), self.state_spec(batch))
+        if self.mesh is not None:
+            state = jax.device_put(state,
+                                   self._state_sharding(self.mesh, batch))
+        return state
 
     # -- prefill (an admission wave of same-length prompts) -------------
     def prefill(self, params, xs, pos0=0):
@@ -191,12 +354,22 @@ class DecoderStepModel(StepModel):
     def step(self, params, tok, state, pos, active, sampling=None):
         """tok: (slots,) int32; pos, active: (slots,); sampling: dict of
         per-slot knob arrays (None -> all-greedy arrays of the same
-        dtypes, so greedy/sampled traffic share ONE compiled program)."""
+        dtypes, so greedy/sampled traffic share ONE compiled program).
+        Under a bound mesh every host-side array is device_put against
+        the slot sharding first, so each step dispatches the same
+        compiled SPMD program (placement is part of the jit key)."""
         if sampling is None:
             n = int(tok.shape[0])
             if n not in self._greedy:
-                self._greedy[n] = greedy_arrays(n)
+                g = greedy_arrays(n)
+                if self.mesh is not None:
+                    g = {k: self.put_slot(v) for k, v in g.items()}
+                self._greedy[n] = g
             sampling = self._greedy[n]
+        if self.mesh is not None:
+            tok, pos, active = (self.put_slot(tok), self.put_slot(pos),
+                                self.put_slot(active))
+            sampling = {k: self.put_slot(v) for k, v in sampling.items()}
         return self._jit_step(params, tok, state, pos, active, sampling)
 
     def _sample_impl(self, logits, samp, pos):
@@ -216,8 +389,11 @@ class DecoderStepModel(StepModel):
 
     def sample(self, logits, sampling, pos):
         """Draw one token per row of ``logits`` (admission-wave shape)."""
-        return self._jit_sample(logits, sampling, jnp.asarray(pos,
-                                                              jnp.int32))
+        pos = jnp.asarray(pos, jnp.int32)
+        if self.mesh is not None:
+            sampling = {k: self.put_slot(v) for k, v in sampling.items()}
+            pos = self.put_slot(pos)
+        return self._jit_sample(logits, sampling, pos)
 
     def _emit_impl(self, logits):
         """Greedy over the REAL vocab (ignore Megatron padding columns).
@@ -246,8 +422,10 @@ class DecoderStepModel(StepModel):
 
     def write_slots(self, state, batch_state, slots):
         """Install an admission wave's prefill carry into its slots."""
-        return self._jit_write(state, batch_state, jnp.asarray(slots,
-                                                               jnp.int32))
+        slots = jnp.asarray(slots, jnp.int32)
+        if self.mesh is not None:
+            slots = jax.device_put(slots, self.sharding.replicated)
+        return self._jit_write(state, batch_state, slots)
 
 
 # ---------------------------------------------------------------------------
@@ -279,6 +457,39 @@ class MinimalistStepModel(StepModel):
         self._jit_step = jax.jit(self._step_impl)
         self._jit_write = jax.jit(self._write_impl)
 
+    # -- mesh placement --------------------------------------------------
+    # Frame streaming serves DP-only: slots (and their O(1) states) shard
+    # over "data"; the paper-scale analog blocks are far too small to pay
+    # TP collectives, so params replicate.
+    def shardings(self, mesh, slots, rules=None) -> ServeShardings:
+        del rules
+        repl = NamedSharding(mesh, P())
+        state_shapes = jax.tree_util.tree_map(
+            lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype),
+            self.net.initial_state(int(slots)))
+        return ServeShardings(
+            mesh=mesh, params=repl,
+            state=shd.named_sharding_tree(
+                shd.slot_specs(state_shapes, mesh), mesh),
+            slot=NamedSharding(mesh, shd.dim0_dp_spec((int(slots),), mesh)),
+            replicated=repl)
+
+    def bind_mesh(self, mesh, slots, rules=None) -> ServeShardings:
+        del rules                        # DP-only: no rule table in play
+        slots = int(slots)
+        if self.mesh is mesh and getattr(self, "_bound_slots", None) == slots:
+            return self.sharding
+        self._slot_shardings = {}
+        self.mesh = mesh
+        self._bound_slots = slots
+        self.sharding = self.shardings(mesh, slots)
+        self._jit_step = jax.jit(self._step_impl, donate_argnums=(2,),
+                                 out_shardings=(self.sharding.slot,
+                                                self.sharding.state))
+        self._jit_write = jax.jit(self._write_impl, donate_argnums=(0,),
+                                  out_shardings=self.sharding.state)
+        return self.sharding
+
     def _export(self, params):
         """(Re)export 2 b codes when a different params object arrives.
         The codes enter the fused step as jit CONSTANTS, so the step jit
@@ -289,11 +500,22 @@ class MinimalistStepModel(StepModel):
             self._exported = [mb_ops.from_block_params(params[b.name])
                               for b in self.net.blocks]
             self._export_src = params
-            self._jit_step = jax.jit(self._step_impl)
+            if self.mesh is not None:     # keep the bound-mesh jit options
+                self._jit_step = jax.jit(
+                    self._step_impl, donate_argnums=(2,),
+                    out_shardings=(self.sharding.slot, self.sharding.state))
+            else:
+                self._jit_step = jax.jit(self._step_impl)
         return self._exported
 
     def init_state(self, batch):
-        return self.net.initial_state(batch)
+        state = self.net.initial_state(batch)
+        if self.mesh is not None:
+            shapes = jax.tree_util.tree_map(
+                lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), state)
+            state = jax.device_put(state, shd.named_sharding_tree(
+                shd.slot_specs(shapes, self.mesh), self.mesh))
+        return state
 
     def _raw_step(self, params, x, state):
         if self.use_fused_kernel:
@@ -319,6 +541,9 @@ class MinimalistStepModel(StepModel):
         del sampling
         if self.use_fused_kernel:
             self._export(params)        # host-side, once; jit sees constants
+        if self.mesh is not None:
+            x, pos, active = (self.put_slot(x), self.put_slot(pos),
+                              self.put_slot(active))
         return self._jit_step(params, x, state, pos, active)
 
     def emit(self, out):
@@ -330,5 +555,8 @@ class MinimalistStepModel(StepModel):
             state, batch_state)
 
     def write_slots(self, state, batch_state, slots):
-        return self._jit_write(state, batch_state,
-                               jnp.asarray(slots, jnp.int32))
+        slots = jnp.asarray(slots, jnp.int32)
+        if self.mesh is not None:
+            slots = jax.device_put(slots, self.sharding.replicated)
+            batch_state = jax.tree_util.tree_map(self.put_slot, batch_state)
+        return self._jit_write(state, batch_state, slots)

@@ -444,6 +444,79 @@ def test_submit_rejects_bad_sampling(lm, net):
 
 
 # ---------------------------------------------------------------------------
+# mesh serving (the 1x1 bitwise regression; multi-device lives in
+# tests/test_serve_sharded.py behind the forced-8-device subprocess)
+# ---------------------------------------------------------------------------
+
+def test_mesh_1x1_engine_bitwise_matches_no_mesh(lm):
+    """The mesh-sharded serving path on a 1x1 local mesh is the SAME
+    program as the classic single-device engine: identical token streams
+    (greedy and sampled, bitwise) for one traffic mix, still exactly one
+    compiled decode step.  Pins that the sharded refactor (explicit
+    NamedShardings, device_put transfers, donated state) is a placement
+    change, not a numerics change."""
+    from repro.launch.mesh import make_local_mesh
+    cfg, model, params = lm
+    rng = np.random.default_rng(11)
+    lens = [(5, 4), (13, 7), (3, 2), (9, 5), (21, 3)]
+    prompts = [rng.integers(0, cfg.vocab, size=p) for p, _ in lens]
+    sps = [None, SamplingParams(temperature=0.9, top_k=12, seed=3), None,
+           SamplingParams(temperature=1.2, top_p=0.8, seed=5),
+           SamplingParams(temperature=0.7, seed=8)]
+
+    def run(mesh):
+        sm = DecoderStepModel(model, max_len=64, prefill_chunk=8)
+        eng = ServeEngine(sm, params, slots=3, mesh=mesh)
+        reqs = [eng.submit(p, max_new_tokens=g, sampling=sp)
+                for p, (_, g), sp in zip(prompts, lens, sps)]
+        eng.run()
+        return [list(r.tokens) for r in reqs], sm, eng
+
+    ref, _, _ = run(None)
+    mesh = make_local_mesh(model=1, data=1)
+    got, sm, eng = run(mesh)
+    assert got == ref
+    assert sm._jit_step._cache_size() == 1
+    assert eng.mesh is mesh and sm.mesh is mesh
+    # the engine's state really carries the bound placement
+    leaf = jax.tree_util.tree_leaves(eng.state)[0]
+    assert leaf.sharding.mesh is mesh
+
+
+def test_mesh_1x1_streaming_bitwise(net):
+    """Frame streaming (DP-only sharding) under a 1x1 mesh: bitwise."""
+    from repro.launch.mesh import make_local_mesh
+    netw, params = net
+    rng = np.random.default_rng(12)
+    streams = [rng.standard_normal((T, 3)).astype(np.float32)
+               for T in (6, 3, 9, 4)]
+
+    def run(mesh):
+        eng = ServeEngine(MinimalistStepModel(netw), params, slots=2,
+                          mesh=mesh)
+        reqs = [eng.submit(s) for s in streams]
+        eng.run()
+        return reqs
+
+    ref = run(None)
+    got = run(make_local_mesh(model=1, data=1))
+    for a, b in zip(ref, got):
+        for x, y in zip(a.outputs, b.outputs):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_make_local_mesh_rejects_oversubscription():
+    """make_local_mesh raises a named ValueError (not a bare assert)
+    when the requested mesh exceeds the device count."""
+    from repro.launch.mesh import make_local_mesh
+    n = len(jax.devices())
+    with pytest.raises(ValueError, match=f"needs {2 * (n + 1)} devices"):
+        make_local_mesh(model=2, data=n + 1)
+    with pytest.raises(ValueError, match=">= 1"):
+        make_local_mesh(model=0, data=1)
+
+
+# ---------------------------------------------------------------------------
 # chunked prefill
 # ---------------------------------------------------------------------------
 

@@ -62,6 +62,50 @@ def test_missing_mesh_axis_is_dropped():
     assert s[0] == "data"
 
 
+def test_serve_cache_rules_never_shard_kv_len():
+    """Serving caches: slot batch -> DP, kv_heads -> TP, but the cache
+    LENGTH always replicates — a length-sharded cache would split every
+    decode-step softmax reduction across devices and break the engine's
+    placement-invariance contract.  (The dry-run's long-context batch-1
+    SP regime keeps CACHE_RULES.)"""
+    mesh = FakeMesh(data=2, model=2)
+    axes = ("batch", "kv_len", "kv_heads", "head_dim")
+    # slot batch divisible -> DP; length replicated even though 'data'
+    # would be free under CACHE_RULES' SP fallback
+    s = shd.spec_for(axes, (4, 1024, 2, 16), shd.SERVE_CACHE_RULES, mesh)
+    assert s == P("data", None, "model", None)
+    # batch 1 (a solo admission wave): length STILL replicated
+    s = shd.spec_for(axes, (1, 1024, 2, 16), shd.SERVE_CACHE_RULES, mesh)
+    assert s == P(None, None, "model", None)
+    # the stacked positional layout (slots, 1, L, KV, hd): outer slot
+    # axis takes DP, the unit's singleton batch dim loses and replicates
+    s = shd.spec_for(("batch",) + axes, (4, 1, 1024, 2, 16),
+                     shd.SERVE_CACHE_RULES, mesh)
+    assert s == P("data", None, None, "model", None)
+
+
+def test_slot_specs_divisibility_and_trailing_dims():
+    """Per-slot decode arrays: dim0 (slot axis) -> DP when divisible,
+    trailing dims and scalars replicate, odd slot counts replicate."""
+    import jax.numpy as jnp
+    mesh = FakeMesh(pod=2, data=2, model=2)
+    sds = jax.ShapeDtypeStruct
+    specs = shd.slot_specs(
+        {"tok": sds((8,), jnp.int32), "cur": sds((8, 3), jnp.float32),
+         "pos": sds((), jnp.int32), "odd": sds((3,), jnp.int32)}, mesh)
+    assert specs["tok"] == P(("pod", "data"))
+    assert specs["cur"] == P(("pod", "data"), None)
+    assert specs["pos"] == P()
+    assert specs["odd"] == P(None)     # rank kept, just replicated
+
+
+def test_mesh_info_dp_tp_without_pod_axis():
+    from repro.launch.mesh import mesh_info
+    assert mesh_info(FakeMesh(data=4, model=2)) == {
+        "axes": {"data": 4, "model": 2}, "n_devices": 8, "dp": 4, "tp": 2}
+    assert mesh_info(FakeMesh(pod=2, data=16, model=16))["dp"] == 32
+
+
 SUBPROCESS_PROG = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
