@@ -19,8 +19,12 @@ and for the prefill comparison at prompt length >= 256:
     chunking across ragged prompt lengths, compile counts included
 plus an MoE stack row (qwen3-moe smoke): batch-invariant auto dispatch
 (gather-GEMM decode + per-request prefill) vs pooled capacity dispatch,
-and a sharded row: the engine on a local DxM device mesh (TP params /
-caches, DP slots — see README §Sharded serving) vs the no-mesh engine.
+a sharded row: the engine on a local DxM device mesh (TP params /
+caches, DP slots — see README §Sharded serving) vs the no-mesh engine,
+and paged-KV rows (README §Paged KV cache): paged vs dense tokens/s at
+equal occupancy plus max concurrent long-context requests at fixed KV
+memory (dense buys concurrency in slots x max_len bytes; paged in live
+pages).
 
     PYTHONPATH=src python -m benchmarks.decode_throughput \
         [--arch minimalist-lm-360m] [--batches 1,64,256] [--gen 16]
@@ -92,9 +96,12 @@ def _warm_engine(sm, params, batch, plens):
     all prompt lengths share one chunk program per wave size), the
     per-wave admission sampler, plus the decode step at the slot-batch
     shape (writes use all-OOB slots: dropped).  jnp arrays throughout so
-    the warm dispatch signatures match the engine's exactly."""
+    the warm dispatch signatures match the engine's exactly.  Paged
+    layout: writes use all-OOB page rows (dropped) and the step warms
+    with a zero block table."""
     from repro.common import pow2ceil
     from repro.serve.sampling import greedy_arrays
+    paged = getattr(sm, "kv_layout", "dense") == "paged"
     state = sm.init_state(batch)
     cap = pow2ceil(max(1, batch))
     for P in sorted(set(plens)):
@@ -104,13 +111,21 @@ def _warm_engine(sm, params, batch, plens):
             last, carry = sm.prefill(params, toks)
             # thread the returned state: a mesh-bound StepModel DONATES
             # the incoming state buffer, so the old reference is dead
-            state = sm.write_slots(state, carry, np.full(B, batch,
-                                                         np.int32))
+            if paged:
+                state = sm.write_slots(
+                    state, carry, np.full(B, batch, np.int32),
+                    pages=np.full((B, sm.max_pages), sm.num_pages(batch),
+                                  np.int32), plen=P)
+            else:
+                state = sm.write_slots(state, carry, np.full(B, batch,
+                                                             np.int32))
             np.asarray(sm.sample(last, greedy_arrays(B),
                                  np.full(B, P, np.int32)))
             B *= 2
+    kw = dict(bt=np.zeros((batch, sm.max_pages), np.int32)) if paged \
+        else {}
     sm.step(params, jnp.zeros(batch, jnp.int32), state,
-            jnp.zeros(batch, jnp.int32), jnp.ones(batch, bool))
+            jnp.zeros(batch, jnp.int32), jnp.ones(batch, bool), **kw)
 
 
 def _run_engine(sm, params, prompts, glens, batch, sampled=False):
@@ -267,6 +282,74 @@ def _sharded_compare(model, params, cfg, batch=4, gen=8, prompt=16,
     return rows
 
 
+def _paged_compare(batch=4, gen=8, prompt=16, chunk=8):
+    """Paged vs dense KV layout on a GQA stack (smollm smoke).
+
+    Row 1/2: tokens/s and per-step latency at EQUAL occupancy — same
+    traffic, same slot count, page pool at dense-equivalent capacity —
+    the pure overhead of page indirection (block-table gather + page
+    scatter per step).
+
+    Row 3: admission capacity at FIXED KV memory for long max_len.  The
+    dense layout preallocates slots x max_len cache rows, so its
+    concurrency is bought in max_len-sized bytes no matter how long
+    requests actually are; the paged pool spends a page chain per LIVE
+    request.  Concurrency at the same byte budget (requests of req_len
+    tokens, max_len 4096): paged admits strictly more whenever
+    req_len < max_len — this row pins the gap."""
+    from repro.serve import PagedConfig
+    cfg = get_config("smollm-360m-smoke")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(17)
+    prompts, glens = _workload(rng, cfg, 2 * batch, prompt, gen, chunk)
+    max_len = max(len(p) for p in prompts) + max(glens) + 1
+    rows, out = [], {}
+    for layout in ("dense", "paged"):
+        kw = {} if layout == "dense" else dict(
+            kv_layout="paged", paged=PagedConfig(page_size=chunk))
+        sm = DecoderStepModel(model, max_len=max_len, prefill_chunk=chunk,
+                              **kw)
+        _warm_engine(sm, params, batch, [len(p) for p in prompts])
+        tps, lat, _eng = _run_engine(sm, params, prompts, glens, batch)
+        out[layout] = tps
+        rows.append({
+            "name": f"decode_paged/{layout}/batch{batch}",
+            "us_per_call": f"{np.median(lat)*1e6:.0f}",
+            "derived": f"tok_s={tps:.1f};"
+                       f"p50_ms={np.percentile(lat,50)*1e3:.2f};"
+                       f"p99_ms={np.percentile(lat,99)*1e3:.2f}",
+        })
+    rows[-1]["derived"] += \
+        f";paged_vs_dense={out['paged']/max(out['dense'],1e-9):.2f}x"
+
+    def nbytes(tree):
+        return int(sum(int(np.prod(s.shape)) * s.dtype.itemsize
+                       for s in jax.tree_util.tree_leaves(tree)))
+
+    long_max, req_len, ps, dense_slots = 4096, 512, 64, 8
+    sm_d = DecoderStepModel(model, max_len=long_max)
+    budget = nbytes(sm_d.state_spec(dense_slots))
+    sm_p = DecoderStepModel(model, max_len=long_max, kv_layout="paged",
+                            paged=PagedConfig(page_size=ps))
+    spec1 = sm_p.state_spec(1)          # pool auto-sized to 1 request
+    pool_b = nbytes({k: v for k, v in spec1.items()
+                     if k in sm_p._pool_names})
+    slot_b = nbytes({k: v for k, v in spec1.items()
+                     if k not in sm_p._pool_names})
+    per_req = sm_p.pages_for(req_len) * (pool_b // sm_p.max_pages) + slot_b
+    paged_admits = budget // per_req
+    rows.append({
+        "name": f"paged_capacity/max_len{long_max}/req{req_len}",
+        "us_per_call": "0",
+        "derived": f"budget_mib={budget/2**20:.1f};"
+                   f"dense_concurrent={dense_slots};"
+                   f"paged_concurrent={paged_admits};"
+                   f"gain={paged_admits/dense_slots:.1f}x",
+    })
+    return rows
+
+
 def _moe_compare(batch=4, gen=8, prompt=16, chunk=8):
     """MoE stack serving: batch-invariant auto dispatch (gather-GEMM
     decode + per-request prefill) vs the pooled capacity dispatch the
@@ -299,18 +382,25 @@ def _moe_compare(batch=4, gen=8, prompt=16, chunk=8):
 
 
 def run(arch="minimalist-lm-360m", batches=(1, 64, 256), gen=16,
-        prompt=32, chunk=16, prefill_lens=(256, 512), mesh_spec=""):
+        prompt=32, chunk=16, prefill_lens=(256, 512), mesh_spec="",
+        kv_layout="dense"):
     cfg = get_config(arch + "-smoke")
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     rng = np.random.default_rng(7)
     rows = []
+    layout_kw = {}
+    if kv_layout == "paged":
+        from repro.serve import PagedConfig
+        layout_kw = dict(kv_layout="paged",
+                         paged=PagedConfig(page_size=max(chunk, 1)))
 
     for batch in batches:
         prompts, glens = _workload(rng, cfg, 2 * batch, prompt, gen, chunk)
         max_len = max(len(p) for p in prompts) + max(glens) + 1
         step = _baseline_step_fn(model)
-        sm = DecoderStepModel(model, max_len=max_len, prefill_chunk=chunk)
+        sm = DecoderStepModel(model, max_len=max_len, prefill_chunk=chunk,
+                              **layout_kw)
         # warmup both paths at the timed shapes (compile cost out)
         _run_baseline(model, params, prompts[:batch], [2] * batch,
                       max_len, batch, step)
@@ -357,6 +447,7 @@ def run(arch="minimalist-lm-360m", batches=(1, 64, 256), gen=16,
     rows.extend(_sharded_compare(model, params, cfg, gen=gen,
                                  mesh_spec=mesh_spec))
     rows.extend(_moe_compare(gen=gen))
+    rows.extend(_paged_compare(gen=gen))
     return emit(rows)
 
 
@@ -371,12 +462,17 @@ def main(argv=None):
     ap.add_argument("--mesh", default="",
                     help="DxM mesh for the sharded row (default: largest "
                          "2x2-capped grid the local devices allow)")
+    ap.add_argument("--kv-layout", default="dense",
+                    choices=["dense", "paged"],
+                    help="KV layout for the main decode/* engine rows "
+                         "(the decode_paged/* comparison rows always run "
+                         "both; attention-bearing --arch only for paged)")
     args = ap.parse_args(argv)
     run(arch=args.arch,
         batches=tuple(int(b) for b in args.batches.split(",")),
         gen=args.gen, prompt=args.prompt, chunk=args.chunk,
         prefill_lens=tuple(int(p) for p in args.prefill_lens.split(",")),
-        mesh_spec=args.mesh)
+        mesh_spec=args.mesh, kv_layout=args.kv_layout)
 
 
 if __name__ == "__main__":

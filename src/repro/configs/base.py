@@ -138,6 +138,13 @@ class ModelConfig:
     # linear-scan backend for recurrent mixers (minGRU/Mamba prefill):
     #   seq | xla | pallas (interpret) | pallas_tpu (compiled)
     scan_backend: str = "xla"
+    # paged-KV decode attention read (serving, kv_layout="paged"):
+    #   gather     — block-table gather to a dense view + the exact dense
+    #                decode math (bitwise-identical to the dense cache)
+    #   pallas     — kernels.paged_attention in interpret mode (CPU tests)
+    #   pallas_tpu — compiled page-indirect kernel (production; fp32
+    #                online softmax, numerically ~= gather, not bitwise)
+    paged_impl: str = "gather"
     # explicit sharding constraints on MoE dispatch buffers (cell B fix)
     moe_constraints: bool = False
 
@@ -223,6 +230,13 @@ class ServeConfig:
     slots: int = 8            # fixed slot-batch capacity (jit shape)
     max_len: int = 256        # cache length for attention-bearing stacks
     prefill_chunk: int = 256  # chunked-prefill chunk size (tokens)
+    # KV-cache layout for attention-bearing stacks (README §Paged KV):
+    #   "dense" — every slot preallocates (max_len, ...) cache rows
+    #   "paged" — a shared page pool + per-request block tables; memory
+    #             scales with live tokens, not slots × worst case
+    kv_layout: str = "dense"
+    page_size: int = 16       # tokens per KV page (paged layout)
+    num_pages: int = 0        # pool capacity; 0 = auto (dense-equivalent)
 
 
 @dataclasses.dataclass(frozen=True)

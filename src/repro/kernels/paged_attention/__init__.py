@@ -1,0 +1,5 @@
+"""Paged-attention decode kernels (block-table K/V page indirection)."""
+from repro.kernels.paged_attention.ops import (paged_gqa_attention,
+                                               paged_mla_attention)
+
+__all__ = ["paged_gqa_attention", "paged_mla_attention"]

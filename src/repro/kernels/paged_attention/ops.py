@@ -1,0 +1,79 @@
+"""Public paged-attention decode ops + analytic cost model.
+
+``paged_gqa_attention`` / ``paged_mla_attention`` dispatch one
+single-token decode read of a paged KV cache:
+
+  * backend "xla"         — dense-gather reference (ref.py): materializes
+                            each request's page chain and runs masked
+                            softmax attention.  The definitional oracle.
+  * backend "pallas"      — the TPU kernel in interpret mode (CPU tests)
+  * backend "pallas_tpu"  — compiled (production)
+
+Decode is inference-only, so no custom VJP is defined (the train/prefill
+regimes never see a page table).  ``cost_model`` returns the analytic
+per-call (flops, hbm_bytes): paged decode is memory-bound — it streams
+the LIVE pages once (the dense path would stream slots × max_len
+regardless of occupancy), plus q/out, which is the whole point.
+"""
+from __future__ import annotations
+
+from repro.kernels.paged_attention import ref
+from repro.kernels.paged_attention.paged_attention import (paged_gqa_fwd,
+                                                           paged_mla_fwd)
+
+BACKENDS = ("xla", "pallas", "pallas_tpu")
+
+
+def _check_backend(backend):
+    if backend not in BACKENDS:
+        raise ValueError(f"backend must be one of {BACKENDS}, "
+                         f"got {backend!r}")
+
+
+def paged_gqa_attention(q, pool_k, pool_v, block_tables, pos, *, length,
+                        window=None, backend="xla"):
+    """q: (B, H, hd); pool_k/v: (P, page, KV, hd) with H % KV == 0;
+    block_tables: (B, n_chain) int32 page ids; pos: (B,) -> (B, H, hd).
+
+    ``length`` is the dense cache length being emulated (ring length for
+    sliding-window, where it must be <= ``window``)."""
+    _check_backend(backend)
+    if window is not None and length > window:
+        raise ValueError(f"ring length {length} exceeds window {window} "
+                         "(pass length = min(window, max_len))")
+    if backend == "xla":
+        return ref.paged_gqa_ref(q, pool_k, pool_v, block_tables, pos,
+                                 length=length, window=window)
+    return paged_gqa_fwd(q, pool_k, pool_v, block_tables, pos,
+                         length=length, window=window,
+                         interpret=(backend == "pallas"))
+
+
+def paged_mla_attention(q_abs, q_rope, pool_ckv, pool_krope, block_tables,
+                        pos, *, length, scale, backend="xla"):
+    """Weight-absorbed MLA decode over latent pages -> (B, H, r) latent
+    output (caller up-projects through W^{UV})."""
+    _check_backend(backend)
+    if backend == "xla":
+        return ref.paged_mla_ref(q_abs, q_rope, pool_ckv, pool_krope,
+                                 block_tables, pos, length=length,
+                                 scale=scale)
+    return paged_mla_fwd(q_abs, q_rope, pool_ckv, pool_krope, block_tables,
+                         pos, length=length, scale=scale,
+                         interpret=(backend == "pallas"))
+
+
+def cost_model(B, H, KV, hd, *, live_tokens, page_size, dtype_bytes=2):
+    """Analytic (flops, hbm_bytes) for one paged GQA decode call.
+
+    flops: 2 matmuls (q·Kᵀ, P·V) over the live tokens = 4·B·H·T·hd.
+    hbm_bytes: the LIVE K/V pages streamed once (rounded up to whole
+    pages — the page is the DMA granule) + q and out; block tables are
+    int32 noise.  Compare: a dense decode streams slots × max_len K/V
+    regardless of how many tokens are actually live."""
+    pages = -(-live_tokens // page_size)
+    flops = 4 * B * H * live_tokens * hd
+    kv = 2 * B * pages * page_size * KV * hd * dtype_bytes
+    qo = 2 * B * H * hd * dtype_bytes
+    bt = B * pages * 4
+    return flops, kv + qo + bt

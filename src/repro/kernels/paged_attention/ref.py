@@ -1,0 +1,103 @@
+"""Pure-jnp oracle for paged (block-table) single-token decode attention.
+
+The KV cache lives in a shared page pool ``(num_pages, page_size, ...)``;
+each request owns a chain of page ids (one block-table row).  The dense
+cache entry at in-cache index ``j`` of request ``b`` is
+
+    pool[block_tables[b, j // page_size], j % page_size]
+
+Three index-space families, matching the dense decode paths in
+``repro.models.attention`` exactly:
+
+  * global GQA       — in-cache index j IS the absolute position
+  * sliding-window   — j is a RING index over ``length`` entries; the
+                       position it holds is the largest p <= pos with
+                       p % length == j (wrap-free: the bounded page chain
+                       is recycled in place as the window slides)
+  * MLA latent pages — like global, over compressed (ckv, k_rope) latents
+
+Entries whose reconstructed position is masked (unwritten ring slots,
+positions beyond ``pos``, outside the window) contribute EXACTLY zero
+attention weight regardless of page content, so stale pages from freed
+requests and unallocated block-table entries can never leak into an
+output — the property the serving engine's page recycling relies on.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def gather_pages(pool, block_tables, length):
+    """Dense view of the first ``length`` in-cache entries per request.
+
+    pool: (P, page, ...); block_tables: (B, n_chain) int32 ->
+    (B, length, ...).  Out-of-range page ids clamp (jnp gather), which is
+    safe: any entry they produce is masked by position."""
+    ps = pool.shape[1]
+    idx = jnp.arange(length)
+    pages = block_tables[:, idx // ps]            # (B, length)
+    return pool[pages, idx[None, :] % ps]
+
+
+def paged_positions(pos, length, window=None):
+    """Reconstructed absolute position + validity per in-cache index.
+
+    pos: (B,) current decode position.  Returns (k_pos, valid), both
+    (B, length): ``valid`` marks entries a query at ``pos`` may attend."""
+    idx = jnp.arange(length)
+    if window is None:
+        k_pos = jnp.broadcast_to(idx[None, :], (pos.shape[0], length))
+    else:
+        # ring entry j holds the latest position <= pos congruent to
+        # j (mod length) — same formula as the dense ring decode
+        k_pos = pos[:, None] - ((pos[:, None] - idx[None, :]) % length)
+    valid = (k_pos >= 0) & (k_pos <= pos[:, None])
+    if window is not None:
+        valid &= (pos[:, None] - k_pos) < window
+    return k_pos, valid
+
+
+def paged_gqa_ref(q, pool_k, pool_v, block_tables, pos, *, length,
+                  window=None):
+    """q: (B, H, hd); pool_k/v: (P, page, KV, hd); pos: (B,) -> (B, H, hd).
+
+    fp32 score/softmax math (the kernel's numerics), grouped queries
+    share KV heads without expanding them in memory."""
+    B, H, hd = q.shape
+    KV = pool_k.shape[2]
+    G = H // KV
+    kd = gather_pages(pool_k, block_tables, length)   # (B, L, KV, hd)
+    vd = gather_pages(pool_v, block_tables, length)
+    _k_pos, valid = paged_positions(pos, length, window)
+    qg = q.reshape(B, KV, G, hd).astype(jnp.float32)
+    scores = jnp.einsum("bkgd,blkd->bkgl", qg, kd.astype(jnp.float32))
+    scores = scores / math.sqrt(hd)
+    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgl,blkd->bkgd", w, vd.astype(jnp.float32))
+    return out.reshape(B, H, hd).astype(q.dtype)
+
+
+def paged_mla_ref(q_abs, q_rope, pool_ckv, pool_krope, block_tables, pos, *,
+                  length, scale):
+    """Weight-absorbed MLA decode over latent pages.
+
+    q_abs: (B, H, r) absorbed queries; q_rope: (B, H, dr); pool_ckv:
+    (P, page, r); pool_krope: (P, page, dr) -> latent output (B, H, r)
+    (the caller up-projects through W^{UV})."""
+    ccd = gather_pages(pool_ckv, block_tables, length)     # (B, L, r)
+    crd = gather_pages(pool_krope, block_tables, length)   # (B, L, dr)
+    _k_pos, valid = paged_positions(pos, length, None)
+    scores = (jnp.einsum("bhr,blr->bhl", q_abs.astype(jnp.float32),
+                         ccd.astype(jnp.float32))
+              + jnp.einsum("bhk,blk->bhl", q_rope.astype(jnp.float32),
+                           crd.astype(jnp.float32))) * scale
+    scores = jnp.where(valid[:, None, :], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhl,blr->bhr", w, ccd.astype(jnp.float32))
+    return out.astype(q_abs.dtype)

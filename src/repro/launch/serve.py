@@ -13,8 +13,11 @@ slots go straight back into circulation.  ``--temperature/--top-k/--top-p``
 turn on per-request sampling (counter-based PRNG: reproducible per
 request, same compiled step as greedy).  ``--mesh DxM`` serves under a
 local device mesh (TP params/caches over "model", DP slots over "data";
-README §Sharded serving).  ``--baseline`` runs the old static-batch
-loop instead (kept as the benchmark reference).
+README §Sharded serving).  ``--kv-layout paged`` stores attention K/V in
+a shared page pool with per-request block tables (``--page-size``,
+``--num-pages``; README §Paged KV cache) — memory scales with live
+tokens and admission defers when the pool is full.  ``--baseline`` runs
+the old static-batch loop instead (kept as the benchmark reference).
 """
 from __future__ import annotations
 
@@ -60,8 +63,14 @@ def generate(model, params, prompts, *, max_len, gen_tokens):
 
 def build_engine(model, params, serve: ServeConfig = ServeConfig(),
                  mesh=None):
+    kw = {}
+    if serve.kv_layout == "paged":
+        from repro.serve import PagedConfig
+        kw = dict(kv_layout="paged",
+                  paged=PagedConfig(page_size=serve.page_size,
+                                    num_pages=serve.num_pages))
     sm = DecoderStepModel(model, max_len=serve.max_len,
-                          prefill_chunk=serve.prefill_chunk)
+                          prefill_chunk=serve.prefill_chunk, **kw)
     return ServeEngine(sm, params, slots=serve.slots, mesh=mesh)
 
 
@@ -116,6 +125,20 @@ def main(argv=None):
                          "DP-shard over 'data'; needs D*M local devices "
                          "(XLA_FLAGS=--xla_force_host_platform_device_"
                          "count=N fakes them on CPU)")
+    ap.add_argument("--kv-layout", default="dense",
+                    choices=["dense", "paged"],
+                    help="attention KV-cache layout: 'dense' preallocates "
+                         "(slots, max_len) rows per slot; 'paged' shares "
+                         "a page pool with per-request block tables so "
+                         "memory scales with live tokens (README §Paged "
+                         "KV cache)")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="tokens per KV page (paged layout)")
+    ap.add_argument("--num-pages", type=int, default=0,
+                    help="page-pool capacity; 0 auto-sizes to the dense "
+                         "equivalent (slots x pages-per-max-len-request) "
+                         "— set lower to actually cap memory (admission "
+                         "defers when the pool is full)")
     ap.add_argument("--baseline", action="store_true",
                     help="run the static-batch loop instead of the engine")
     args = ap.parse_args(argv)
@@ -166,8 +189,15 @@ def main(argv=None):
 
     eng = build_engine(model, params,
                        ServeConfig(slots=args.slots, max_len=max_len,
-                                   prefill_chunk=args.prefill_chunk),
+                                   prefill_chunk=args.prefill_chunk,
+                                   kv_layout=args.kv_layout,
+                                   page_size=args.page_size,
+                                   num_pages=args.num_pages),
                        mesh=mesh)
+    if eng.pool is not None:
+        print(f"paged KV: {eng.pool.num_pages} pages x "
+              f"{args.page_size} tokens, "
+              f"<= {eng.pool.max_pages} pages/request")
     if mesh is not None:
         info = mesh_info(mesh)
         print(f"mesh: {info['axes']} (dp={info['dp']} tp={info['tp']}, "

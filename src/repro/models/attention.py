@@ -16,6 +16,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, MLAConfig
+from repro.kernels.paged_attention.ref import gather_pages, paged_positions
 from repro.models.module import Module, RMSNorm, fan_in_init
 
 NEG_INF = -1e30
@@ -213,6 +214,61 @@ class GQAAttention(Module):
         y = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
         return y, {"k": ck, "v": cv}
 
+    # --- paged decode (shared page pool + per-request block tables) ---
+    def paged_cache_spec(self, num_pages, page_size, dtype=jnp.bfloat16):
+        c = self.cfg
+        s = jax.ShapeDtypeStruct(
+            (num_pages, page_size, c.n_kv_heads, c.head_dim), dtype)
+        return {"k": s, "v": s}
+
+    def paged_cache_axes(self):
+        a = ("pages", "page", "kv_heads", "head_dim")
+        return {"k": a, "v": a}
+
+    def ring_length(self, length):
+        """Dense in-cache length this layer emulates at engine max_len
+        ``length`` (the sliding-window ring retains only the window)."""
+        return min(length, self.window) if self.window else length
+
+    def decode_paged(self, params, x, cache, pos, bt, active, length):
+        """One slot-batched decode step against the page pool.
+
+        x: (B, 1, D); pos/active: (B,); bt: (B, max_pages) page ids;
+        cache: {"k","v"} pools (P, page, KV, hd); ``length`` = the
+        engine's max_len.  The current token's K/V is scattered into the
+        slot's live page (inactive slots write out of bounds — dropped,
+        which IS the frozen-slot merge for pool state), then attention
+        reads the chain back.  The default "gather" impl reconstructs the
+        dense in-cache view and runs EXACTLY the dense ``decode`` math —
+        entry j of the view equals dense cache entry j bitwise wherever
+        the causal/window mask can see it, so paged == dense bitwise.
+        "pallas"/"pallas_tpu" route the read through the page-indirect
+        kernel instead (fp32 online softmax; no dense view is built)."""
+        B = x.shape[0]
+        q, k, v = self._qkv(params, x, pos[:, None])
+        Pp, ps = cache["k"].shape[0], cache["k"].shape[1]
+        L = self.ring_length(length)
+        slot = (pos % L) if self.window else pos          # in-cache index
+        wpage = jnp.where(active, bt[jnp.arange(B), slot // ps], Pp)
+        ck = cache["k"].at[wpage, slot % ps].set(
+            k[:, 0].astype(cache["k"].dtype))
+        cv = cache["v"].at[wpage, slot % ps].set(
+            v[:, 0].astype(cache["v"].dtype))
+        impl = self.cfg.paged_impl
+        if impl != "gather":
+            from repro.kernels.paged_attention.ops import paged_gqa_attention
+            out = paged_gqa_attention(
+                q[:, 0], ck, cv, bt, pos, length=L, window=self.window,
+                backend=impl)[:, None]
+        else:
+            kd = gather_pages(ck, bt, L)                  # (B, L, KV, hd)
+            vd = gather_pages(cv, bt, L)
+            _k_pos, valid = paged_positions(pos, L, self.window)
+            mask = jnp.where(valid, 0.0, NEG_INF)[:, None, None, :]
+            out = _sdpa(q, kd.astype(q.dtype), vd.astype(q.dtype), mask)
+        y = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
+        return y, {"k": ck, "v": cv}
+
     def decode(self, params, x, cache, pos):
         """One-step decode. x: (B, 1, D); pos: scalar current position."""
         B = x.shape[0]
@@ -376,6 +432,65 @@ class MLAAttention(Module):
         w = jax.nn.softmax(scores.astype(jnp.float32) * scale + mask,
                            -1).astype(x.dtype)
         o_latent = jnp.einsum("bhsl,blr->bshr", w, cc.astype(x.dtype))
+        out = jnp.einsum("bshr,rhk->bshk", o_latent, w_uv)
+        y = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
+        return y, {"ckv": cc, "krope": cr}
+
+    # --- paged decode over latent pages ---
+    def paged_cache_spec(self, num_pages, page_size, dtype=jnp.bfloat16):
+        m = self.m
+        return {
+            "ckv": jax.ShapeDtypeStruct(
+                (num_pages, page_size, m.kv_lora_rank), dtype),
+            "krope": jax.ShapeDtypeStruct(
+                (num_pages, page_size, m.qk_rope_head_dim), dtype),
+        }
+
+    def paged_cache_axes(self):
+        return {"ckv": ("pages", "page", "kv_lora"),
+                "krope": ("pages", "page", "head_dim")}
+
+    def ring_length(self, length):
+        return length
+
+    def decode_paged(self, params, x, cache, pos, bt, active, length):
+        """Slot-batched weight-absorbed decode against latent page pools
+        (see GQAAttention.decode_paged for the contract).  The compressed
+        (ckv, k_rope) latents page exactly like K/V — this is what makes
+        MLA's small cache pay off twice at serve time: fewer bytes per
+        position AND pages allocated only for live positions."""
+        c, m = self.cfg, self.m
+        B = x.shape[0]
+        q_nope, q_rope, ckv, k_rope = self._latents(params, x, pos[:, None])
+        Pp, ps = cache["ckv"].shape[0], cache["ckv"].shape[1]
+        wpage = jnp.where(active, bt[jnp.arange(B), pos // ps], Pp)
+        cc = cache["ckv"].at[wpage, pos % ps].set(
+            ckv[:, 0].astype(cache["ckv"].dtype))
+        cr = cache["krope"].at[wpage, pos % ps].set(
+            k_rope[:, 0].astype(cache["krope"].dtype))
+        w_uk = params["w_ukv"][:, :, :m.qk_nope_head_dim].astype(x.dtype)
+        w_uv = params["w_ukv"][:, :, m.qk_nope_head_dim:].astype(x.dtype)
+        q_abs = jnp.einsum("bshk,rhk->bshr", q_nope, w_uk)
+        scale = 1.0 / math.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+        impl = self.cfg.paged_impl
+        if impl != "gather":
+            from repro.kernels.paged_attention.ops import paged_mla_attention
+            o_latent = paged_mla_attention(
+                q_abs[:, 0], q_rope[:, 0], cc, cr, bt, pos, length=length,
+                scale=scale, backend=impl)[:, None]
+            o_latent = o_latent.astype(x.dtype)
+        else:
+            ccd = gather_pages(cc, bt, length)            # (B, L, r)
+            crd = gather_pages(cr, bt, length)
+            scores = (jnp.einsum("bshr,blr->bhsl", q_abs,
+                                 ccd.astype(x.dtype))
+                      + jnp.einsum("bshk,blk->bhsl", q_rope,
+                                   crd.astype(x.dtype)))
+            _k_pos, valid = paged_positions(pos, length, None)
+            mask = jnp.where(valid, 0.0, NEG_INF)[:, None, None, :]
+            w = jax.nn.softmax(scores.astype(jnp.float32) * scale + mask,
+                               -1).astype(x.dtype)
+            o_latent = jnp.einsum("bhsl,blr->bshr", w, ccd.astype(x.dtype))
         out = jnp.einsum("bshr,rhk->bshk", o_latent, w_uv)
         y = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
         return y, {"ckv": cc, "krope": cr}

@@ -177,6 +177,26 @@ class DecoderLayer(Module):
             params["mixer"], self.norm1(params["norm1"], x), cache, pos)
         return self._mlp_tail(params, x + h, route="decode"), new_cache
 
+    def paged(self) -> bool:
+        """True when this layer's cache lives in a shared page pool under
+        the paged KV layout (attention mixers); O(1)-state mixers keep
+        their per-slot state either way."""
+        return hasattr(self.mixer, "decode_paged")
+
+    def decode_paged(self, params, x, cache, pos, bt, active, length):
+        """Slot-batched decode against paged caches.  pos/active: (B,)
+        vectors; bt: (B, max_pages) shared block table.  O(1)-state
+        mixers take their ordinary batched decode (they are
+        position-free); attention mixers read/write the page pool."""
+        h = self.norm1(params["norm1"], x)
+        if self.paged():
+            h, new_cache = self.mixer.decode_paged(
+                params["mixer"], h, cache, pos, bt, active, length)
+        else:
+            h, new_cache = self.mixer.decode(params["mixer"], h, cache,
+                                             pos)
+        return self._mlp_tail(params, x + h, route="decode"), new_cache
+
     def prefill(self, params, x, cache, pos0, length=None):
         """Consume a whole chunk (B, S, D) against the cache in one call.
         ``length`` = number of valid (non-grid-padding) leading tokens."""
@@ -201,6 +221,17 @@ class DecoderLayer(Module):
         if hasattr(self.mixer, "cache_axes"):
             return self.mixer.cache_axes()
         return {}
+
+    def paged_cache_spec(self, batch, length, num_pages, page_size,
+                         dtype=jnp.bfloat16):
+        if self.paged():
+            return self.mixer.paged_cache_spec(num_pages, page_size, dtype)
+        return self.cache_spec(batch, length, dtype)
+
+    def paged_cache_axes(self):
+        if self.paged():
+            return self.mixer.paged_cache_axes()
+        return self.cache_axes()
 
     def init_cache(self, batch, length, dtype=jnp.bfloat16):
         if hasattr(self.mixer, "init_cache"):
@@ -376,6 +407,88 @@ class DecoderLM(Module):
         return jax.tree_util.tree_map(
             lambda s: jnp.zeros(s.shape, s.dtype),
             self.cache_spec(batch, length, dtype))
+
+    def paged_cache_spec(self, batch, length, num_pages, page_size,
+                         dtype=jnp.bfloat16):
+        """Decode-cache spec under the PAGED KV layout: attention layers
+        hold shared page pools (num_pages, page_size, ...) — no slot
+        axis, pages are handed out by the serving engine's allocator —
+        while O(1)-state mixers keep their per-slot leaves exactly as in
+        the dense layout.  Scanned pattern units stack the layer-repeat
+        axis first, as everywhere else."""
+        spec = {}
+        for name, l, mode in self._all_layers():
+            s = l.paged_cache_spec(batch, length, num_pages, page_size,
+                                   dtype)
+            if mode == "scanned":
+                s = jax.tree_util.tree_map(
+                    lambda t: jax.ShapeDtypeStruct(
+                        (self.cfg.n_repeats,) + t.shape, t.dtype), s)
+            spec[name] = s
+        return spec
+
+    def paged_cache_axes(self):
+        axes = {}
+        for name, l, mode in self._all_layers():
+            a = l.paged_cache_axes()
+            if mode == "scanned":
+                a = jax.tree_util.tree_map(
+                    lambda t: ("layers",) + tuple(t), a,
+                    is_leaf=lambda x: isinstance(x, tuple))
+            axes[name] = a
+        return axes
+
+    def paged_layer_names(self):
+        """Names of layers whose cache lives in the page pool."""
+        return {name for name, l, _m in self._all_layers() if l.paged()}
+
+    def decode_step_paged(self, params, tokens, cache, pos, bt, active,
+                          length):
+        """One slot-batched decode step under the paged KV layout.
+
+        tokens: (B, 1); pos/active: (B,) per-slot vectors; bt:
+        (B, max_pages) block table shared by every attention layer (each
+        layer indexes its OWN pool with the same page ids); ``length`` =
+        the engine max_len.  Unlike ``decode_step`` (scalar pos, vmapped
+        over slots by the serving adapter), this runs the whole slot
+        batch natively — the page pools are shared state that a per-slot
+        vmap could not thread.  Attention writes from inactive slots are
+        dropped in-layer (out-of-bounds page); the caller masks the
+        per-slot leaves."""
+        x = self.embed(params["embed"], tokens).astype(self.compute_dtype())
+        new_cache = dict(cache)
+        for l in self.head_layers:
+            x, new_cache[l.name] = l.decode_paged(
+                params[l.name], x, cache[l.name], pos, bt, active, length)
+        if self.scan_layers:
+            def body(carry, rep):
+                h = carry
+                rep_params, rep_cache = rep
+                out_cache = {}
+                for l in self.unit_layers:
+                    h, out_cache[l.name] = l.decode_paged(
+                        rep_params[l.name], h, rep_cache[l.name], pos, bt,
+                        active, length)
+                return h, out_cache
+
+            stacked_p = {l.name: params[l.name] for l in self.unit_layers}
+            stacked_c = {l.name: cache[l.name] for l in self.unit_layers}
+            x, updated = jax.lax.scan(body, x, (stacked_p, stacked_c))
+            for l in self.unit_layers:
+                new_cache[l.name] = updated[l.name]
+        else:
+            for r in range(self.cfg.n_repeats):
+                for l in self.unit_layers:
+                    nm = f"{l.name}_r{r}"
+                    x, new_cache[nm] = l.decode_paged(
+                        params[nm], x, cache[nm], pos, bt, active, length)
+        for l in self.tail_layers:
+            x, new_cache[l.name] = l.decode_paged(
+                params[l.name], x, cache[l.name], pos, bt, active, length)
+        x = self.final_norm(params["final_norm"], x)
+        head = params["embed"] if self.cfg.tie_embeddings \
+            else params["lm_head"]
+        return self.embed.attend(head, x), new_cache
 
     def supports_prefill(self) -> bool:
         """True when every layer can consume whole chunks against its cache

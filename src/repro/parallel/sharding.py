@@ -168,6 +168,15 @@ CACHE_RULES = {
     "heads": "model",
     "frames": None,
     "embed": None,
+    # paged KV pools (serve.paged): the page-id axis and the in-page
+    # position are NEVER sharded — a page is the allocator's indivisible
+    # unit and any decode step may read any page, so sharding either
+    # would split softmax reductions across devices (the same reason
+    # kv_len is pinned unsharded when serving).  Pools still TP-shard
+    # their kv_heads / latent dims via the rules above; block tables are
+    # per-slot arrays and DP-shard over "data" like every slot array.
+    "pages": None,
+    "page": None,
 }
 
 
@@ -190,7 +199,11 @@ def serve_cache_specs(cache_axes_tree, cache_shapes, mesh: Mesh,
                       rules=None):
     """Cache specs for the serving engine's slot-batch state: slot batch
     over DP, TP-shardable cache dims (kv_heads / d_inner / latent heads)
-    over 'model', cache length replicated (see SERVE_CACHE_RULES)."""
+    over 'model', cache length replicated (see SERVE_CACHE_RULES).  The
+    paged layout rides the same table: page pools place as
+    (pages=never-sharded, page=never-sharded, kv_heads='model', ...) so
+    a pool is pages x TP-sharded heads, and the engine's block tables go
+    through the slot placement (DP over 'data')."""
     return cache_specs(cache_axes_tree, cache_shapes, mesh,
                        rules or SERVE_CACHE_RULES)
 

@@ -16,9 +16,14 @@ StepModel protocol with per-slot position tracking.
     (one linear_scan / K-V block write per chunk; exactly one compiled
     chunk shape across ragged prompt lengths)
   * :mod:`repro.serve.engine`   — the fixed-capacity slot scheduler
+  * :mod:`repro.serve.paged`    — paged KV cache for the attention
+    stacks: block-table page allocator + page pools, so cache memory
+    scales with LIVE tokens instead of slots × max_len (the O(1)-state
+    paths never needed it and are untouched)
 """
 from repro.configs.base import SamplingParams
 from repro.serve.engine import Request, ServeEngine
+from repro.serve.paged import PagedConfig, PagePool
 from repro.serve.prefill import chunked_prefill
 from repro.serve.protocol import (DecoderStepModel, MinimalistStepModel,
                                   ServeShardings, StepModel)
@@ -26,4 +31,5 @@ from repro.serve.sampling import sample_tokens
 
 __all__ = ["Request", "SamplingParams", "ServeEngine", "ServeShardings",
            "chunked_prefill", "sample_tokens", "StepModel",
-           "DecoderStepModel", "MinimalistStepModel"]
+           "DecoderStepModel", "MinimalistStepModel", "PagedConfig",
+           "PagePool"]

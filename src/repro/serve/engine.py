@@ -71,6 +71,7 @@ class Request:
     # filled by the engine:
     outputs: List[Any] = dataclasses.field(default_factory=list)
     finished: bool = False
+    cancelled: bool = False
 
     @property
     def tokens(self) -> np.ndarray:
@@ -100,6 +101,14 @@ class ServeEngine:
             step_model.bind_mesh(mesh, self.slots)
         self.mesh = step_model.mesh
         self.params = step_model.place_params(params)
+        # paged KV layout: the engine owns the page allocator — block
+        # tables, free list and per-slot chains live here on the host;
+        # only the page POOLS are device state (inside self.state)
+        self.pool = None
+        if getattr(step_model, "kv_layout", "dense") == "paged":
+            from repro.serve.paged import PagePool
+            self.pool = PagePool(step_model.num_pages(self.slots),
+                                 self.slots, step_model.max_pages)
         self.state = step_model.init_state(self.slots)
         self.free_mask = (1 << self.slots) - 1     # bit i set = slot i free
         self.waiting: deque[Request] = deque()
@@ -136,17 +145,31 @@ class ServeEngine:
                 raise ValueError(
                     "sampling only applies to autoregressive requests")
         if self.sm.autoregressive:
-            assert prompt.ndim == 1 and max_new_tokens >= 1, \
-                "LM requests need a (P,) prompt and max_new_tokens >= 1"
+            if prompt.ndim != 1:
+                raise ValueError(
+                    f"LM requests need a 1-D token prompt, got shape "
+                    f"{prompt.shape}")
+            if max_new_tokens < 1:
+                raise ValueError(
+                    f"LM requests need max_new_tokens >= 1, got "
+                    f"{max_new_tokens}")
             prompt = prompt.astype(np.int32)
             # attention-bearing stacks write K/V at absolute positions:
-            # past max_len the slice write clamps and decodes garbage
+            # past max_len the scatter would silently clamp / wrap and the
+            # stream would decode garbage mid-request — reject up front
             if getattr(self.sm, "positional", False):
                 need = len(prompt) + max_new_tokens
                 if need > self.sm.max_len:
                     raise ValueError(
-                        f"request needs {need} cache positions but the "
-                        f"engine was built with max_len={self.sm.max_len}")
+                        f"prompt ({len(prompt)}) + max_new_tokens "
+                        f"({max_new_tokens}) = {need} cache positions, "
+                        f"but the engine was built with "
+                        f"max_len={self.sm.max_len}")
+                # paged note: this bound is also what makes page OOM
+                # impossible past this point — PagedConfig.validate_for
+                # guarantees the pool holds one max-length request, so
+                # any request accepted here fits an empty pool and
+                # admission only ever DEFERS (see admit())
         req = Request(self._uid, prompt, max_new_tokens, eos_id, sampling)
         self._uid += 1
         self.waiting.append(req)
@@ -161,6 +184,11 @@ class ServeEngine:
         self.free_mask = int(self.free_mask) | (1 << int(slot))
         self.slot_req[slot] = None
         self.active[slot] = False
+        if self.pool is not None:
+            # pages (and the unused reservation tail) go straight back
+            # into circulation; the pool content is NOT cleared — any
+            # future read of a recycled page is position-masked
+            self.pool.release(slot)
         for k, v in KNOB_GREEDY.items():
             self.knobs[k][slot] = v
 
@@ -191,11 +219,29 @@ class ServeEngine:
         """Move waiting requests into free slots, one WAVE at a time:
         same-length prompts prefill as one batched chunked call, their
         carries land in one scatter write, and the wave costs one host
-        sync — admission overhead amortizes over the wave."""
+        sync — admission overhead amortizes over the wave.
+
+        Paged KV: admission additionally RESERVES the request's
+        worst-case page chain (prompt + full generation budget), so
+        decode-time page appends can never fail.  When the pool cannot
+        cover the next request's reservation the queue DEFERS — strictly
+        FIFO, no bypass by smaller requests behind it (head-of-line
+        blocking is the price of starvation-freedom) — and retries as
+        finished requests release pages.  Requests that can never fit
+        were already rejected at submit()."""
         admitted = []
         while self.waiting and self.free_mask:
-            req = self.waiting.popleft()
+            req = self.waiting[0]
+            if self.pool is not None and not self.pool.can_admit(
+                    self.sm.pages_for(len(req.prompt)
+                                      + req.max_new_tokens)):
+                break                      # defer until pages free up
+            self.waiting.popleft()
             slot = self._alloc_slot()
+            if self.pool is not None:
+                self.pool.reserve(slot, self.sm.pages_for(
+                    len(req.prompt) + req.max_new_tokens))
+                self.pool.grow(slot, self.sm.pages_for(len(req.prompt)))
             self.slot_req[slot] = req
             self.active[slot] = True
             admitted.append((req, slot))
@@ -224,7 +270,17 @@ class ServeEngine:
             prompts = [r.prompt for r, _s in group]
             prompts += [prompts[-1]] * (len(pad) - len(group))
             last, carry = self.sm.prefill(self.params, np.stack(prompts))
-            self.state = self.sm.write_slots(self.state, carry, pad)
+            if self.pool is None:
+                self.state = self.sm.write_slots(self.state, carry, pad)
+            else:
+                # page-granular scatter: each wave row's dense prefill
+                # cache lands in its chain's pages; padding rows get
+                # all-out-of-bounds page ids so their writes drop
+                pages = np.full((len(pad), self.pool.max_pages),
+                                self.pool.num_pages, np.int32)
+                pages[:len(group)] = self.pool.block_tables[slots]
+                self.state = self.sm.write_slots(self.state, carry, pad,
+                                                 pages=pages, plen=plen)
             # the wave's first generated token sits at position plen — its
             # draw uses the same counter-based (seed, uid, pos) key family
             # as the decode loop, so it is reproducible under any batching
@@ -251,19 +307,51 @@ class ServeEngine:
         self.finished.append(req)
         self._free_slot(slot)
 
+    def cancel(self, req: Request):
+        """Abort a request: a waiting one leaves the queue, a running one
+        frees its slot (and, under the paged layout, its pages) before
+        the next step.  Tokens already emitted stay on the request, which
+        is marked finished+cancelled and never joins ``finished``."""
+        if req.finished:
+            return
+        # identity matches only: Request.__eq__ would compare prompt
+        # arrays elementwise, and a LOOKALIKE request must not be freed
+        if any(r is req for r in self.waiting):
+            self.waiting = deque(r for r in self.waiting if r is not req)
+        else:
+            for slot, r in enumerate(self.slot_req):
+                if r is req:
+                    self._free_slot(slot)
+                    break
+            else:
+                raise ValueError("request is not known to this engine")
+        req.finished = True
+        req.cancelled = True
+
     def step(self):
         """Admit what fits, then run ONE slot-batched decode step."""
         self.admit()
         if not self.active.any():
             return
+        bt = None
+        if self.pool is not None:
+            # allocate-on-decode-append: this step writes K/V at
+            # pos[slot], so every active chain must cover it — the pages
+            # come out of the reservation made at admission, so growth
+            # cannot fail mid-stream
+            for slot in np.flatnonzero(self.active):
+                self.pool.grow(slot,
+                               self.sm.pages_for(int(self.pos[slot]) + 1))
+            bt = self.pool.block_tables
         active = jnp.asarray(self.active)
         pos = jnp.asarray(self.pos)
         x = jnp.asarray(self._cur)
         sampling = None
         if self.sm.autoregressive:
             sampling = {k: jnp.asarray(v) for k, v in self.knobs.items()}
+        kw = {} if bt is None else {"bt": bt}
         out, self.state = self.sm.step(self.params, x, self.state, pos,
-                                       active, sampling)
+                                       active, sampling, **kw)
         emitted = np.asarray(out)
         self.n_steps += 1
         for slot in np.flatnonzero(self.active):

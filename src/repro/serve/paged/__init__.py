@@ -1,0 +1,22 @@
+"""Paged KV cache: block-table page pool for the serving engine.
+
+The dense serving layout preallocates ``(slots, max_len, ...)`` cache
+rows — memory scales with the worst case, not with live tokens.  Under
+the paged layout every attention layer keeps a shared page pool
+``(num_pages, page_size, ...)`` on device, and this package's HOST-side
+allocator hands page ids to requests:
+
+  * :class:`PagedConfig` — page size / pool capacity knobs (validated)
+  * :class:`PagePool`    — free-list allocator: per-request page chains,
+    one block-table row per slot, reservation-based admission (a request
+    is admitted only when its worst-case chain is covered, so decode can
+    NEVER run out of pages mid-stream), allocate-on-decode-append, and
+    free-on-finish/cancel.
+
+See README §Paged KV cache for the layout diagram and the admission
+policy (OOM at submit for can-never-fit requests; DEFER at admit when
+the pool is temporarily full).
+"""
+from repro.serve.paged.pool import PagedConfig, PagePool
+
+__all__ = ["PagedConfig", "PagePool"]

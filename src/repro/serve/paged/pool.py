@@ -1,0 +1,127 @@
+"""Block-table page allocator (host side).
+
+Pages are rows of the device-resident pools; this module only moves
+int32 page ids around.  Invariants the serving engine relies on:
+
+  * a page id belongs to exactly one slot's chain or to the free list
+    (never both, never two chains) — so concurrent slots can scatter
+    into the shared pool without write aliasing;
+  * reservations are conservative: ``reserve`` succeeds only if the
+    request's WORST-CASE page count fits alongside every other
+    outstanding reservation, so ``grow`` (allocate-on-decode-append) can
+    never fail mid-stream — the OOM-vs-defer decision happens once, at
+    admission, never during decode;
+  * ``release`` returns both the allocated pages and the unused tail of
+    the reservation (an eos-retired request frees capacity it never
+    touched).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+class PagedConfig:
+    """Paged-KV knobs.  ``num_pages == 0`` means auto-size the pool to
+    dense-equivalent capacity (slots × pages-per-max-length-request) —
+    useful for bitwise paged-vs-dense testing; production deployments
+    set it below that to actually save memory."""
+
+    def __init__(self, page_size: int = 16, num_pages: int = 0):
+        if page_size < 1:
+            raise ValueError(f"page_size must be >= 1, got {page_size}")
+        if num_pages < 0:
+            raise ValueError(f"num_pages must be >= 0 (0 = auto-size), "
+                             f"got {num_pages}")
+        self.page_size = int(page_size)
+        self.num_pages = int(num_pages)
+
+    def validate_for(self, max_len: int, pages_per_request: int):
+        """A pool that cannot hold ONE max-length request can never
+        serve anything — fail at construction, not mid-traffic."""
+        if self.num_pages and self.num_pages < pages_per_request:
+            raise ValueError(
+                f"num_pages={self.num_pages} cannot hold one max-length "
+                f"request: max_len={max_len} at page_size={self.page_size} "
+                f"needs {pages_per_request} pages (raise num_pages to >= "
+                f"{pages_per_request}, or 0 to auto-size)")
+        return self
+
+    def resolve_num_pages(self, slots: int, pages_per_request: int) -> int:
+        return self.num_pages or int(slots) * int(pages_per_request)
+
+    def __repr__(self):
+        return (f"PagedConfig(page_size={self.page_size}, "
+                f"num_pages={self.num_pages})")
+
+
+class PagePool:
+    """Free-list page allocator over ``num_pages`` pages for ``slots``
+    concurrent requests, each owning up to ``max_pages`` chain entries
+    (one block-table row)."""
+
+    def __init__(self, num_pages: int, slots: int, max_pages: int):
+        if num_pages < 1:
+            raise ValueError(f"num_pages must be >= 1, got {num_pages}")
+        self.num_pages = int(num_pages)
+        self.slots = int(slots)
+        self.max_pages = int(max_pages)
+        # LIFO free list: pop() hands out the lowest ids first
+        self._free = list(range(self.num_pages - 1, -1, -1))
+        # unallocated entries stay 0: reads through them are always
+        # position-masked (they clamp harmlessly in gathers/kernels)
+        self.block_tables = np.zeros((self.slots, self.max_pages),
+                                     np.int32)
+        self.chain_len = np.zeros(self.slots, np.int32)
+        self._reserved = np.zeros(self.slots, np.int64)
+        self.reserved_total = 0
+
+    # -- accounting -----------------------------------------------------
+    @property
+    def pages_in_use(self) -> int:
+        """Pages physically allocated to chains."""
+        return self.num_pages - len(self._free)
+
+    @property
+    def available(self) -> int:
+        """Pages not yet promised to any admitted request."""
+        return self.num_pages - self.reserved_total
+
+    # -- admission ------------------------------------------------------
+    def can_admit(self, n_pages: int) -> bool:
+        return n_pages <= self.available
+
+    def reserve(self, slot: int, n_pages: int):
+        """Promise ``n_pages`` to ``slot`` (its worst-case chain)."""
+        if not self.can_admit(n_pages):
+            raise RuntimeError(
+                f"reserve({n_pages}) exceeds available pages "
+                f"({self.available}) — admit() must check can_admit first")
+        if self._reserved[slot]:
+            raise RuntimeError(f"slot {slot} already holds a reservation")
+        self._reserved[slot] = n_pages
+        self.reserved_total += n_pages
+
+    # -- allocate-on-append ---------------------------------------------
+    def grow(self, slot: int, n_chain: int):
+        """Extend ``slot``'s chain to ``n_chain`` pages, drawing on its
+        reservation.  Called at admission (prompt pages) and before each
+        decode step that crosses a page boundary."""
+        if n_chain > self._reserved[slot]:
+            raise RuntimeError(
+                f"slot {slot}: chain of {n_chain} pages exceeds its "
+                f"reservation of {int(self._reserved[slot])} — scheduler "
+                "bug (reservations are sized to the worst case)")
+        while self.chain_len[slot] < n_chain:
+            self.block_tables[slot, self.chain_len[slot]] = self._free.pop()
+            self.chain_len[slot] += 1
+
+    # -- free ------------------------------------------------------------
+    def release(self, slot: int):
+        """Finish/cancel: return the chain to the free list and drop the
+        remaining reservation.  Idempotent for an empty slot."""
+        n = int(self.chain_len[slot])
+        self._free.extend(int(p) for p in self.block_tables[slot, :n])
+        self.reserved_total -= int(self._reserved[slot])
+        self._reserved[slot] = 0
+        self.chain_len[slot] = 0
+        self.block_tables[slot, :] = 0

@@ -169,12 +169,27 @@ def masked_update(state, new_state, active, axis=0):
 # ---------------------------------------------------------------------------
 
 class DecoderStepModel(StepModel):
-    """StepModel over a DecoderLM; state = the per-layer decode caches."""
+    """StepModel over a DecoderLM; state = the per-layer decode caches.
+
+    ``kv_layout`` selects where attention caches live:
+
+      * "dense" (default) — every slot owns (max_len, ...) cache rows;
+        positional stacks decode via a per-slot vmap of ``decode_step``.
+      * "paged" — attention caches are shared page pools plus per-slot
+        block tables (``serve.paged``); decode runs the natively
+        slot-batched ``decode_step_paged`` (a vmap cannot thread shared
+        pool state), admission prefill still computes the dense wave
+        cache and ``write_slots`` scatters it PAGE-granularly, and the
+        engine allocates pages as positions cross page boundaries.  With
+        the default ``paged_impl="gather"`` the decode math is bitwise
+        identical to the dense layout.
+    """
 
     autoregressive = True
 
     def __init__(self, model, *, max_len: int = 256,
-                 prefill_chunk: int = 256):
+                 prefill_chunk: int = 256, kv_layout: str = "dense",
+                 paged=None):
         self.model = model
         self.max_len = int(max_len)
         self.prefill_chunk = int(prefill_chunk)
@@ -183,6 +198,31 @@ class DecoderStepModel(StepModel):
         # position-free stacks: every mixer carries O(1) state and ignores
         # absolute position -> one batched decode_step, never retraced.
         self.positional = bool(kinds & {ATTN, ATTN_LOCAL, MLA})
+        if kv_layout not in ("dense", "paged"):
+            raise ValueError(f"kv_layout must be 'dense' or 'paged', "
+                             f"got {kv_layout!r}")
+        self.kv_layout = kv_layout
+        self.paged = None
+        self._pool_names = frozenset()
+        if kv_layout == "paged":
+            from repro.serve.paged import PagedConfig
+            if not self.positional:
+                raise ValueError(
+                    f"{model.cfg.name}: kv_layout='paged' needs an "
+                    "attention-bearing stack — pure O(1)-state stacks "
+                    "have no KV cache to page (serve them dense)")
+            # the longest in-cache span any layer keeps: global/MLA
+            # layers span max_len; a pure sliding-window stack is bounded
+            # by its ring, so its page chains (and the block-table width)
+            # never exceed the window
+            if kinds & {ATTN, MLA}:
+                self._page_cap = self.max_len
+            else:
+                self._page_cap = min(model.cfg.sliding_window, self.max_len)
+            self.paged = paged if paged is not None else PagedConfig()
+            self.max_pages = self.pages_for(self.max_len)
+            self.paged.validate_for(self.max_len, self.max_pages)
+            self._pool_names = frozenset(model.paged_layer_names())
         # in the model's native cache layout, scanned-unit leaves carry the
         # layer-repeat axis FIRST — their slot (batch) axis is 1, not 0.
         self._slot_axis = {name: (1 if mode == "scanned" else 0)
@@ -206,8 +246,16 @@ class DecoderStepModel(StepModel):
                 "outputs will vary with concurrent traffic and prefill "
                 "chunking (use 'auto' or 'per_request' for batch-invariant "
                 "routing)", stacklevel=2)
-        self._jit_step = jax.jit(self._step_impl)
-        self._jit_write = jax.jit(self._write_impl)
+        if self.kv_layout == "paged":
+            self._jit_step = jax.jit(self._step_impl_paged)
+            # the prompt length is a SHAPE (pages written per layer), so
+            # it is static — one compiled write per (wave, plen) bucket,
+            # exactly the prefill's own compile classes
+            self._jit_write = jax.jit(self._write_impl_paged,
+                                      static_argnums=(4,))
+        else:
+            self._jit_step = jax.jit(self._step_impl)
+            self._jit_write = jax.jit(self._write_impl)
         self._jit_sample = jax.jit(self._sample_impl)
         self.emit = jax.jit(self._emit_impl)
         self._greedy = {}           # per-batch greedy sampling arrays
@@ -217,9 +265,24 @@ class DecoderStepModel(StepModel):
         self._cache_templates = {}
         self._state_shardings = {}  # per-batch state placement (mesh only)
 
+    # -- paged layout ----------------------------------------------------
+    def pages_for(self, n: int) -> int:
+        """Pages a request needs once it spans ``n`` positions (the max
+        over layers: window rings cap at the ring length)."""
+        ps = self.paged.page_size
+        return -(-min(int(n), self._page_cap) // ps)
+
+    def num_pages(self, slots: int) -> int:
+        """Resolved pool capacity (0 in the config = dense-equivalent)."""
+        return self.paged.resolve_num_pages(slots, self.max_pages)
+
     # -- mesh placement --------------------------------------------------
     def state_spec(self, batch):
         """ShapeDtypeStruct tree of init_state(batch) (no allocation)."""
+        if self.kv_layout == "paged":
+            return self.model.paged_cache_spec(
+                batch, self.max_len, self.num_pages(batch),
+                self.paged.page_size)
         if not self.positional:
             return self.model.cache_spec(batch, self.max_len)
         unit = self.model.cache_spec(1, self.max_len)
@@ -229,10 +292,15 @@ class DecoderStepModel(StepModel):
 
     def state_axes(self):
         """Logical axes of init_state's layout.  Native model layout for
-        O(1)-state stacks; positional stacks stack per-slot unit caches,
-        so the slot axis is prepended as a leading "batch" (the unit's
-        own singleton batch dim then loses the DP divisibility race and
-        replicates, as it should)."""
+        O(1)-state stacks; positional DENSE stacks stack per-slot unit
+        caches, so the slot axis is prepended as a leading "batch" (the
+        unit's own singleton batch dim then loses the DP divisibility
+        race and replicates, as it should).  The PAGED layout is native
+        again: page pools carry ("pages", "page", ...) — the page axis is
+        never sharded (same contract as kv_len) while kv_heads / latents
+        TP-shard — and the O(1) leaves keep their slot batch."""
+        if self.kv_layout == "paged":
+            return self.model.paged_cache_axes()
         axes = self.model.cache_axes()
         if not self.positional:
             return axes
@@ -283,11 +351,20 @@ class DecoderStepModel(StepModel):
         self._bound_slots = slots
         self._bound_rules = rules
         self.sharding = self.shardings(mesh, slots, rules)
-        self._jit_step = jax.jit(
-            self._step_impl, donate_argnums=(2,),
-            out_shardings=(self.sharding.slot, self.sharding.state))
-        self._jit_write = jax.jit(self._write_impl, donate_argnums=(0,),
-                                  out_shardings=self.sharding.state)
+        if self.kv_layout == "paged":
+            self._jit_step = jax.jit(
+                self._step_impl_paged, donate_argnums=(2,),
+                out_shardings=(self.sharding.slot, self.sharding.state))
+            self._jit_write = jax.jit(
+                self._write_impl_paged, static_argnums=(4,),
+                donate_argnums=(0,), out_shardings=self.sharding.state)
+        else:
+            self._jit_step = jax.jit(
+                self._step_impl, donate_argnums=(2,),
+                out_shardings=(self.sharding.slot, self.sharding.state))
+            self._jit_write = jax.jit(self._write_impl,
+                                      donate_argnums=(0,),
+                                      out_shardings=self.sharding.state)
         self._jit_sample = jax.jit(self._sample_impl)
         self._greedy = {}
         self._jit_prefill_fast = None
@@ -351,10 +428,30 @@ class DecoderStepModel(StepModel):
         # decode stream never collide on a counter value
         return self._sample_impl(logits, samp, pos + 1), merged
 
-    def step(self, params, tok, state, pos, active, sampling=None):
+    def _step_impl_paged(self, params, tok, state, pos, active, samp, bt):
+        """Natively slot-batched paged decode (no vmap: the page pools
+        are shared state).  Pool leaves come back already frozen for
+        inactive slots — their write was dropped in-layer — so only the
+        per-slot O(1) leaves take the masked merge."""
+        logits, new_state = self.model.decode_step_paged(
+            params, tok[:, None], state, pos, bt, active, self.max_len)
+        logits = logits[:, -1, :]
+        merged = {}
+        for name, sub in state.items():
+            if name in self._pool_names:
+                merged[name] = new_state[name]
+            else:
+                merged[name] = masked_update(sub, new_state[name], active,
+                                             axis=self._slot_axis[name])
+        return self._sample_impl(logits, samp, pos + 1), merged
+
+    def step(self, params, tok, state, pos, active, sampling=None,
+             bt=None):
         """tok: (slots,) int32; pos, active: (slots,); sampling: dict of
         per-slot knob arrays (None -> all-greedy arrays of the same
-        dtypes, so greedy/sampled traffic share ONE compiled program).
+        dtypes, so greedy/sampled traffic share ONE compiled program);
+        bt: (slots, max_pages) int32 block tables (paged layout only —
+        plain DATA through the jitted step, like the sampling knobs).
         Under a bound mesh every host-side array is device_put against
         the slot sharding first, so each step dispatches the same
         compiled SPMD program (placement is part of the jit key)."""
@@ -370,6 +467,15 @@ class DecoderStepModel(StepModel):
             tok, pos, active = (self.put_slot(tok), self.put_slot(pos),
                                 self.put_slot(active))
             sampling = {k: self.put_slot(v) for k, v in sampling.items()}
+        if self.kv_layout == "paged":
+            if bt is None:
+                raise ValueError("paged kv_layout needs block tables "
+                                 "(the engine passes pool.block_tables)")
+            bt = jnp.asarray(bt, jnp.int32)
+            if self.mesh is not None:
+                bt = self.put_slot(bt)
+            return self._jit_step(params, tok, state, pos, active,
+                                  sampling, bt)
         return self._jit_step(params, tok, state, pos, active, sampling)
 
     def _sample_impl(self, logits, samp, pos):
@@ -420,11 +526,72 @@ class DecoderStepModel(StepModel):
             out[name] = jax.tree_util.tree_map(upd, sub, batch_state[name])
         return out
 
-    def write_slots(self, state, batch_state, slots):
-        """Install an admission wave's prefill carry into its slots."""
+    def _write_impl_paged(self, state, batch_state, slots, pages, plen):
+        """Admission-wave install under the paged layout: O(1)-state
+        leaves scatter at their slot ids (native layout), attention
+        leaves scatter PAGE-granularly — the wave's dense prefill cache
+        is resliced into (page,)-sized rows that land at the chain's page
+        ids.  ``pages`` rows of padding wave entries are all out of
+        bounds, so their writes drop exactly like padded slot ids."""
+        ps = self.paged.page_size
+        out = {}
+        for name, sub in state.items():
+            ax = self._slot_axis[name]
+            if name in self._pool_names:
+                def updp(s, v, ax=ax):
+                    # v: dense wave cache; slot axis at ax, length at ax+1
+                    Lv = v.shape[ax + 1]
+                    n = -(-min(plen, Lv) // ps)
+                    take = min(n * ps, Lv)
+                    sl = [slice(None)] * v.ndim
+                    sl[ax + 1] = slice(0, take)
+                    v2 = v[tuple(sl)]
+                    if take < n * ps:     # ring shorter than whole pages
+                        padw = [(0, 0)] * v.ndim
+                        padw[ax + 1] = (0, n * ps - take)
+                        v2 = jnp.pad(v2, padw)
+                    shape = v2.shape[:ax + 1] + (n, ps) + v2.shape[ax + 2:]
+                    v2 = v2.reshape(shape).astype(s.dtype)
+                    if ax == 0:
+                        return s.at[pages[:, :n]].set(v2)
+                    return s.at[:, pages[:, :n]].set(v2)
+
+                out[name] = jax.tree_util.tree_map(updp, sub,
+                                                   batch_state[name])
+            else:
+                def upd(s, v, ax=ax):
+                    if ax == 0:
+                        return s.at[slots].set(v.astype(s.dtype))
+                    return s.at[:, slots].set(v.astype(s.dtype))
+
+                out[name] = jax.tree_util.tree_map(upd, sub,
+                                                   batch_state[name])
+        return out
+
+    def write_slots(self, state, batch_state, slots, pages=None,
+                    plen=None):
+        """Install an admission wave's prefill carry into its slots.
+        Paged layout: ``pages`` = the wave's block-table rows (padding
+        rows all out of bounds) and ``plen`` = the wave's prompt length
+        (static: it fixes how many pages each layer writes)."""
         slots = jnp.asarray(slots, jnp.int32)
         if self.mesh is not None:
             slots = jax.device_put(slots, self.sharding.replicated)
+        if self.kv_layout == "paged":
+            if pages is None or plen is None:
+                raise ValueError("paged write_slots needs the wave's page "
+                                 "rows and its prompt length")
+            pages = jnp.asarray(pages, jnp.int32)
+            if self.mesh is not None:
+                pages = jax.device_put(pages, self.sharding.replicated)
+            # the write program depends on plen only through per-leaf
+            # PAGE counts, so round up to a page multiple before it
+            # becomes the static jit key: prompt lengths that share page
+            # buckets share one compiled write (identical program either
+            # way — the page count ceil()s to the same value)
+            ps = self.paged.page_size
+            return self._jit_write(state, batch_state, slots, pages,
+                                   -(-int(plen) // ps) * ps)
         return self._jit_write(state, batch_state, slots)
 
 

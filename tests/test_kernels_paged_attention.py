@@ -1,0 +1,205 @@
+"""Paged-attention decode kernels: Pallas (interpret) vs dense-gather ref,
+page-indirection semantics (chain permutation / stale-page immunity), and
+equivalence against the dense decode attention they emulate."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.paged_attention import ops, ref
+
+
+def _chains(rng, B, n_chain, num_pages):
+    """Disjoint random page chains (one per request), like the pool's."""
+    ids = rng.permutation(num_pages)[:B * n_chain]
+    return ids.reshape(B, n_chain).astype(np.int32)
+
+
+def _scatter_dense(pool, bt, dense):
+    """Write each request's dense cache rows into its page chain."""
+    P, ps = pool.shape[:2]
+    out = np.array(pool)
+    B, L = dense.shape[:2]
+    for b in range(B):
+        for j in range(L):
+            out[bt[b, j // ps], j % ps] = dense[b, j]
+    return out
+
+
+def _setup_gqa(rng, *, B=3, H=4, KV=2, hd=16, L=24, ps=8, num_pages=32):
+    n_chain = -(-L // ps)
+    q = rng.standard_normal((B, H, hd)).astype(np.float32)
+    dense_k = rng.standard_normal((B, L, KV, hd)).astype(np.float32)
+    dense_v = rng.standard_normal((B, L, KV, hd)).astype(np.float32)
+    bt = _chains(rng, B, n_chain, num_pages)
+    # unowned pages hold garbage — they must never matter
+    pool_k = _scatter_dense(
+        rng.standard_normal((num_pages, ps, KV, hd)).astype(np.float32) * 50,
+        bt, dense_k)
+    pool_v = _scatter_dense(
+        rng.standard_normal((num_pages, ps, KV, hd)).astype(np.float32) * 50,
+        bt, dense_v)
+    pos = rng.integers(0, L, size=B).astype(np.int32)
+    return q, dense_k, dense_v, pool_k, pool_v, bt, pos
+
+
+def _dense_gqa(q, dense_k, dense_v, pos, *, window=None):
+    """Masked softmax attention over the dense cache (fp32), the oracle."""
+    B, H, hd = q.shape
+    KV = dense_k.shape[2]
+    L = dense_k.shape[1]
+    idx = np.arange(L)
+    if window is None:
+        k_pos = np.broadcast_to(idx, (B, L))
+    else:
+        k_pos = pos[:, None] - ((pos[:, None] - idx[None, :]) % L)
+    valid = (k_pos >= 0) & (k_pos <= pos[:, None])
+    if window is not None:
+        valid &= (pos[:, None] - k_pos) < window
+    qg = q.reshape(B, KV, H // KV, hd)
+    s = np.einsum("bkgd,blkd->bkgl", qg, dense_k) / math.sqrt(hd)
+    s = np.where(valid[:, None, None, :], s, -1e30)
+    s = s - s.max(-1, keepdims=True)
+    w = np.exp(s)
+    w /= w.sum(-1, keepdims=True)
+    return np.einsum("bkgl,blkd->bkgd", w, dense_v).reshape(B, H, hd)
+
+
+@pytest.mark.parametrize("window", [None, 5])
+def test_ref_matches_dense_oracle(window):
+    rng = np.random.default_rng(0)
+    L = 24 if window is None else 5        # ring length = min(window, L)
+    q, dk, dv, pk, pv, bt, pos = _setup_gqa(rng, L=L, ps=4)
+    got = ops.paged_gqa_attention(
+        jnp.asarray(q), jnp.asarray(pk), jnp.asarray(pv), jnp.asarray(bt),
+        jnp.asarray(pos), length=L, window=window, backend="xla")
+    np.testing.assert_allclose(np.asarray(got),
+                               _dense_gqa(q, dk, dv, pos, window=window),
+                               atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("window", [None, 7])
+@pytest.mark.parametrize("ps", [4, 8])
+def test_pallas_matches_ref_gqa(window, ps):
+    rng = np.random.default_rng(1)
+    L = 24 if window is None else 7
+    q, _dk, _dv, pk, pv, bt, pos = _setup_gqa(rng, L=L, ps=ps)
+    args = (jnp.asarray(q), jnp.asarray(pk), jnp.asarray(pv),
+            jnp.asarray(bt), jnp.asarray(pos))
+    want = ops.paged_gqa_attention(*args, length=L, window=window,
+                                   backend="xla")
+    got = ops.paged_gqa_attention(*args, length=L, window=window,
+                                  backend="pallas")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_chain_permutation_invariance():
+    """WHERE a chain's pages live in the pool is irrelevant: permuting
+    the page ids (and moving the contents along) leaves the output
+    bitwise unchanged."""
+    rng = np.random.default_rng(2)
+    q, dk, dv, _pk, _pv, bt, pos = _setup_gqa(rng, L=16, ps=4,
+                                              num_pages=32)
+    perm = rng.permutation(32)
+    bt2 = perm[bt].astype(np.int32)
+    outs = []
+    for table in (bt, bt2):
+        pool_k = _scatter_dense(np.zeros((32, 4, 2, 16), np.float32),
+                                table, dk)
+        pool_v = _scatter_dense(np.zeros((32, 4, 2, 16), np.float32),
+                                table, dv)
+        for backend in ("xla", "pallas"):
+            outs.append(np.asarray(ops.paged_gqa_attention(
+                jnp.asarray(q), jnp.asarray(pool_k), jnp.asarray(pool_v),
+                jnp.asarray(table), jnp.asarray(pos), length=16,
+                backend=backend)))
+    np.testing.assert_array_equal(outs[0], outs[2])   # xla: bt == bt2
+    np.testing.assert_array_equal(outs[1], outs[3])   # pallas: bt == bt2
+
+
+def test_stale_pages_and_unallocated_entries_ignored():
+    """Garbage in unowned pages and in block-table entries beyond the
+    live position must contribute exactly nothing (the engine's page
+    recycling correctness property)."""
+    rng = np.random.default_rng(3)
+    q, dk, dv, pk, pv, bt, pos = _setup_gqa(rng, L=24, ps=8)
+    pos = np.minimum(pos, 7)               # only chain entry 0 is live
+    clean_k = _scatter_dense(np.zeros_like(pk), bt, dk)
+    clean_v = _scatter_dense(np.zeros_like(pv), bt, dv)
+    # poison every unallocated block-table entry with a foreign page id
+    bt_poison = np.array(bt)
+    bt_poison[:, 1:] = (bt[:, 1:] + 1) % pk.shape[0]
+    for backend in ("xla", "pallas"):
+        a = np.asarray(ops.paged_gqa_attention(
+            jnp.asarray(q), jnp.asarray(pk), jnp.asarray(pv),
+            jnp.asarray(bt), jnp.asarray(pos), length=24, backend=backend))
+        b = np.asarray(ops.paged_gqa_attention(
+            jnp.asarray(q), jnp.asarray(clean_k), jnp.asarray(clean_v),
+            jnp.asarray(bt_poison), jnp.asarray(pos), length=24,
+            backend=backend))
+        np.testing.assert_array_equal(a, b)
+
+
+def test_pallas_matches_ref_mla():
+    rng = np.random.default_rng(4)
+    B, H, r, dr, L, ps, num_pages = 3, 4, 16, 8, 20, 4, 16
+    n_chain = -(-L // ps)
+    q_abs = rng.standard_normal((B, H, r)).astype(np.float32)
+    q_rope = rng.standard_normal((B, H, dr)).astype(np.float32)
+    dense_c = rng.standard_normal((B, L, r)).astype(np.float32)
+    dense_r = rng.standard_normal((B, L, dr)).astype(np.float32)
+    bt = _chains(rng, B, n_chain, num_pages)
+    pool_c = _scatter_dense(
+        rng.standard_normal((num_pages, ps, r)).astype(np.float32) * 50,
+        bt, dense_c)
+    pool_r = _scatter_dense(
+        rng.standard_normal((num_pages, ps, dr)).astype(np.float32) * 50,
+        bt, dense_r)
+    pos = rng.integers(0, L, size=B).astype(np.int32)
+    scale = 1.0 / math.sqrt(r + dr)
+    args = (jnp.asarray(q_abs), jnp.asarray(q_rope), jnp.asarray(pool_c),
+            jnp.asarray(pool_r), jnp.asarray(bt), jnp.asarray(pos))
+    want = ops.paged_mla_attention(*args, length=L, scale=scale,
+                                   backend="xla")
+    got = ops.paged_mla_attention(*args, length=L, scale=scale,
+                                  backend="pallas")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-5, rtol=1e-5)
+    # the ref itself against a straight dense MLA softmax
+    s = (np.einsum("bhr,blr->bhl", q_abs, dense_c)
+         + np.einsum("bhk,blk->bhl", q_rope, dense_r)) * scale
+    s = np.where(np.arange(L)[None, None] <= pos[:, None, None], s, -1e30)
+    s = s - s.max(-1, keepdims=True)
+    w = np.exp(s)
+    w /= w.sum(-1, keepdims=True)
+    oracle = np.einsum("bhl,blr->bhr", w, dense_c)
+    np.testing.assert_allclose(np.asarray(want), oracle, atol=1e-5,
+                               rtol=1e-5)
+
+
+def test_bad_backend_and_ring_length_rejected():
+    z = jnp.zeros((1, 2, 4))
+    pool = jnp.zeros((2, 2, 1, 4))
+    bt = jnp.zeros((1, 1), jnp.int32)
+    pos = jnp.zeros(1, jnp.int32)
+    with pytest.raises(ValueError, match="backend"):
+        ops.paged_gqa_attention(z, pool, pool, bt, pos, length=2,
+                                backend="cuda")
+    with pytest.raises(ValueError, match="ring length"):
+        ops.paged_gqa_attention(z, pool, pool, bt, pos, length=4, window=2)
+
+
+def test_page_gather_helper():
+    """gather_pages reconstructs the dense view exactly."""
+    rng = np.random.default_rng(5)
+    pool = rng.standard_normal((8, 4, 3)).astype(np.float32)
+    bt = np.array([[6, 1, 3], [0, 7, 2]], np.int32)
+    got = np.asarray(ref.gather_pages(jnp.asarray(pool), jnp.asarray(bt),
+                                      10))
+    for b in range(2):
+        for j in range(10):
+            np.testing.assert_array_equal(got[b, j],
+                                          pool[bt[b, j // 4], j % 4])
