@@ -24,7 +24,9 @@ caches, DP slots — see README §Sharded serving) vs the no-mesh engine,
 and paged-KV rows (README §Paged KV cache): paged vs dense tokens/s at
 equal occupancy plus max concurrent long-context requests at fixed KV
 memory (dense buys concurrency in slots x max_len bytes; paged in live
-pages).
+pages), plus prefix-cache rows (README §Prefix caching): warm-cache
+TTFT at high prompt overlap vs cache-off, and best-of-n via COW fork
+vs n independent submissions.
 
     PYTHONPATH=src python -m benchmarks.decode_throughput \
         [--arch minimalist-lm-360m] [--batches 1,64,256] [--gen 16]
@@ -350,6 +352,89 @@ def _paged_compare(batch=4, gen=8, prompt=16, chunk=8):
     return rows
 
 
+def _prefix_compare(batch=4, gen=4, prefix_len=256, tail=8, n=6,
+                    chunk=16):
+    """Prefix cache off vs on at HIGH overlap (every request shares a
+    resident ``prefix_len``-token prefix, page- and chunk-aligned):
+    per-request TTFT (admission prefill + first token) with a warm
+    cache, plus prompt tokens skipped.  And a fork row: n streams off
+    one prompt via COW fork vs n independent submissions — best-of-n
+    pays the prefill once."""
+    from repro.serve import PagedConfig
+    cfg = get_config("smollm-360m-smoke")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(23)
+    pre = rng.integers(0, cfg.vocab, size=prefix_len, dtype=np.int64)
+    prompts = [np.concatenate([pre, rng.integers(0, cfg.vocab, size=tail,
+                                                 dtype=np.int64)])
+               for _ in range(n)]
+    max_len = prefix_len + tail + gen + 1
+    rows, out = [], {}
+    for mode in ("off", "on"):
+        sm = DecoderStepModel(model, max_len=max_len, prefill_chunk=chunk,
+                              kv_layout="paged",
+                              paged=PagedConfig(page_size=chunk))
+        eng = ServeEngine(sm, params, slots=batch,
+                          prefix_cache=(mode == "on"))
+        # warm requests: compile every shape — full prefill, then (cache
+        # on) an ATTACHING admission so the seed-gather/tail-prefill
+        # programs are built — leaving the shared prefix resident: the
+        # steady state the row measures
+        eng.submit(prompts[0], max_new_tokens=2)
+        eng.run()
+        eng.submit(prompts[1], max_new_tokens=2)
+        eng.run()
+        ttfts = []
+        for p in prompts:
+            r = eng.submit(p, max_new_tokens=gen)
+            s0 = time.perf_counter()
+            eng.admit()                    # prefill + first token
+            assert r.outputs, "admission did not emit tok0"
+            ttfts.append(time.perf_counter() - s0)
+            eng.run()                      # drain before the next sample
+        out[mode] = float(np.mean(ttfts))
+        row = {
+            "name": f"prefix_cache/{mode}/P{prefix_len}",
+            "us_per_call": f"{out[mode]*1e6:.0f}",
+            "derived": f"ttft_ms={out[mode]*1e3:.2f};"
+                       f"overlap={prefix_len}/{prefix_len + tail}",
+        }
+        if mode == "on":
+            row["derived"] += (
+                f";hits={eng.n_prefix_hits}"
+                f";tokens_skipped={eng.n_prefix_tokens}"
+                f";ttft_gain={out['off']/max(out['on'],1e-9):.1f}x")
+        rows.append(row)
+
+    n_forks = 3
+    sm = DecoderStepModel(model, max_len=max_len, prefill_chunk=chunk,
+                          kv_layout="paged",
+                          paged=PagedConfig(page_size=chunk))
+    eng = ServeEngine(sm, params, slots=n_forks + 1)
+    eng.submit(prompts[0], max_new_tokens=2)
+    eng.run()                              # compile warm-up
+    s0 = time.perf_counter()
+    parent = eng.submit(prompts[0], max_new_tokens=gen)
+    eng.step()
+    eng.fork(parent, n_forks)
+    eng.run()
+    forked = time.perf_counter() - s0
+    s0 = time.perf_counter()
+    for _ in range(n_forks + 1):
+        eng.submit(prompts[0], max_new_tokens=gen)
+    eng.run()
+    indep = time.perf_counter() - s0
+    rows.append({
+        "name": f"fork_best_of/{n_forks + 1}/P{prefix_len}",
+        "us_per_call": f"{forked*1e6:.0f}",
+        "derived": f"forked_s={forked:.4f};independent_s={indep:.4f};"
+                   f"speedup={indep/max(forked,1e-9):.1f}x;"
+                   f"cow_copies={eng.n_cow_copies}",
+    })
+    return rows
+
+
 def _moe_compare(batch=4, gen=8, prompt=16, chunk=8):
     """MoE stack serving: batch-invariant auto dispatch (gather-GEMM
     decode + per-request prefill) vs the pooled capacity dispatch the
@@ -448,6 +533,7 @@ def run(arch="minimalist-lm-360m", batches=(1, 64, 256), gen=16,
                                  mesh_spec=mesh_spec))
     rows.extend(_moe_compare(gen=gen))
     rows.extend(_paged_compare(gen=gen))
+    rows.extend(_prefix_compare(gen=max(2, gen // 4)))
     return emit(rows)
 
 

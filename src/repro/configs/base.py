@@ -237,6 +237,10 @@ class ServeConfig:
     kv_layout: str = "dense"
     page_size: int = 16       # tokens per KV page (paged layout)
     num_pages: int = 0        # pool capacity; 0 = auto (dense-equivalent)
+    # hash-keyed prompt-prefix reuse (paged layout only): requests whose
+    # page-aligned prompt prefix is resident attach to the existing
+    # pages and prefill only the tail (README §Prefix caching)
+    prefix_cache: bool = False
 
 
 @dataclasses.dataclass(frozen=True)

@@ -71,7 +71,8 @@ def build_engine(model, params, serve: ServeConfig = ServeConfig(),
                                     num_pages=serve.num_pages))
     sm = DecoderStepModel(model, max_len=serve.max_len,
                           prefill_chunk=serve.prefill_chunk, **kw)
-    return ServeEngine(sm, params, slots=serve.slots, mesh=mesh)
+    return ServeEngine(sm, params, slots=serve.slots, mesh=mesh,
+                       prefix_cache=serve.prefix_cache)
 
 
 def parse_mesh(spec: str):
@@ -139,6 +140,16 @@ def main(argv=None):
                          "equivalent (slots x pages-per-max-len-request) "
                          "— set lower to actually cap memory (admission "
                          "defers when the pool is full)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="paged layout only: pin finished prompts' pages "
+                         "so requests sharing a page-aligned prompt "
+                         "prefix attach to them and prefill only the "
+                         "tail (README §Prefix caching)")
+    ap.add_argument("--fork", type=int, default=0,
+                    help="fork the FIRST admitted request into N extra "
+                         "copy-on-write streams after one decode step "
+                         "(paged layout; demonstrates best-of-n page "
+                         "sharing)")
     ap.add_argument("--baseline", action="store_true",
                     help="run the static-batch loop instead of the engine")
     args = ap.parse_args(argv)
@@ -187,35 +198,64 @@ def main(argv=None):
               f"({total/dt:.1f} tok/s incl. prefill + compile)")
         return out
 
+    if args.prefix_cache and args.kv_layout != "paged":
+        ap.error("--prefix-cache needs --kv-layout paged")
+    if args.fork and args.kv_layout != "paged":
+        ap.error("--fork needs --kv-layout paged")
     eng = build_engine(model, params,
                        ServeConfig(slots=args.slots, max_len=max_len,
                                    prefill_chunk=args.prefill_chunk,
                                    kv_layout=args.kv_layout,
                                    page_size=args.page_size,
-                                   num_pages=args.num_pages),
+                                   num_pages=args.num_pages,
+                                   prefix_cache=args.prefix_cache),
                        mesh=mesh)
     if eng.pool is not None:
         print(f"paged KV: {eng.pool.num_pages} pages x "
               f"{args.page_size} tokens, "
-              f"<= {eng.pool.max_pages} pages/request")
+              f"<= {eng.pool.max_pages} pages/request"
+              + (", prefix cache on" if eng.prefix_cache else ""))
     if mesh is not None:
         info = mesh_info(mesh)
         print(f"mesh: {info['axes']} (dp={info['dp']} tp={info['tp']}, "
               f"{info['n_devices']} devices)")
     t0 = time.time()
+    first = None
     for i, (p, g) in enumerate(zip(prompts, glens)):
         sampling = None
         if args.temperature > 0:
             sampling = SamplingParams(temperature=args.temperature,
                                       top_k=args.top_k, top_p=args.top_p,
                                       seed=args.seed + i)
-        eng.submit(p, max_new_tokens=int(g), sampling=sampling)
+        r = eng.submit(p, max_new_tokens=int(g), sampling=sampling)
+        first = first or r
+    if args.fork:
+        eng.step()                       # admit + one decode step
+        room = int(args.slots - eng.active.sum())
+        if first.finished or not room:
+            print(f"fork skipped: request uid={first.uid} "
+                  + ("already finished" if first.finished
+                     else "no free slot (raise --slots above the "
+                          "request count to demo forking)"))
+        else:
+            kids = eng.fork(first, min(args.fork, room))
+            print(f"forked request uid={first.uid} into "
+                  f"{len(kids)} COW streams")
     done = eng.run()
     dt = time.time() - t0
     total = int(plens.sum() + glens.sum())
     print(f"engine: {len(done)} requests, {eng.n_emitted} tokens in "
           f"{dt:.2f}s ({total/dt:.1f} tok/s incl. prefill + compile), "
           f"slot utilization {eng.utilization:.2f}")
+    if eng.prefix_cache is not None:
+        pc = eng.prefix_cache
+        print(f"prefix cache: {eng.n_prefix_hits} hits / "
+              f"{pc.misses} misses, {eng.n_prefix_tokens} prompt tokens "
+              f"skipped, {len(pc)} entries pinning "
+              f"{pc.pinned_pages} pages, {pc.n_evicted} evicted")
+    if eng.n_forks or eng.n_cow_copies:
+        print(f"forks: {eng.n_forks}, COW page copies: "
+              f"{eng.n_cow_copies}")
     print("sample:", done[0].tokens[:16])
     return done
 

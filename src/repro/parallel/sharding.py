@@ -175,6 +175,12 @@ CACHE_RULES = {
     # kv_len is pinned unsharded when serving).  Pools still TP-shard
     # their kv_heads / latent dims via the rules above; block tables are
     # per-slot arrays and DP-shard over "data" like every slot array.
+    # Prefix-cache pins and copy-on-write forks ride these same axes for
+    # free: a shared or pinned page is just a page id held by more than
+    # one block-table row / cache entry, and a COW page copy is a
+    # row-to-row copy WITHIN each device's own pool shard (page rows are
+    # whole on every device; only head/latent dims are split), so page
+    # sharing never adds a collective to the decode step.
     "pages": None,
     "page": None,
 }

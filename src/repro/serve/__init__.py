@@ -17,13 +17,15 @@ StepModel protocol with per-slot position tracking.
     chunk shape across ragged prompt lengths)
   * :mod:`repro.serve.engine`   — the fixed-capacity slot scheduler
   * :mod:`repro.serve.paged`    — paged KV cache for the attention
-    stacks: block-table page allocator + page pools, so cache memory
-    scales with LIVE tokens instead of slots × max_len (the O(1)-state
-    paths never needed it and are untouched)
+    stacks: refcounted block-table page allocator + page pools, so cache
+    memory scales with LIVE tokens instead of slots × max_len (the
+    O(1)-state paths never needed it and are untouched), plus the
+    hash-keyed prefix cache behind ``ServeEngine(prefix_cache=True)``
+    and the copy-on-write page sharing behind ``ServeEngine.fork``
 """
 from repro.configs.base import SamplingParams
 from repro.serve.engine import Request, ServeEngine
-from repro.serve.paged import PagedConfig, PagePool
+from repro.serve.paged import PagedConfig, PagePool, PrefixCache
 from repro.serve.prefill import chunked_prefill
 from repro.serve.protocol import (DecoderStepModel, MinimalistStepModel,
                                   ServeShardings, StepModel)
@@ -32,4 +34,4 @@ from repro.serve.sampling import sample_tokens
 __all__ = ["Request", "SamplingParams", "ServeEngine", "ServeShardings",
            "chunked_prefill", "sample_tokens", "StepModel",
            "DecoderStepModel", "MinimalistStepModel", "PagedConfig",
-           "PagePool"]
+           "PagePool", "PrefixCache"]

@@ -92,7 +92,8 @@ class ServeEngine:
     (admission, retirement, per-request reproducibility) never change.
     """
 
-    def __init__(self, step_model, params, *, slots: int = 8, mesh=None):
+    def __init__(self, step_model, params, *, slots: int = 8, mesh=None,
+                 prefix_cache: bool = False):
         self.sm = step_model
         self.slots = int(slots)
         if self.slots < 1:
@@ -109,6 +110,19 @@ class ServeEngine:
             from repro.serve.paged import PagePool
             self.pool = PagePool(step_model.num_pages(self.slots),
                                  self.slots, step_model.max_pages)
+        self.prefix_cache = None
+        if prefix_cache:
+            if self.pool is None:
+                raise ValueError(
+                    "prefix_cache=True needs kv_layout='paged'")
+            step_model.check_prefix_cacheable()
+            from repro.serve.paged import PrefixCache
+            # window-bearing stacks overwrite ring slots during prefill,
+            # so only end-of-prompt page state is cacheable (and the
+            # tail must start exactly at the attach point)
+            self.prefix_cache = PrefixCache(
+                self.pool, step_model.paged.page_size,
+                full_prompt_only=step_model._has_window)
         self.state = step_model.init_state(self.slots)
         self.free_mask = (1 << self.slots) - 1     # bit i set = slot i free
         self.waiting: deque[Request] = deque()
@@ -126,6 +140,10 @@ class ServeEngine:
         self.n_steps = 0
         self.n_emitted = 0          # all tokens, incl. admission prefill
         self._n_decoded = 0         # tokens emitted by slot-batch steps
+        self.n_prefix_hits = 0      # admissions that attached to cache
+        self.n_prefix_tokens = 0    # prompt positions skipped by attaches
+        self.n_cow_copies = 0       # device page copies (decode COW)
+        self.n_forks = 0
         self.finished: List[Request] = []
 
     # ------------------------------------------------------------------
@@ -135,7 +153,9 @@ class ServeEngine:
                eos_id: Optional[int] = None,
                sampling: Optional[SamplingParams] = None) -> Request:
         prompt = np.asarray(prompt)
-        if len(prompt) < 1:
+        # ndim first: len() of a 0-d array raises TypeError, and a bare
+        # scalar submission deserves the same clean rejection as []
+        if prompt.ndim < 1 or prompt.size < 1:
             raise ValueError("empty prompt")
         if sampling is None:
             sampling = SamplingParams()    # fresh instance per request
@@ -216,19 +236,36 @@ class ServeEngine:
         return padded
 
     def admit(self):
-        """Move waiting requests into free slots, one WAVE at a time:
-        same-length prompts prefill as one batched chunked call, their
-        carries land in one scatter write, and the wave costs one host
-        sync — admission overhead amortizes over the wave.
+        """Move waiting requests into free slots until no further
+        progress is possible.  Looping matters: a slot freed MID-wave
+        (eos or ``max_new_tokens==1`` on the wave's first sampled token
+        retires it inside the prefill loop) refills in the SAME call
+        instead of idling for a whole decode step."""
+        while self._admit_once():
+            pass
+
+    def _admit_once(self) -> bool:
+        """One admission wave: same-length prompts prefill as one batched
+        chunked call, their carries land in one scatter write, and the
+        wave costs one host sync — admission overhead amortizes over the
+        wave.  Returns True iff at least one request was admitted.
 
         Paged KV: admission additionally RESERVES the request's
-        worst-case page chain (prompt + full generation budget), so
-        decode-time page appends can never fail.  When the pool cannot
-        cover the next request's reservation the queue DEFERS — strictly
-        FIFO, no bypass by smaller requests behind it (head-of-line
-        blocking is the price of starvation-freedom) — and retries as
-        finished requests release pages.  Requests that can never fit
-        were already rejected at submit()."""
+        worst-case page chain (prompt + full generation budget) — the
+        FULL worst case even when a prefix attach or fork will share
+        pages, so sharing is an opportunistic saving, never load-bearing
+        capacity, and decode-time page appends / COW copies can never
+        fail.  When the pool cannot cover the next request's reservation
+        the queue DEFERS — strictly FIFO, no bypass by smaller requests
+        behind it (head-of-line blocking is the price of
+        starvation-freedom) — and retries as finished requests release
+        pages.  Requests that can never fit were already rejected at
+        submit().
+
+        Prefix caching runs SINGLETON waves (one request per wave, in
+        FIFO order): each admission inserts its prompt's pages before
+        the next request's cache lookup, so same-batch duplicates hit
+        too."""
         admitted = []
         while self.waiting and self.free_mask:
             req = self.waiting[0]
@@ -241,15 +278,16 @@ class ServeEngine:
             if self.pool is not None:
                 self.pool.reserve(slot, self.sm.pages_for(
                     len(req.prompt) + req.max_new_tokens))
-                self.pool.grow(slot, self.sm.pages_for(len(req.prompt)))
             self.slot_req[slot] = req
             self.active[slot] = True
             admitted.append((req, slot))
             if self._cur is None:
                 shape = (self.slots,) + tuple(req.prompt.shape[1:])
                 self._cur = np.zeros(shape, req.prompt.dtype)
+            if self.prefix_cache is not None:
+                break                      # singleton waves (see above)
         if not admitted:
-            return
+            return False
         if not self.sm.autoregressive:
             # streaming: blank state reset for the whole wave in one write
             slots = [s for _r, s in admitted]
@@ -260,43 +298,100 @@ class ServeEngine:
                 self.pos[slot] = 0
                 self.remaining[slot] = len(req.prompt)
                 self._cur[slot] = req.prompt[0]
-            return
+            return True
         groups: dict = {}
         for req, slot in admitted:
             groups.setdefault(len(req.prompt), []).append((req, slot))
         for plen, group in groups.items():
-            slots = [s for _r, s in group]
-            pad = self._pad_slots(slots)
-            prompts = [r.prompt for r, _s in group]
-            prompts += [prompts[-1]] * (len(pad) - len(group))
-            last, carry = self.sm.prefill(self.params, np.stack(prompts))
-            if self.pool is None:
-                self.state = self.sm.write_slots(self.state, carry, pad)
+            pages = None
+            if self.prefix_cache is not None:
+                req0, slot0 = group[0]     # singleton wave by construction
+                pages, attach = self.prefix_cache.match(
+                    req0.prompt, self.sm.chunk_for(plen))
+            if pages is not None:
+                last, carry = self._attach_prefill(req0, slot0, pages,
+                                                   attach)
             else:
-                # page-granular scatter: each wave row's dense prefill
-                # cache lands in its chain's pages; padding rows get
-                # all-out-of-bounds page ids so their writes drop
-                pages = np.full((len(pad), self.pool.max_pages),
-                                self.pool.num_pages, np.int32)
-                pages[:len(group)] = self.pool.block_tables[slots]
-                self.state = self.sm.write_slots(self.state, carry, pad,
-                                                 pages=pages, plen=plen)
-            # the wave's first generated token sits at position plen — its
-            # draw uses the same counter-based (seed, uid, pos) key family
-            # as the decode loop, so it is reproducible under any batching
-            tok0 = np.asarray(self.sm.sample(
-                last, self._wave_sampling(group, len(pad)),
-                np.full(len(pad), plen, np.int32)))
-            for i, (req, slot) in enumerate(group):
-                t = int(tok0[i])
-                req.outputs.append(t)
-                self.n_emitted += 1
-                self.pos[slot] = plen
-                self.remaining[slot] = req.max_new_tokens - 1
-                self._cur[slot] = t
-                self._set_sampling(slot, req)
-                if self.remaining[slot] <= 0 or t == req.eos_id:
-                    self._retire(slot)
+                if self.pool is not None:
+                    for _r, s in group:
+                        self.pool.grow(s, self.sm.pages_for(plen))
+                prompts = [r.prompt for r, _s in group]
+                prompts += [prompts[-1]] * (
+                    len(self._pad_slots([s for _r, s in group]))
+                    - len(group))
+                last, carry = self.sm.prefill(self.params,
+                                              np.stack(prompts))
+            self._install_wave(plen, group, last, carry)
+        return True
+
+    def _attach_prefill(self, req, slot, pages, attach):
+        """Prefix-cache hit: share the resident pages into ``slot``,
+        reconstruct the dense cache they hold, and prefill only the tail
+        chunks — the attached stream is bitwise the stream a full
+        prefill would have produced (same chunk grid, same bytes)."""
+        sm, plen = self.sm, len(req.prompt)
+        self.pool.share(slot, pages)
+        # gather BEFORE any detach below rewires the block-table row
+        seed = sm.seed_cache(self.state,
+                             self.pool.block_tables[slot:slot + 1])
+        self.pool.grow(slot, sm.pages_for(plen))
+        if sm._has_window:
+            # ring pages diverge from the entry's frozen bytes the moment
+            # the tail writes — detach them, with no device copy: the
+            # wave write below rewrites every chain page for every leaf
+            for i in range(len(pages)):
+                self.pool.cow(slot, i, materialize=False)
+            start = attach
+        else:
+            # global/MLA: the overlap recompute writes identical bytes,
+            # so shared pages stay shared; recompute at least the last
+            # token (its logits feed the first sampled token)
+            cw = sm.chunk_for(plen)
+            start = (min(attach, plen - 1) // cw) * cw
+        last, carry = sm.prefill(self.params, req.prompt[None, :],
+                                 cache0=seed, start=start)
+        self.n_prefix_hits += 1
+        self.n_prefix_tokens += start
+        return last, carry
+
+    def _install_wave(self, plen, group, last, carry):
+        """Scatter a prefilled wave into its slots, pin its prompts in
+        the prefix cache, and draw/book-keep the first sampled token."""
+        slots = [s for _r, s in group]
+        pad = self._pad_slots(slots)
+        if self.pool is None:
+            self.state = self.sm.write_slots(self.state, carry, pad)
+        else:
+            # page-granular scatter: each wave row's dense prefill
+            # cache lands in its chain's pages; padding rows get
+            # all-out-of-bounds page ids so their writes drop
+            pages = np.full((len(pad), self.pool.max_pages),
+                            self.pool.num_pages, np.int32)
+            pages[:len(group)] = self.pool.block_tables[slots]
+            self.state = self.sm.write_slots(self.state, carry, pad,
+                                             pages=pages, plen=plen)
+            if self.prefix_cache is not None:
+                # pin BEFORE an instant retire below releases the chain
+                for r, s in group:
+                    self.prefix_cache.insert(
+                        r.prompt, self.pool.block_tables[s],
+                        self.sm.chunk_for(plen))
+        # the wave's first generated token sits at position plen — its
+        # draw uses the same counter-based (seed, uid, pos) key family
+        # as the decode loop, so it is reproducible under any batching
+        tok0 = np.asarray(self.sm.sample(
+            last, self._wave_sampling(group, len(pad)),
+            np.full(len(pad), plen, np.int32)))
+        for i, (req, slot) in enumerate(group):
+            t = int(tok0[i])
+            req.outputs.append(t)
+            self.n_emitted += 1
+            self.pos[slot] = plen
+            self.remaining[slot] = req.max_new_tokens - 1
+            self._cur[slot] = t
+            self._set_sampling(slot, req)
+            if self.remaining[slot] <= 0 or t == req.eos_id:
+                self._retire(slot)
 
     # ------------------------------------------------------------------
     # decode
@@ -338,10 +433,23 @@ class ServeEngine:
             # allocate-on-decode-append: this step writes K/V at
             # pos[slot], so every active chain must cover it — the pages
             # come out of the reservation made at admission, so growth
-            # cannot fail mid-stream
+            # cannot fail mid-stream.  Copy-on-write: a write landing in
+            # a SHARED page (fork sibling / prefix-cache pin also holds
+            # it) first detaches to a private copy; the device copies
+            # for the whole step batch run as ONE jitted program.
+            cow_src, cow_dst = [], []
             for slot in np.flatnonzero(self.active):
                 self.pool.grow(slot,
                                self.sm.pages_for(int(self.pos[slot]) + 1))
+                for ci in self.sm.write_page_indices(int(self.pos[slot])):
+                    pair = self.pool.cow(slot, ci)
+                    if pair is not None:
+                        cow_src.append(pair[0])
+                        cow_dst.append(pair[1])
+            if cow_src:
+                self.state = self.sm.copy_pages(self.state, cow_src,
+                                                cow_dst)
+                self.n_cow_copies += len(cow_src)
             bt = self.pool.block_tables
         active = jnp.asarray(self.active)
         pos = jnp.asarray(self.pos)
@@ -372,15 +480,117 @@ class ServeEngine:
             if done:
                 self._retire(slot)
 
+    def fork(self, req: Request, n: int = 1, *,
+             max_new_tokens: Optional[int] = None,
+             sampling: Optional[SamplingParams] = None) -> List[Request]:
+        """Split a RUNNING request into ``n`` additional streams that
+        share its page chain copy-on-write — beam search and best-of-n
+        pay the parent's prefill (and all pages decoded so far) once.
+
+        Each child copies the parent's block-table row (``PagePool.share``
+        increments every page's refcount), its recurrent non-pool state
+        (one jitted ``copy_slot``), its emitted-so-far outputs, position
+        and input token; a later decode write into a still-shared page
+        detaches a private copy first (see :meth:`step`).  Children get
+        a FRESH uid, so sampled children draw independent streams from
+        the counter-based PRNG while greedy children reproduce the
+        parent bitwise.
+
+        ``max_new_tokens=None`` inherits the parent's remaining budget;
+        an int gives each child that many tokens from the fork point.
+        Children need a free slot and a full worst-case reservation NOW
+        — fork raises rather than queueing (a queued fork would race the
+        parent's ongoing decode)."""
+        if self.pool is None:
+            raise ValueError("fork() needs kv_layout='paged' (page "
+                             "sharing is what makes a fork O(1))")
+        if not self.sm.autoregressive:
+            raise ValueError("fork() applies to LM requests only")
+        parent = next((s for s, r in enumerate(self.slot_req)
+                       if r is req), None)
+        if parent is None:
+            raise ValueError(
+                "fork parent must be RUNNING (admitted, not finished) — "
+                "fork after admit()/step() has placed it in a slot")
+        if sampling is not None:
+            sampling.validate()
+        children: List[Request] = []
+        for _ in range(int(n)):
+            pos = int(self.pos[parent])
+            budget = (int(self.remaining[parent])
+                      if max_new_tokens is None else int(max_new_tokens))
+            if budget < 1:
+                raise ValueError(f"fork needs a generation budget >= 1, "
+                                 f"got {budget}")
+            if pos + budget > self.sm.max_len:
+                raise ValueError(
+                    f"fork at position {pos} + {budget} new tokens "
+                    f"exceeds max_len={self.sm.max_len}")
+            if not self.free_mask:
+                raise RuntimeError("no free slot to fork into")
+            need = self.sm.pages_for(pos + budget)
+            if not self.pool.can_admit(need):
+                raise RuntimeError(
+                    f"cannot fork: child needs a reservation of {need} "
+                    f"pages but only {self.pool.available} are "
+                    "unreserved (shared pages don't count — "
+                    "reservations stay worst-case under sharing)")
+            slot = self._alloc_slot()
+            self.pool.reserve(slot, need)
+            nchain = int(self.pool.chain_len[parent])
+            self.pool.share(slot,
+                            self.pool.block_tables[parent, :nchain])
+            samp = (dataclasses.replace(sampling) if sampling is not None
+                    else dataclasses.replace(req.sampling))
+            child = Request(self._uid, req.prompt, budget, req.eos_id,
+                            samp)
+            self._uid += 1
+            child.outputs = list(req.outputs)
+            self.slot_req[slot] = child
+            self.active[slot] = True
+            self.pos[slot] = self.pos[parent]
+            self.remaining[slot] = budget
+            self._cur[slot] = self._cur[parent]
+            self._set_sampling(slot, child)
+            self.state = self.sm.copy_slot(self.state, parent, slot)
+            self.n_forks += 1
+            children.append(child)
+        return children
+
     def run(self, max_steps: Optional[int] = None) -> List[Request]:
         """Drive until every submitted request finishes; returns them in
-        completion order."""
+        completion order.
+
+        Deadlock guard: a step with nothing active, nothing retired and
+        a non-empty queue can never make progress (no running request
+        will ever free the pages the queue's head is deferred on) — the
+        old loop busy-spun forever; now it raises, naming the blocked
+        request and the pool state."""
         steps = 0
         while self.waiting or self.active.any():
+            n_finished = len(self.finished)
             self.step()
             steps += 1
             if max_steps is not None and steps >= max_steps:
                 break
+            if (self.waiting and not self.active.any()
+                    and len(self.finished) == n_finished):
+                head = self.waiting[0]
+                need = (self.sm.pages_for(len(head.prompt)
+                                          + head.max_new_tokens)
+                        if self.pool is not None else 0)
+                pool = ("no page pool" if self.pool is None else
+                        f"pool: {self.pool.available} of "
+                        f"{self.pool.num_pages} pages unreserved, "
+                        f"{self.pool.pages_in_use} in use, "
+                        f"reserved_total={self.pool.reserved_total}")
+                raise RuntimeError(
+                    f"engine stalled: request uid={head.uid} "
+                    f"(prompt={len(head.prompt)} tokens, "
+                    f"max_new_tokens={head.max_new_tokens}, needs "
+                    f"{need} pages) cannot admit, no slot is active to "
+                    f"free capacity, and {len(self.waiting)} request(s) "
+                    f"wait behind it — {pool}")
         return self.finished
 
     # ------------------------------------------------------------------

@@ -7,16 +7,22 @@ the paged layout every attention layer keeps a shared page pool
 allocator hands page ids to requests:
 
   * :class:`PagedConfig` — page size / pool capacity knobs (validated)
-  * :class:`PagePool`    — free-list allocator: per-request page chains,
-    one block-table row per slot, reservation-based admission (a request
-    is admitted only when its worst-case chain is covered, so decode can
-    NEVER run out of pages mid-stream), allocate-on-decode-append, and
-    free-on-finish/cancel.
+  * :class:`PagePool`    — refcounted free-list allocator: per-request
+    page chains, one block-table row per slot, reservation-based
+    admission (a request is admitted only when its worst-case chain is
+    covered, so decode can NEVER run out of pages mid-stream),
+    allocate-on-decode-append, copy-on-write page sharing (forks /
+    prefix attaches), and free-on-finish/cancel at refcount zero.
+  * :class:`PrefixCache` — hash-keyed LRU cache pinning finished
+    prompts' pages so matching requests attach and prefill only the
+    tail (``ServeEngine(prefix_cache=True)``).
 
-See README §Paged KV cache for the layout diagram and the admission
-policy (OOM at submit for can-never-fit requests; DEFER at admit when
-the pool is temporarily full).
+See README §Paged KV cache / §Prefix caching & copy-on-write forks for
+the layout diagram and the admission policy (OOM at submit for
+can-never-fit requests; DEFER at admit when the pool is temporarily
+full).
 """
 from repro.serve.paged.pool import PagedConfig, PagePool
+from repro.serve.paged.prefix import PrefixCache
 
-__all__ = ["PagedConfig", "PagePool"]
+__all__ = ["PagedConfig", "PagePool", "PrefixCache"]

@@ -1,21 +1,34 @@
-"""Block-table page allocator (host side).
+"""Block-table page allocator (host side) with per-page refcounts.
 
 Pages are rows of the device-resident pools; this module only moves
 int32 page ids around.  Invariants the serving engine relies on:
 
-  * a page id belongs to exactly one slot's chain or to the free list
-    (never both, never two chains) — so concurrent slots can scatter
-    into the shared pool without write aliasing;
-  * reservations are conservative: ``reserve`` succeeds only if the
-    request's WORST-CASE page count fits alongside every other
-    outstanding reservation, so ``grow`` (allocate-on-decode-append) can
-    never fail mid-stream — the OOM-vs-defer decision happens once, at
-    admission, never during decode;
-  * ``release`` returns both the allocated pages and the unused tail of
-    the reservation (an eos-retired request frees capacity it never
-    touched).
+  * a page id belongs to the free list or has ``refcount >= 1``; a page
+    with ``refcount == 1`` has exactly ONE writer (its owning chain), so
+    concurrent slots can scatter into the shared pool without write
+    aliasing — a chain about to WRITE into a page with ``refcount > 1``
+    must first :meth:`cow` it (copy-on-write);
+  * reservations are conservative UNDER SHARING: ``reserve`` charges
+    every chain its full worst-case page count even when it currently
+    shares pages with a parent chain or the prefix cache, so ``grow``
+    (allocate-on-decode-append) and ``cow`` can never fail mid-stream —
+    shared pages are a bonus, never load-bearing capacity.  Formally:
+    every live chain's length is ``<= _reserved[slot]``, each physical
+    page is counted at most once per chain holding it, so
+    ``pages_in_use <= reserved_total + held_external`` and after the
+    reclaim hook drains external holds ``len(_free) >= num_pages -
+    reserved_total >= 0`` whenever a reserve-covered pop happens;
+  * ``release`` decrements refcounts and returns only pages that hit
+    zero (plus the unused reservation tail) — forks/prefix holds keep
+    shared pages alive;
+  * external holders (the prefix cache) pin pages via
+    :meth:`incref`/:meth:`decref`; when the free list runs dry the pool
+    calls its ``reclaim`` hook so the holder can drop unpinned pages
+    before a reserve-covered allocation would fail.
 """
 from __future__ import annotations
+
+from typing import Callable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -55,9 +68,9 @@ class PagedConfig:
 
 
 class PagePool:
-    """Free-list page allocator over ``num_pages`` pages for ``slots``
-    concurrent requests, each owning up to ``max_pages`` chain entries
-    (one block-table row)."""
+    """Refcounted free-list page allocator over ``num_pages`` pages for
+    ``slots`` concurrent requests, each owning up to ``max_pages`` chain
+    entries (one block-table row)."""
 
     def __init__(self, num_pages: int, slots: int, max_pages: int):
         if num_pages < 1:
@@ -74,16 +87,25 @@ class PagePool:
         self.chain_len = np.zeros(self.slots, np.int32)
         self._reserved = np.zeros(self.slots, np.int64)
         self.reserved_total = 0
+        # one count per physical page: chains holding it + external holds
+        self.refcount = np.zeros(self.num_pages, np.int32)
+        #: called with the number of pages needed when the free list runs
+        #: dry (the prefix cache evicts unpinned entries); may be None.
+        self.reclaim: Optional[Callable[[int], None]] = None
+        # telemetry
+        self.n_cow = 0
 
     # -- accounting -----------------------------------------------------
     @property
     def pages_in_use(self) -> int:
-        """Pages physically allocated to chains."""
+        """Pages physically off the free list (refcount >= 1)."""
         return self.num_pages - len(self._free)
 
     @property
     def available(self) -> int:
-        """Pages not yet promised to any admitted request."""
+        """Pages not yet promised to any admitted request.  Conservative
+        under sharing: a forked/attached chain still charges its FULL
+        worst case here, so shared pages never prop up admission."""
         return self.num_pages - self.reserved_total
 
     # -- admission ------------------------------------------------------
@@ -101,6 +123,24 @@ class PagePool:
         self._reserved[slot] = n_pages
         self.reserved_total += n_pages
 
+    # -- allocation core -------------------------------------------------
+    def _pop(self) -> int:
+        """Take one page off the free list (refcount 0 -> 1), asking the
+        reclaim hook to drop external holds first if it is empty.  Every
+        caller is reserve-covered, so after a full reclaim a free page
+        provably exists — running dry here is an accounting bug."""
+        if not self._free and self.reclaim is not None:
+            self.reclaim(1)
+        if not self._free:
+            raise RuntimeError(
+                "page pool exhausted under a covered reservation — "
+                "refcount/reservation accounting bug "
+                f"(in_use={self.pages_in_use}, "
+                f"reserved_total={self.reserved_total})")
+        p = self._free.pop()
+        self.refcount[p] = 1
+        return p
+
     # -- allocate-on-append ---------------------------------------------
     def grow(self, slot: int, n_chain: int):
         """Extend ``slot``'s chain to ``n_chain`` pages, drawing on its
@@ -112,15 +152,83 @@ class PagePool:
                 f"reservation of {int(self._reserved[slot])} — scheduler "
                 "bug (reservations are sized to the worst case)")
         while self.chain_len[slot] < n_chain:
-            self.block_tables[slot, self.chain_len[slot]] = self._free.pop()
+            self.block_tables[slot, self.chain_len[slot]] = self._pop()
             self.chain_len[slot] += 1
+
+    # -- sharing ---------------------------------------------------------
+    def share(self, slot: int, pages: Sequence[int]):
+        """Seed ``slot``'s (empty) chain with existing live pages —
+        fork / prefix-cache attach.  Each page's refcount goes up by
+        one; the slot must already hold a reservation covering its full
+        worst case (sharing saves memory only OPPORTUNISTICALLY)."""
+        if self.chain_len[slot]:
+            raise RuntimeError(f"slot {slot} already owns a chain")
+        pages = [int(p) for p in pages]
+        if len(pages) > self._reserved[slot]:
+            raise RuntimeError(
+                f"slot {slot}: sharing {len(pages)} pages exceeds its "
+                f"reservation of {int(self._reserved[slot])}")
+        for p in pages:
+            if self.refcount[p] < 1:
+                raise RuntimeError(f"page {p} is not live (cannot share)")
+            self.refcount[p] += 1
+        self.block_tables[slot, :len(pages)] = pages
+        self.chain_len[slot] = len(pages)
+
+    def cow(self, slot: int, i: int,
+            materialize: bool = True) -> Optional[Tuple[int, int]]:
+        """Copy-on-write: if chain entry ``i`` of ``slot`` points at a
+        SHARED page (refcount > 1), replace it with a private page and
+        return ``(src, dst)`` so the caller can copy device bytes.
+        Returns None when the page is already private.
+
+        ``materialize=False`` detaches WITHOUT requesting a device copy
+        (the caller is about to fully overwrite the page, e.g. an
+        attached ring page refilled by the tail prefill)."""
+        if i >= self.chain_len[slot]:
+            raise RuntimeError(
+                f"slot {slot}: cow({i}) beyond chain length "
+                f"{int(self.chain_len[slot])}")
+        src = int(self.block_tables[slot, i])
+        if self.refcount[src] <= 1:
+            return None
+        self.refcount[src] -= 1
+        dst = self._pop()
+        self.block_tables[slot, i] = dst
+        self.n_cow += 1
+        return (src, dst) if materialize else None
+
+    # -- external holds (prefix cache) -----------------------------------
+    def incref(self, pages: Sequence[int]):
+        """Pin live pages for an external holder (refcount +1 each)."""
+        for p in pages:
+            p = int(p)
+            if self.refcount[p] < 1:
+                raise RuntimeError(f"page {p} is not live (cannot pin)")
+            self.refcount[p] += 1
+
+    def decref(self, pages: Sequence[int]) -> List[int]:
+        """Drop an external hold; pages hitting refcount zero return to
+        the free list.  Returns the freed page ids."""
+        freed = []
+        for p in pages:
+            p = int(p)
+            if self.refcount[p] < 1:
+                raise RuntimeError(f"page {p} double-free")
+            self.refcount[p] -= 1
+            if self.refcount[p] == 0:
+                self._free.append(p)
+                freed.append(p)
+        return freed
 
     # -- free ------------------------------------------------------------
     def release(self, slot: int):
-        """Finish/cancel: return the chain to the free list and drop the
-        remaining reservation.  Idempotent for an empty slot."""
+        """Finish/cancel: decrement the chain's refcounts (pages return
+        to the free list only at zero — a fork or prefix hold keeps them
+        alive) and drop the remaining reservation.  Idempotent for an
+        empty slot."""
         n = int(self.chain_len[slot])
-        self._free.extend(int(p) for p in self.block_tables[slot, :n])
+        self.decref(self.block_tables[slot, :n])
         self.reserved_total -= int(self._reserved[slot])
         self._reserved[slot] = 0
         self.chain_len[slot] = 0

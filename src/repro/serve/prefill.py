@@ -74,9 +74,17 @@ def _scan_prefill_fn(model):
 
 
 def chunked_prefill(step_model, params, tokens, *, chunk=256, pos0=0,
-                    pad_to_grid=True, force_scan=False):
+                    pad_to_grid=True, force_scan=False, cache0=None,
+                    start=0):
     """Consume a whole prompt. tokens: (B, P) -> (last-valid-token logits
-    (B, V_pad), cache carry with batch B) ready for the decode loop."""
+    (B, V_pad), cache carry with batch B) ready for the decode loop.
+
+    ``cache0``/``start``: TAIL prefill for a prefix-cache attach — resume
+    from a seeded cache holding positions [0, start') for some
+    start' >= start and consume only the chunks from ``start`` (must sit
+    on the chunk grid) onward.  Chunk widths and boundaries are
+    unchanged, so every computed chunk is the bitwise-identical program
+    a from-scratch prefill of the same prompt would run."""
     model = step_model.model
     tokens = jnp.asarray(tokens, jnp.int32)
     if step_model.mesh is not None:
@@ -86,19 +94,30 @@ def chunked_prefill(step_model, params, tokens, *, chunk=256, pos0=0,
         tokens = step_model.put_slot(tokens)
     B, P = tokens.shape
     chunk = max(1, int(chunk))
-    tmpl = step_model._cache_templates
-    if B not in tmpl:   # zeros are immutable and never donated: reusable
-        tmpl[B] = step_model.place_cache(
-            model.init_cache(B, step_model.max_len))
-    cache = tmpl[B]
+    start = int(start)
+    if start % chunk:
+        raise ValueError(f"tail prefill start={start} must sit on the "
+                         f"chunk grid (chunk={chunk})")
+    if not 0 <= start < P:
+        raise ValueError(f"start={start} outside prompt of {P} tokens")
+    if cache0 is not None:
+        cache = cache0
+    else:
+        if start:
+            raise ValueError("start > 0 needs a seeded cache0")
+        tmpl = step_model._cache_templates
+        if B not in tmpl:   # zeros are immutable, never donated: reusable
+            tmpl[B] = step_model.place_cache(
+                model.init_cache(B, step_model.max_len))
+        cache = tmpl[B]
     if force_scan or not model.supports_prefill():
         if step_model._jit_prefill_scan is None:
             step_model._jit_prefill_scan = jax.jit(_scan_prefill_fn(model))
         fn = step_model._jit_prefill_scan
         last = None
-        for start in range(0, P, chunk):
-            piece = tokens[:, start:start + chunk]
-            last, cache = fn(params, piece, cache, jnp.int32(pos0 + start))
+        for s in range(start, P, chunk):
+            piece = tokens[:, s:s + chunk]
+            last, cache = fn(params, piece, cache, jnp.int32(pos0 + s))
         return last, cache
     if step_model._jit_prefill_fast is None:
         step_model._jit_prefill_fast = jax.jit(_fast_prefill_fn(model))
@@ -106,11 +125,11 @@ def chunked_prefill(step_model, params, tokens, *, chunk=256, pos0=0,
     if pad_to_grid and P % chunk:
         tokens = jnp.pad(tokens, ((0, 0), (0, chunk - P % chunk)))
     last = None
-    for start in range(0, tokens.shape[1], chunk):
-        piece = tokens[:, start:start + chunk]
+    for s in range(start, tokens.shape[1], chunk):
+        piece = tokens[:, s:s + chunk]
         # valid-token count is a TRACED scalar: every chunk of a given
         # width shares one compiled program regardless of padding
-        valid = min(P - start, piece.shape[1])
-        last, cache = fn(params, piece, cache, jnp.int32(pos0 + start),
+        valid = min(P - s, piece.shape[1])
+        last, cache = fn(params, piece, cache, jnp.int32(pos0 + s),
                          jnp.int32(valid))
     return last, cache

@@ -223,6 +223,23 @@ class DecoderStepModel(StepModel):
             self.max_pages = self.pages_for(self.max_len)
             self.paged.validate_for(self.max_len, self.max_pages)
             self._pool_names = frozenset(model.paged_layer_names())
+            # copy-on-write metadata: which in-chain page indices a
+            # decode write at position p touches.  Global/MLA layers
+            # write the absolute page p//ps; each sliding-window ring of
+            # length L recycles page (p % L)//ps in place.
+            ring = set()
+            has_global = False
+            for name, lyr, _m in model._all_layers():
+                if name not in self._pool_names:
+                    continue
+                L = lyr.mixer.ring_length(self.max_len)
+                if L < self.max_len:
+                    ring.add(int(L))
+                else:
+                    has_global = True
+            self._ring_lens = sorted(ring)
+            self._has_global = has_global
+            self._has_window = bool(ring)
         # in the model's native cache layout, scanned-unit leaves carry the
         # layer-repeat axis FIRST — their slot (batch) axis is 1, not 0.
         self._slot_axis = {name: (1 if mode == "scanned" else 0)
@@ -253,6 +270,12 @@ class DecoderStepModel(StepModel):
             # exactly the prefill's own compile classes
             self._jit_write = jax.jit(self._write_impl_paged,
                                       static_argnums=(4,))
+            # sharing machinery: fork slot-state copies, COW page copies,
+            # prefix-attach cache seeding (all page-pool local — the page
+            # axis is never sharded, so none of these need collectives)
+            self._jit_copy_slot = jax.jit(self._copy_slot_impl)
+            self._jit_copy_pages = jax.jit(self._copy_pages_impl)
+            self._jit_seed = jax.jit(self._seed_impl)
         else:
             self._jit_step = jax.jit(self._step_impl)
             self._jit_write = jax.jit(self._write_impl)
@@ -275,6 +298,141 @@ class DecoderStepModel(StepModel):
     def num_pages(self, slots: int) -> int:
         """Resolved pool capacity (0 in the config = dense-equivalent)."""
         return self.paged.resolve_num_pages(slots, self.max_pages)
+
+    def write_page_indices(self, pos: int):
+        """In-chain page indices a decode write at position ``pos``
+        touches (the engine COWs these when they are shared): the
+        absolute page for global/MLA layers, plus each sliding-window
+        ring's recycled page."""
+        ps = self.paged.page_size
+        out = set()
+        if self._has_global:
+            out.add(int(pos) // ps)
+        for L in self._ring_lens:
+            out.add((int(pos) % L) // ps)
+        return sorted(out)
+
+    def check_prefix_cacheable(self):
+        """Prefix caching reconstructs a request's WHOLE decode state
+        from pages — reject stacks where that is impossible."""
+        if self.kv_layout != "paged":
+            raise ValueError("prefix caching needs kv_layout='paged'")
+        o1 = sorted(set(self._slot_axis) - set(self._pool_names))
+        if o1:
+            raise ValueError(
+                f"prefix caching needs an all-attention stack: layers "
+                f"{o1} carry O(1) mixer state that does not live in "
+                "pages, so an attached request could not reconstruct it")
+        if self._page_cap < self.max_len:
+            raise ValueError(
+                "prefix caching needs page chains spanning max_len; a "
+                f"pure sliding-window stack caps them at the ring "
+                f"({self._page_cap} positions) and overwrites prompt "
+                "pages in place")
+        return True
+
+    # -- page sharing (forks / prefix attaches) --------------------------
+    def _copy_slot_impl(self, state, src, dst):
+        """Duplicate the per-slot NON-pool leaves of ``src`` into ``dst``
+        (fork: the page pools themselves are shared via block tables)."""
+        out = {}
+        for name, sub in state.items():
+            if name in self._pool_names:
+                out[name] = sub
+                continue
+            ax = self._slot_axis[name]
+
+            def cp(s, ax=ax):
+                row = jax.lax.dynamic_index_in_dim(s, src, ax,
+                                                   keepdims=True)
+                return jax.lax.dynamic_update_slice_in_dim(s, row, dst,
+                                                           ax)
+
+            out[name] = jax.tree_util.tree_map(cp, sub)
+        return out
+
+    def copy_slot(self, state, src: int, dst: int):
+        """Fork: copy slot ``src``'s recurrent (non-pool) state into
+        ``dst`` inside one jitted program (src/dst ride as traced
+        scalars — one compile, any pair)."""
+        src, dst = jnp.int32(src), jnp.int32(dst)
+        if self.mesh is not None:
+            src = jax.device_put(src, self.sharding.replicated)
+            dst = jax.device_put(dst, self.sharding.replicated)
+        return self._jit_copy_slot(state, src, dst)
+
+    def _copy_pages_impl(self, state, src, dst):
+        """Copy pool rows ``src[i] -> dst[i]`` in every page pool.
+        Out-of-bounds ``dst`` padding drops (scatter semantics); the
+        matching ``src`` padding reads clamp harmlessly."""
+        out = {}
+        for name, sub in state.items():
+            if name not in self._pool_names:
+                out[name] = sub
+                continue
+            ax = self._slot_axis[name]
+
+            def cp(s, ax=ax):
+                if ax == 0:
+                    return s.at[dst].set(s[src])
+                return s.at[:, dst].set(s[:, src])
+
+            out[name] = jax.tree_util.tree_map(cp, sub)
+        return out
+
+    def copy_pages(self, state, src, dst):
+        """Copy-on-write device copies: page ``src[i]`` -> ``dst[i]`` in
+        every pool leaf.  Padded to a power of two (OOB dst indices
+        drop) so jit compiles log2-many shapes; the page axis is never
+        sharded, so under a mesh this stays collective-free."""
+        import numpy as np
+        n = pow2ceil(len(src))
+        sp = np.zeros(n, np.int32)
+        sp[:len(src)] = src
+        dp = np.full(n, np.iinfo(np.int32).max, np.int32)
+        dp[:len(dst)] = dst
+        sp, dp = jnp.asarray(sp), jnp.asarray(dp)
+        if self.mesh is not None:
+            sp = jax.device_put(sp, self.sharding.replicated)
+            dp = jax.device_put(dp, self.sharding.replicated)
+        return self._jit_copy_pages(state, sp, dp)
+
+    def _seed_impl(self, state, bt_row):
+        """Native dense B=1 prefill cache gathered from ``bt_row``'s
+        pages — the in-cache index mapping (absolute for global/MLA,
+        ring for windows) is exactly ``gather_pages``'s, so the seeded
+        cache is bitwise the dense cache the chain's writer produced."""
+        from repro.kernels.paged_attention.ref import gather_pages
+        tmpl = self.model.cache_spec(1, self.max_len)
+        out = {}
+        for name, sub in state.items():
+            ax = self._slot_axis[name]
+
+            def g(pool, spec, ax=ax):
+                Lv = spec.shape[ax + 1]
+                if ax == 0:
+                    return gather_pages(pool, bt_row,
+                                        Lv).astype(spec.dtype)
+                return jax.vmap(
+                    lambda p: gather_pages(p, bt_row, Lv))(
+                        pool).astype(spec.dtype)
+
+            out[name] = jax.tree_util.tree_map(g, sub, tmpl[name])
+        return out
+
+    def seed_cache(self, state, bt_row):
+        """Prefix attach: reconstruct the dense (B=1, native layout)
+        cache held by ``bt_row``'s page chain, ready to resume
+        ``prefill(cache0=..., start=...)`` from the attach point.
+        Entries past the chain gather garbage — every read of them is
+        position-masked or overwritten by the tail prefill."""
+        bt = jnp.asarray(bt_row, jnp.int32)
+        if self.mesh is not None:
+            bt = jax.device_put(bt, self.sharding.replicated)
+        cache = self._jit_seed(state, bt)
+        if self.mesh is not None:
+            cache = self.place_cache(cache)
+        return cache
 
     # -- mesh placement --------------------------------------------------
     def state_spec(self, batch):
@@ -358,6 +516,13 @@ class DecoderStepModel(StepModel):
             self._jit_write = jax.jit(
                 self._write_impl_paged, static_argnums=(4,),
                 donate_argnums=(0,), out_shardings=self.sharding.state)
+            self._jit_copy_slot = jax.jit(
+                self._copy_slot_impl, donate_argnums=(0,),
+                out_shardings=self.sharding.state)
+            self._jit_copy_pages = jax.jit(
+                self._copy_pages_impl, donate_argnums=(0,),
+                out_shardings=self.sharding.state)
+            self._jit_seed = jax.jit(self._seed_impl)
         else:
             self._jit_step = jax.jit(
                 self._step_impl, donate_argnums=(2,),
@@ -394,16 +559,27 @@ class DecoderStepModel(StepModel):
         return state
 
     # -- prefill (an admission wave of same-length prompts) -------------
-    def prefill(self, params, xs, pos0=0):
+    def chunk_for(self, plen: int) -> int:
+        """The chunk width a ``plen``-token prompt prefills at — part of
+        the prefix-cache key: attaching is bitwise only between requests
+        sharing one chunk grid."""
+        return min(self.prefill_chunk, pow2ceil(int(plen)))
+
+    def prefill(self, params, xs, pos0=0, cache0=None, start=0):
         """xs: (B, P) int32 prompts.  Grid-padded chunking via
         serve.prefill, with the chunk capped at the next power of two of
         the prompt: a 10-token prompt pays a 16-wide chunk, not the full
         ``prefill_chunk`` — padding waste stays < 2x while the chunk
         program family stays log2-bounded (each width compiles once and
-        serves every prompt length that buckets to it)."""
+        serves every prompt length that buckets to it).
+
+        ``cache0``/``start``: prefix-attach tail prefill — resume from a
+        seeded cache (see :meth:`seed_cache`), consuming only the chunks
+        from ``start`` (chunk-grid aligned) onward."""
         from repro.serve.prefill import chunked_prefill
-        chunk = min(self.prefill_chunk, pow2ceil(xs.shape[1]))
-        return chunked_prefill(self, params, xs, chunk=chunk, pos0=pos0)
+        chunk = self.chunk_for(xs.shape[1])
+        return chunked_prefill(self, params, xs, chunk=chunk, pos0=pos0,
+                               cache0=cache0, start=start)
 
     # -- decode ---------------------------------------------------------
     def _step_impl(self, params, tok, state, pos, active, samp):

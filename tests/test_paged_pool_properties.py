@@ -1,0 +1,179 @@
+"""Property suite for the refcounted PagePool.
+
+Random interleavings of reserve / grow / share (fork) / cow / pin
+(prefix-cache hold) / unpin / release must preserve the allocator
+invariants the engine's bitwise claim rests on:
+
+  * refcounts == (# chains holding the page) + (# external pins) — no
+    double-free, no page both free and live, no free-list duplicates;
+  * single-writer: a page with refcount 1 sits in exactly one chain;
+  * every chain stays within its reservation, and reserved_total is the
+    sum of live reservations (``available`` stays conservative under
+    sharing);
+  * a full drain (release every slot, drop every pin) returns every
+    page to the free list: pages_in_use == 0, reserved_total == 0.
+
+Runs under hypothesis when available (shrinks failing op sequences);
+the container always runs the seeded fallback over many interleavings.
+"""
+import numpy as np
+import pytest
+
+from repro.serve import PagePool
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+NUM_PAGES, SLOTS, MAX_PAGES = 24, 4, 8
+N_OPS = 7  # op codes 0..6
+
+
+class Shadow:
+    """Reference model: chains and pins as plain python sets/lists."""
+
+    def __init__(self, pool: PagePool):
+        self.pool = pool
+        self.reserved = {}        # slot -> n_pages
+        self.pins = []            # list of page-id tuples
+
+
+def _chains(pool):
+    return {s: [int(p) for p in pool.block_tables[s, :pool.chain_len[s]]]
+            for s in range(pool.slots)}
+
+
+def check_invariants(sh: Shadow):
+    pool = sh.pool
+    chains = _chains(pool)
+    expect = np.zeros(pool.num_pages, np.int64)
+    for chain in chains.values():
+        assert len(set(chain)) == len(chain), "duplicate page in a chain"
+        for p in chain:
+            expect[p] += 1
+    for pin in sh.pins:
+        for p in pin:
+            expect[p] += 1
+    assert (pool.refcount == expect).all(), \
+        f"refcount drift: {pool.refcount.tolist()} != {expect.tolist()}"
+    free = pool._free
+    assert len(set(free)) == len(free), "free-list duplicate"
+    assert all(pool.refcount[p] == 0 for p in free), "free page is live"
+    assert pool.pages_in_use == int((pool.refcount > 0).sum())
+    assert pool.pages_in_use == pool.num_pages - len(free)
+    for s in range(pool.slots):
+        assert pool.chain_len[s] <= pool._reserved[s]
+    assert pool.reserved_total == sum(sh.reserved.values())
+    assert pool.reserved_total == int(pool._reserved.sum())
+
+
+def apply_op(sh: Shadow, code: int, r: int):
+    """One precondition-guarded operation; no-op when nothing applies."""
+    pool = sh.pool
+    reserved = sorted(sh.reserved)
+    with_chain = [s for s in reserved if pool.chain_len[s] > 0]
+    if code == 0:    # reserve a fresh slot
+        slots = [s for s in range(pool.slots) if s not in sh.reserved]
+        if slots:
+            n = 1 + r % MAX_PAGES
+            if pool.can_admit(n):
+                slot = slots[r % len(slots)]
+                pool.reserve(slot, n)
+                sh.reserved[slot] = n
+    elif code == 1:  # grow within the reservation
+        if reserved:
+            slot = reserved[r % len(reserved)]
+            hi = sh.reserved[slot]
+            lo = int(pool.chain_len[slot])
+            pool.grow(slot, lo + r % (hi - lo + 1))
+    elif code == 2:  # share: fork a parent chain prefix into an empty slot
+        empty = [s for s in reserved if pool.chain_len[s] == 0]
+        if empty and with_chain:
+            child = empty[r % len(empty)]
+            parent = with_chain[r % len(with_chain)]
+            n = min(int(pool.chain_len[parent]), sh.reserved[child])
+            pool.share(child, pool.block_tables[parent, :n])
+    elif code == 3:  # cow a random chain entry
+        if with_chain:
+            slot = with_chain[r % len(with_chain)]
+            pool.cow(slot, r % int(pool.chain_len[slot]))
+    elif code == 4:  # pin a chain prefix (prefix-cache hold)
+        if with_chain:
+            slot = with_chain[r % len(with_chain)]
+            n = 1 + r % int(pool.chain_len[slot])
+            pages = tuple(int(p) for p in pool.block_tables[slot, :n])
+            pool.incref(pages)
+            sh.pins.append(pages)
+    elif code == 5:  # drop a pin
+        if sh.pins:
+            pool.decref(sh.pins.pop(r % len(sh.pins)))
+    elif code == 6:  # release (finish/cancel)
+        if reserved:
+            slot = reserved[r % len(reserved)]
+            pool.release(slot)
+            del sh.reserved[slot]
+
+
+def run_ops(ops):
+    sh = Shadow(PagePool(NUM_PAGES, SLOTS, MAX_PAGES))
+    for code, r in ops:
+        apply_op(sh, code % N_OPS, r)
+        check_invariants(sh)
+    # drain: everything released + unpinned -> the pool is empty
+    for slot in list(sh.reserved):
+        sh.pool.release(slot)
+        del sh.reserved[slot]
+    while sh.pins:
+        sh.pool.decref(sh.pins.pop())
+    check_invariants(sh)
+    assert sh.pool.pages_in_use == 0
+    assert sh.pool.reserved_total == 0
+    assert sorted(sh.pool._free) == list(range(NUM_PAGES))
+
+
+def test_pool_random_interleavings_seeded():
+    """Always-on fallback: 40 seeded interleavings x 120 ops."""
+    for seed in range(40):
+        rng = np.random.default_rng(seed)
+        ops = [(int(rng.integers(N_OPS)), int(rng.integers(1 << 16)))
+               for _ in range(120)]
+        run_ops(ops)
+
+
+@pytest.mark.skipif(not HAVE_HYPOTHESIS, reason="hypothesis not installed")
+def test_pool_properties_hypothesis():
+    @settings(max_examples=200, deadline=None)
+    @given(st.lists(st.tuples(st.integers(0, N_OPS - 1),
+                              st.integers(0, 1 << 16)), max_size=150))
+    def prop(ops):
+        run_ops(ops)
+    prop()
+
+
+def test_pool_misuse_raises():
+    """The guard rails: double reserve, over-reservation growth, sharing
+    dead pages, double-free, cow past the chain."""
+    pool = PagePool(8, 2, 4)
+    pool.reserve(0, 3)
+    with pytest.raises(RuntimeError, match="already holds"):
+        pool.reserve(0, 1)
+    with pytest.raises(RuntimeError, match="exceeds available"):
+        pool.reserve(1, 6)
+    with pytest.raises(RuntimeError, match="exceeds its reservation"):
+        pool.grow(0, 4)
+    pool.grow(0, 2)
+    with pytest.raises(RuntimeError, match="cow\\(3\\) beyond"):
+        pool.cow(0, 3)
+    with pytest.raises(RuntimeError, match="not live"):
+        pool.incref([7])
+    with pytest.raises(RuntimeError, match="double-free"):
+        pool.decref([7])
+    pool.reserve(1, 2)
+    with pytest.raises(RuntimeError, match="not live"):
+        pool.share(1, [7])
+    pool.release(0)
+    pool.release(1)
+    assert pool.pages_in_use == 0 and pool.reserved_total == 0

@@ -328,6 +328,10 @@ def test_submit_validation_errors(gqa):
     eng = ServeEngine(sm, params, slots=1)
     with pytest.raises(ValueError, match="empty prompt"):
         eng.submit(np.zeros(0, np.int64), max_new_tokens=2)
+    # 0-d prompt: np.asarray(scalar) has ndim 0 — used to reach the
+    # prefill as a shapeless array and die with a TypeError mid-admit
+    with pytest.raises(ValueError, match="empty prompt"):
+        eng.submit(np.int64(7), max_new_tokens=2)
     with pytest.raises(ValueError, match="max_new_tokens >= 1"):
         eng.submit(np.arange(3), max_new_tokens=0)
     with pytest.raises(ValueError, match="1-D token prompt"):

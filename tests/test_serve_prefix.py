@@ -1,0 +1,264 @@
+"""Prefix caching + copy-on-write forks: the bitwise contract.
+
+A request that attaches to cached prefix pages, and a child forked off a
+running parent's page chain, must emit the EXACT stream an independently
+prefilled-and-decoded request would — greedy and sampled, for all three
+attention families (global GQA, sliding window, MLA), with exactly one
+compiled decode step.  Sharing changes memory traffic and scheduling,
+never numerics.
+
+Also covers the engine-loop bugs the feature exposed: admission must
+refill a slot freed mid-wave (a max_new_tokens=1 request retiring at
+admission), and run() must raise instead of busy-spinning when a
+deferred request can never be admitted.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import SamplingParams, get_config
+from repro.models import build_model
+from repro.serve import (DecoderStepModel, PagedConfig, PagePool,
+                         PrefixCache, ServeEngine)
+
+SPS = dict(temperature=0.9, top_k=12, top_p=0.9, seed=3)
+
+
+def _built(arch):
+    cfg = get_config(arch)
+    model = build_model(cfg)
+    return cfg, model, model.init(jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def gqa():
+    return _built("smollm-360m-smoke")
+
+
+@pytest.fixture(scope="module")
+def window():
+    return _built("gemma3-4b-smoke")
+
+
+@pytest.fixture(scope="module")
+def mla():
+    return _built("deepseek-v3-671b-smoke")
+
+
+def _engine(model, params, *, prefix_cache=False, slots=3, max_len=64,
+            chunk=8, page_size=4, num_pages=0):
+    sm = DecoderStepModel(model, max_len=max_len, prefill_chunk=chunk,
+                          kv_layout="paged",
+                          paged=PagedConfig(page_size=page_size,
+                                            num_pages=num_pages))
+    return ServeEngine(sm, params, slots=slots,
+                       prefix_cache=prefix_cache), sm
+
+
+# ---------------------------------------------------------------------------
+# prefix attach == from-scratch prefill, bitwise
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("fam", ["gqa", "window", "mla"])
+def test_prefix_attach_bitwise(fam, request):
+    """Requests sharing a page- AND chunk-aligned 24-token prefix: the
+    first admission inserts it, the next two attach and prefill only
+    their tails.  Streams (greedy + sampled) match a cache-off engine
+    submitted in the same order (same uids -> same PRNG keys), with one
+    compiled decode step.  24 = 6 pages of 4 = 3 chunks of 8, so the
+    window stacks' exact-attach rule (attach % chunk == 0) is satisfied
+    too."""
+    cfg, model, params = request.getfixturevalue(fam)
+    rng = np.random.default_rng(7)
+    p0 = rng.integers(0, cfg.vocab, size=24)
+    prompts = [p0, np.concatenate([p0, rng.integers(0, cfg.vocab, size=9)]),
+               np.concatenate([p0, rng.integers(0, cfg.vocab, size=3)])]
+    sp = [None, SamplingParams(**SPS), SamplingParams(**SPS)]
+
+    ref_eng, _ = _engine(model, params)
+    ref = [ref_eng.submit(p, max_new_tokens=6, sampling=s)
+           for p, s in zip(prompts, sp)]
+    ref_eng.run()
+
+    eng, sm = _engine(model, params, prefix_cache=True)
+    got = [eng.submit(p, max_new_tokens=6, sampling=s)
+           for p, s in zip(prompts, sp)]
+    eng.run()
+
+    assert [list(r.tokens) for r in got] == [list(r.tokens) for r in ref]
+    assert eng.n_prefix_hits == 2
+    assert eng.n_prefix_tokens >= 2 * 24 - 8  # window attaches skip >= 16
+    assert sm._jit_step._cache_size() == 1
+    assert eng.pool.reserved_total == 0
+    # only the cache's pins remain; clearing it drains the pool
+    eng.prefix_cache.clear()
+    assert eng.pool.pages_in_use == 0
+
+
+def test_prefix_attach_under_pool_pressure_evicts(gqa):
+    """A small pool forces the reclaim hook: cached entries are evicted
+    LRU to satisfy reserve-covered allocations, traffic still completes,
+    and the pool drains after the cache clears."""
+    cfg, model, params = gqa
+    rng = np.random.default_rng(5)
+    eng, _ = _engine(model, params, prefix_cache=True, slots=2,
+                     max_len=32, num_pages=10)
+    reqs = [eng.submit(rng.integers(0, cfg.vocab, size=8),
+                       max_new_tokens=3) for _ in range(6)]
+    eng.run()
+    assert all(r.finished for r in reqs)
+    assert eng.prefix_cache.n_evicted > 0
+    eng.prefix_cache.clear()
+    assert eng.pool.pages_in_use == 0 and eng.pool.reserved_total == 0
+
+
+def test_prefix_cache_requires_paged_layout(gqa):
+    cfg, model, params = gqa
+    sm = DecoderStepModel(model, max_len=64, prefill_chunk=8)
+    with pytest.raises(ValueError, match="paged"):
+        ServeEngine(sm, params, slots=2, prefix_cache=True)
+
+
+def test_prefix_cache_match_rules():
+    """Host-side match semantics on a bare pool: longest-prefix wins,
+    chunk-grid mismatch is skipped, and full-prompt-only (window) mode
+    rejects full matches and off-chunk attach points."""
+    pool = PagePool(num_pages=16, slots=2, max_pages=8)
+    pc = PrefixCache(pool, page_size=4)
+    toks = np.arange(16)
+    pool.reserve(0, 4)
+    pool.grow(0, 4)
+    row = pool.block_tables[0, :4]
+    pc.insert(toks, row, chunk_w=8)
+    # longest prefix: all 4 pages, attach at 16
+    pages, attach = pc.match(np.concatenate([toks, [99]]), 8)
+    assert attach == 16 and len(pages) == 4
+    # shorter overlap matches a shorter inserted prefix
+    pages, attach = pc.match(np.concatenate([toks[:8], [99]]), 8)
+    assert attach == 8 and len(pages) == 2
+    # different chunk grid -> no hit (the grid is part of the contract)
+    assert pc.match(np.concatenate([toks, [99]]), 4) == (None, 0)
+
+    pool2 = PagePool(num_pages=16, slots=2, max_pages=8)
+    pcw = PrefixCache(pool2, page_size=4, full_prompt_only=True)
+    pool2.reserve(0, 4)
+    pool2.grow(0, 4)
+    pcw.insert(toks, pool2.block_tables[0, :4], chunk_w=8)
+    assert len(pcw) == 1  # single full-prompt entry, no sub-prefixes
+    # full match rejected (ring would be 'ahead' of pos0)
+    assert pcw.match(toks, 8) == (None, 0)
+    # attach off the chunk grid rejected: entry covers 16 tokens but a
+    # 17-token prompt attaches at 16 which IS on-grid -> accepted...
+    pages, attach = pcw.match(np.concatenate([toks, [99]]), 8)
+    assert attach == 16 and len(pages) == 4
+    # ...whereas a grid of 32 (pow2ceil of a longer prompt) is a miss
+    assert pcw.match(np.concatenate([toks, [99]]), 32) == (None, 0)
+
+
+# ---------------------------------------------------------------------------
+# copy-on-write forks == independent decode, bitwise
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("fam", ["gqa", "window", "mla"])
+def test_fork_bitwise(fam, request):
+    """Greedy children reproduce the parent's remaining stream bitwise;
+    a sampled child matches an independently submitted request with
+    prompt = parent prompt + tokens-at-fork and the same uid (fork
+    assigns the next uid, so submission order aligns the PRNG keys)."""
+    cfg, model, params = request.getfixturevalue(fam)
+    rng = np.random.default_rng(11)
+    prompt = rng.integers(0, cfg.vocab, size=10)
+    sps = SamplingParams(**SPS)
+
+    # greedy: child == parent, bit for bit
+    A, sm = _engine(model, params)
+    parent = A.submit(prompt, max_new_tokens=8)
+    A.step()
+    kids = A.fork(parent, 2)
+    A.run()
+    assert parent.finished
+    for k in kids:
+        assert list(k.tokens) == list(parent.tokens)
+    assert sm._jit_step._cache_size() == 1
+    assert A.pool.pages_in_use == 0 and A.pool.reserved_total == 0
+    assert A.n_forks == 2
+
+    # sampled: child (uid 1) == from-scratch request (uid 1) continuing
+    # the same token history under the same counter-based PRNG
+    B, _ = _engine(model, params)
+    sparent = B.submit(prompt, max_new_tokens=8, sampling=sps)
+    B.step()
+    at_fork = list(sparent.tokens)
+    skid = B.fork(sparent, 1, sampling=sps)[0]
+    B.run()
+
+    C, _ = _engine(model, params)
+    c1 = C.submit(prompt, max_new_tokens=8, sampling=sps)
+    c2 = C.submit(np.concatenate([prompt, at_fork]),
+                  max_new_tokens=8 - len(at_fork), sampling=sps)
+    C.run()
+    assert list(sparent.tokens) == list(c1.tokens)
+    assert list(skid.tokens) == at_fork + list(c2.tokens)
+    assert B.pool.pages_in_use == 0 and B.pool.reserved_total == 0
+
+
+def test_fork_requires_running_parent_and_capacity(gqa):
+    cfg, model, params = gqa
+    rng = np.random.default_rng(2)
+    eng, _ = _engine(model, params, slots=2)
+    req = eng.submit(rng.integers(0, cfg.vocab, size=6),
+                     max_new_tokens=4)
+    with pytest.raises(ValueError, match="RUNNING"):
+        eng.fork(req, 1)  # still waiting, no slot yet
+    eng.step()
+    eng.fork(req, 1)
+    with pytest.raises(RuntimeError):  # slots exhausted
+        eng.fork(req, 1)
+    eng.run()
+    assert eng.pool.pages_in_use == 0 and eng.pool.reserved_total == 0
+
+
+# ---------------------------------------------------------------------------
+# engine-loop fixes the feature exposed
+# ---------------------------------------------------------------------------
+
+def test_admit_refills_slot_freed_mid_wave(gqa):
+    """A max_new_tokens=1 request retires AT admission (its single token
+    is the prefill's tok0); the slot it frees must be refilled in the
+    SAME admit() call instead of idling a decode step."""
+    cfg, model, params = gqa
+    rng = np.random.default_rng(4)
+    eng, _ = _engine(model, params, slots=2)
+    a = eng.submit(rng.integers(0, cfg.vocab, size=5), max_new_tokens=1)
+    b = eng.submit(rng.integers(0, cfg.vocab, size=7), max_new_tokens=4)
+    c = eng.submit(rng.integers(0, cfg.vocab, size=6), max_new_tokens=4)
+    eng.admit()
+    assert a.finished                      # retired inside the wave
+    assert not eng.waiting                 # c admitted by the refill loop
+    assert int(eng.active.sum()) == 2
+    eng.run()
+    assert b.finished and c.finished
+    assert eng.pool.pages_in_use == 0 and eng.pool.reserved_total == 0
+
+
+def test_run_raises_on_permanent_stall(gqa):
+    """With the pool's capacity promised away and nothing active to ever
+    free it, run() must raise a descriptive error naming the blocked
+    request instead of spinning forever."""
+    cfg, model, params = gqa
+    rng = np.random.default_rng(3)
+    eng, _ = _engine(model, params, slots=2, max_len=32)
+    eng.pool.reserve(1, eng.pool.num_pages)  # simulate a leaked hold
+    req = eng.submit(rng.integers(0, cfg.vocab, size=6),
+                     max_new_tokens=4)
+    with pytest.raises(RuntimeError, match=f"uid={req.uid}"):
+        eng.run()
+
+
+def test_submit_rejects_0d_prompt(gqa):
+    cfg, model, params = gqa
+    eng, _ = _engine(model, params, slots=2)
+    with pytest.raises(ValueError, match="empty"):
+        eng.submit(np.int64(7), max_new_tokens=2)
+    with pytest.raises(ValueError, match="empty"):
+        eng.submit(np.zeros(0, np.int64), max_new_tokens=2)
