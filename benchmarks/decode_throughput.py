@@ -287,34 +287,45 @@ def _sharded_compare(model, params, cfg, batch=4, gen=8, prompt=16,
 def _paged_compare(batch=4, gen=8, prompt=16, chunk=8):
     """Paged vs dense KV layout on a GQA stack (smollm smoke).
 
-    Row 1/2: tokens/s and per-step latency at EQUAL occupancy — same
+    Rows 1-3: tokens/s and per-step latency at EQUAL occupancy — same
     traffic, same slot count, page pool at dense-equivalent capacity —
-    the pure overhead of page indirection (block-table gather + page
-    scatter per step).
+    the overhead of page indirection under the default Pallas kernel
+    (bf16 and int8 pools).  The int8 row also asserts the acceptance
+    bar: its greedy streams are IDENTICAL to the bf16 paged engine's.
 
-    Row 3: admission capacity at FIXED KV memory for long max_len.  The
-    dense layout preallocates slots x max_len cache rows, so its
-    concurrency is bought in max_len-sized bytes no matter how long
-    requests actually are; the paged pool spends a page chain per LIVE
-    request.  Concurrency at the same byte budget (requests of req_len
-    tokens, max_len 4096): paged admits strictly more whenever
-    req_len < max_len — this row pins the gap."""
+    Capacity rows: admission capacity at FIXED KV memory for long
+    max_len.  The dense layout preallocates slots x max_len cache rows,
+    so its concurrency is bought in max_len-sized bytes no matter how
+    long requests actually are; the paged pool spends a page chain per
+    LIVE request, and int8 pools halve the page bytes again (plus the
+    per-page float32 scale rows).  Concurrency at the same byte budget
+    (requests of req_len tokens, max_len 4096): paged admits strictly
+    more whenever req_len < max_len, int8 pins >= 1.9x over bf16 paged.
+
+    Cost-model row: the analytic per-step stream bytes of
+    kernels.paged_attention.cost_model cross-checked against the
+    MEASURED per-page bytes of the real state spec (pool leaves + block
+    table) — the satellite fix that keeps the roofline honest."""
+    import dataclasses
     from repro.serve import PagedConfig
     cfg = get_config("smollm-360m-smoke")
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
+    qmodel = build_model(dataclasses.replace(cfg, kv_dtype="int8"))
     rng = np.random.default_rng(17)
     prompts, glens = _workload(rng, cfg, 2 * batch, prompt, gen, chunk)
     max_len = max(len(p) for p in prompts) + max(glens) + 1
-    rows, out = [], {}
-    for layout in ("dense", "paged"):
+    rows, out, streams = [], {}, {}
+    for layout, m in (("dense", model), ("paged", model),
+                      ("paged_int8", qmodel)):
         kw = {} if layout == "dense" else dict(
             kv_layout="paged", paged=PagedConfig(page_size=chunk))
-        sm = DecoderStepModel(model, max_len=max_len, prefill_chunk=chunk,
+        sm = DecoderStepModel(m, max_len=max_len, prefill_chunk=chunk,
                               **kw)
         _warm_engine(sm, params, batch, [len(p) for p in prompts])
-        tps, lat, _eng = _run_engine(sm, params, prompts, glens, batch)
+        tps, lat, eng = _run_engine(sm, params, prompts, glens, batch)
         out[layout] = tps
+        streams[layout] = [list(map(int, r.tokens)) for r in eng.finished]
         rows.append({
             "name": f"decode_paged/{layout}/batch{batch}",
             "us_per_call": f"{np.median(lat)*1e6:.0f}",
@@ -322,8 +333,13 @@ def _paged_compare(batch=4, gen=8, prompt=16, chunk=8):
                        f"p50_ms={np.percentile(lat,50)*1e3:.2f};"
                        f"p99_ms={np.percentile(lat,99)*1e3:.2f}",
         })
-    rows[-1]["derived"] += \
+    assert streams["paged_int8"] == streams["paged"], \
+        "int8 paged greedy streams diverged from bf16 paged"
+    rows[-2]["derived"] += \
         f";paged_vs_dense={out['paged']/max(out['dense'],1e-9):.2f}x"
+    rows[-1]["derived"] += (
+        f";int8_vs_bf16={out['paged_int8']/max(out['paged'],1e-9):.2f}x"
+        f";greedy_identical=True")
 
     def nbytes(tree):
         return int(sum(int(np.prod(s.shape)) * s.dtype.itemsize
@@ -332,23 +348,60 @@ def _paged_compare(batch=4, gen=8, prompt=16, chunk=8):
     long_max, req_len, ps, dense_slots = 4096, 512, 64, 8
     sm_d = DecoderStepModel(model, max_len=long_max)
     budget = nbytes(sm_d.state_spec(dense_slots))
-    sm_p = DecoderStepModel(model, max_len=long_max, kv_layout="paged",
-                            paged=PagedConfig(page_size=ps))
-    spec1 = sm_p.state_spec(1)          # pool auto-sized to 1 request
-    pool_b = nbytes({k: v for k, v in spec1.items()
-                     if k in sm_p._pool_names})
-    slot_b = nbytes({k: v for k, v in spec1.items()
-                     if k not in sm_p._pool_names})
-    per_req = sm_p.pages_for(req_len) * (pool_b // sm_p.max_pages) + slot_b
-    paged_admits = budget // per_req
+    admits = {}
+    for label, m in (("bf16", model), ("int8", qmodel)):
+        sm_p = DecoderStepModel(m, max_len=long_max, kv_layout="paged",
+                                paged=PagedConfig(page_size=ps))
+        spec1 = sm_p.state_spec(1)      # pool auto-sized to 1 request
+        pool_b = nbytes({k: v for k, v in spec1.items()
+                         if k in sm_p._pool_names})
+        slot_b = nbytes({k: v for k, v in spec1.items()
+                         if k not in sm_p._pool_names})
+        per_req = (sm_p.pages_for(req_len) * (pool_b // sm_p.max_pages)
+                   + slot_b)
+        admits[label] = budget // per_req
+        admits[label + "_pool_b"] = pool_b
+        admits[label + "_sm"] = sm_p
+    int8_gain = admits["int8"] / max(admits["bf16"], 1)
+    assert int8_gain >= 1.9, \
+        f"int8 capacity gain {int8_gain:.2f}x < pinned 1.9x"
     rows.append({
         "name": f"paged_capacity/max_len{long_max}/req{req_len}",
         "us_per_call": "0",
         "derived": f"budget_mib={budget/2**20:.1f};"
                    f"dense_concurrent={dense_slots};"
-                   f"paged_concurrent={paged_admits};"
-                   f"gain={paged_admits/dense_slots:.1f}x",
+                   f"paged_concurrent={admits['bf16']};"
+                   f"gain={admits['bf16']/dense_slots:.1f}x;"
+                   f"paged_int8_concurrent={admits['int8']};"
+                   f"int8_vs_bf16={int8_gain:.2f}x",
     })
+
+    # cost-model cross-check: analytic page-stream bytes (kv + scales +
+    # block-table row, B=1) vs the per-page bytes of the REAL spec
+    from repro.kernels.paged_attention import cost_model
+    n_attn = sum(1 for s in cfg.layer_specs()
+                 if s.kind.startswith("attn"))
+    cm_row = {"name": f"paged_cost_model/req{req_len}", "us_per_call": "0",
+              "derived": ""}
+    parts = []
+    for label, db, sb in (("bf16", 2, 0), ("int8", 1, 4)):
+        full = cost_model(1, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim,
+                          live_tokens=req_len, page_size=ps,
+                          dtype_bytes=db, scale_bytes=sb)[1]
+        fixed = cost_model(1, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim,
+                           live_tokens=0, page_size=ps, dtype_bytes=db,
+                           scale_bytes=sb)[1]
+        sm_p = admits[label + "_sm"]
+        pages = sm_p.pages_for(req_len)
+        model_bytes = (full - fixed) * n_attn      # per-layer -> stack
+        per_page = admits[label + "_pool_b"] // sm_p.max_pages
+        measured = pages * per_page + pages * 4 * n_attn
+        assert model_bytes == measured, \
+            f"{label}: cost model {model_bytes} != measured {measured}"
+        parts.append(f"{label}_model={model_bytes};"
+                     f"{label}_measured={measured}")
+    cm_row["derived"] = ";".join(parts) + ";match=True"
+    rows.append(cm_row)
     return rows
 
 

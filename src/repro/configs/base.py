@@ -24,6 +24,12 @@ MINGRU = "mingru"        # paper's minGRU time-mixing block
 #: Legal values of :attr:`MoEConfig.dispatch`.
 MOE_DISPATCH_MODES = ("pooled", "per_request", "auto")
 
+#: Legal values of :attr:`ModelConfig.paged_impl`.
+PAGED_IMPLS = ("gather", "pallas", "pallas_tpu")
+
+#: Legal values of :attr:`ModelConfig.kv_dtype`.
+KV_DTYPES = ("bf16", "int8")
+
 
 @dataclasses.dataclass(frozen=True)
 class MoEConfig:
@@ -139,14 +145,34 @@ class ModelConfig:
     #   seq | xla | pallas (interpret) | pallas_tpu (compiled)
     scan_backend: str = "xla"
     # paged-KV decode attention read (serving, kv_layout="paged"):
+    #   pallas     — kernels.paged_attention block-table kernel, platform-
+    #                adaptive: interpret mode off-TPU, compiled on TPU.
+    #                The DEFAULT fast path: no dense-view materialization;
+    #                fp32 online softmax, within the pinned per-family
+    #                tolerance of gather, not bitwise (README §Paged KV)
+    #   pallas_tpu — same kernel, compiled unconditionally (fails off-TPU)
     #   gather     — block-table gather to a dense view + the exact dense
-    #                decode math (bitwise-identical to the dense cache)
-    #   pallas     — kernels.paged_attention in interpret mode (CPU tests)
-    #   pallas_tpu — compiled page-indirect kernel (production; fp32
-    #                online softmax, numerically ~= gather, not bitwise)
-    paged_impl: str = "gather"
+    #                decode math (bitwise-identical to the dense cache;
+    #                the oracle the kernels are pinned against)
+    paged_impl: str = "pallas"
+    # paged KV-pool storage dtype (serving, kv_layout="paged"):
+    #   bf16 — pages stored in the model dtype (bitwise-dense gather math)
+    #   int8 — symmetric per-page quantized codes + float32 scales per
+    #          page per KV head (kernels.paged_attention.quant); halves
+    #          pool bytes so ~2x the concurrent requests fit a fixed pool
+    kv_dtype: str = "bf16"
     # explicit sharding constraints on MoE dispatch buffers (cell B fix)
     moe_constraints: bool = False
+
+    def __post_init__(self):
+        if self.paged_impl not in PAGED_IMPLS:
+            raise ValueError(
+                f"paged_impl must be one of {PAGED_IMPLS}, "
+                f"got {self.paged_impl!r}")
+        if self.kv_dtype not in KV_DTYPES:
+            raise ValueError(
+                f"kv_dtype must be one of {KV_DTYPES}, "
+                f"got {self.kv_dtype!r}")
 
     # ---- derived ----
     def layer_specs(self) -> list:

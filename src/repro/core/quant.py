@@ -68,7 +68,28 @@ def weight_codes_2b(w, scale=None):
 
 
 def quantize_bias_6b(b, scale=None):
-    """Uniform symmetric 6 b fixed point: levels {-31..31}·δ (63 live codes)."""
+    """Uniform symmetric 6 b fixed point: levels {-31..31}·δ (63 live codes).
+
+    SIGNED-CODE GRID NOTE — the repo carries two deliberately DIFFERENT
+    signed 6 b grids, matching two different circuits (paper §3.1.2,
+    Fig. 3C), and they are pinned by exact-value tests (test_quant):
+
+      * THIS one (weight/bias DACs): SYMMETRIC, codes in [-31, +31] —
+        63 live codes out of 64; code -32 is never emitted.  The DAC's
+        levels straddle zero symmetrically (the same 63-unit segmented
+        bank as GATE_UNITS), and a scale of absmax/31 means
+        quantize(-x) == -quantize(x) exactly.
+      * :func:`quantize_gate_bias_adc` (the ADC's capacitive-DAC
+        preset): FULL TWO'S-COMPLEMENT, codes in [-32, +31] on the
+        FIXED grid δ = 6/63 — the preset register is a plain signed
+        6 b word, so the asymmetric -32 code physically exists and is
+        kept (it buys one extra step of negative bias range; nothing
+        is dequantized back through a symmetric DAC there).
+
+    Derived quantizers must pick one convention explicitly; the serving
+    int8 KV quantizer (kernels.paged_attention.quant) follows the
+    symmetric convention, with QMAX=127 of the int8 range mirroring the
+    31-of-6b here."""
     if scale is None:
         scale = jax.lax.stop_gradient(
             jnp.maximum(jnp.max(jnp.abs(b)), 1e-8) / 31.0)
@@ -114,8 +135,12 @@ ADC_GATE_BIAS_LSB = 6.0 / GATE_UNITS
 
 
 def quantize_gate_bias_adc(b):
-    """Quantize the gate bias b^z onto the ADC-offset grid (±32 codes ≈ ±3,
-    i.e. ±half the hard sigmoid's dynamic range, paper Fig. 3C)."""
+    """Quantize the gate bias b^z onto the ADC-offset grid (codes -32..31
+    ≈ ±3, i.e. ±half the hard sigmoid's dynamic range, paper Fig. 3C).
+
+    Unlike :func:`quantize_bias_6b` this is the full TWO'S-COMPLEMENT
+    range including -32: the ADC preset is a signed 6 b register, not a
+    symmetric DAC (see the grid note on quantize_bias_6b)."""
     q = jnp.clip(jnp.round(b / ADC_GATE_BIAS_LSB), -32, 31) * ADC_GATE_BIAS_LSB
     return _ste(q, b)
 

@@ -1,5 +1,8 @@
 """Paged-attention decode kernels (block-table K/V page indirection)."""
-from repro.kernels.paged_attention.ops import (paged_gqa_attention,
+from repro.kernels.paged_attention import quant
+from repro.kernels.paged_attention.ops import (cost_model, cost_model_mla,
+                                               paged_gqa_attention,
                                                paged_mla_attention)
 
-__all__ = ["paged_gqa_attention", "paged_mla_attention"]
+__all__ = ["paged_gqa_attention", "paged_mla_attention", "cost_model",
+           "cost_model_mla", "quant"]

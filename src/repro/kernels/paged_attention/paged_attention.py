@@ -23,6 +23,14 @@ Pages with no attendable entry (``p*page_size > pos``) are skipped via
 fully-masked tile would poison the running max).  MLA runs the same
 schedule over latent pages with a rank-space score sum
 (q_abs·ckvᵀ + q_rope·kropeᵀ) and a latent-space output (w·ckv).
+
+The ``_q8`` variants read int8 pools with per-page float32 scales
+(GQA: one per page per KV head; MLA: one per page — see
+``paged_attention.quant``).  The scale rides in as a (1, 1) block
+through the same block-table index map as the page it describes and the
+dequant (codes * scale) happens in-register right before the q·Kᵀ and
+P·V dots — HBM streams half the KV bytes and nothing dequantized is
+ever written back.
 """
 from __future__ import annotations
 
@@ -137,6 +145,84 @@ def paged_gqa_fwd(q, pool_k, pool_v, block_tables, pos, *, length,
     return out.reshape(B, H, hd)
 
 
+def _gqa_kernel_q8(pos_ref, bt_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref,
+                   o_ref, acc, m_s, l_s, *, ps, n_pages, length, window,
+                   scale):
+    b, p = pl.program_id(0), pl.program_id(2)
+
+    @pl.when(p == 0)
+    def _():
+        acc[...] = jnp.zeros_like(acc)
+        m_s[...] = jnp.full_like(m_s, NEG_INF)
+        l_s[...] = jnp.zeros_like(l_s)
+
+    pos = pos_ref[b]
+
+    @pl.when((p * ps <= pos) & (p * ps < length))
+    def _():
+        q = q_ref[0, 0].astype(jnp.float32)                    # (G, hd)
+        k = k_ref[0, :, 0, :].astype(jnp.float32) * ks_ref[0, 0]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        s = s + _page_mask(pos, p, ps, length, window)
+        _online_update(s, v_ref[0, :, 0, :].astype(jnp.float32)
+                       * vs_ref[0, 0], acc, m_s, l_s)
+
+    @pl.when(p == n_pages - 1)
+    def _():
+        o_ref[0, 0] = (acc[...] / jnp.maximum(l_s[...], 1e-30)
+                       ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("length", "window", "interpret"))
+def paged_gqa_fwd_q8(q, pool_k, pool_v, k_scale, v_scale, block_tables,
+                     pos, *, length, window=None, interpret=True):
+    """Int8 pools + per-(page, kv-head) float32 scales.
+
+    q: (B, H, hd); pool_k/v: (P, page, KV, hd) int8; k/v_scale: (P, KV)
+    float32 -> (B, H, hd) in q.dtype."""
+    B, H, hd = q.shape
+    _P, ps, KV, _ = pool_k.shape
+    G = H // KV
+    n_pages = -(-length // ps)
+    bt = block_tables[:, :n_pages].astype(jnp.int32)
+    qg = q.reshape(B, KV, G, hd)
+    kern = functools.partial(_gqa_kernel_q8, ps=ps, n_pages=n_pages,
+                             length=length, window=window,
+                             scale=1.0 / (hd ** 0.5))
+    kv_map = lambda b, kv, p, pos_ref, bt_ref: (bt_ref[b, p], 0, kv, 0)
+    sc_map = lambda b, kv, p, pos_ref, bt_ref: (bt_ref[b, p], kv)
+    q_map = lambda b, kv, p, pos_ref, bt_ref: (b, kv, 0, 0)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, KV, n_pages),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, hd), q_map),
+            pl.BlockSpec((1, ps, 1, hd), kv_map),
+            pl.BlockSpec((1, ps, 1, hd), kv_map),
+            pl.BlockSpec((1, 1), sc_map),
+            pl.BlockSpec((1, 1), sc_map),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, hd), q_map),
+        scratch_shapes=[
+            pltpu.VMEM((G, hd), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kern, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, hd), q.dtype),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+        name="paged_gqa_decode_q8",
+    )(pos.astype(jnp.int32), bt, qg, pool_k, pool_v,
+      k_scale.astype(jnp.float32), v_scale.astype(jnp.float32))
+    return out.reshape(B, H, hd)
+
+
 def _mla_kernel(pos_ref, bt_ref, qa_ref, qr_ref, ckv_ref, kr_ref, o_ref,
                 acc, m_s, l_s, *, ps, n_pages, length, scale):
     b, p = pl.program_id(0), pl.program_id(1)
@@ -207,3 +293,84 @@ def paged_mla_fwd(q_abs, q_rope, pool_ckv, pool_krope, block_tables, pos,
         interpret=interpret,
         name="paged_mla_decode",
     )(pos.astype(jnp.int32), bt, q_abs, q_rope, pool_ckv, pool_krope)
+
+
+def _mla_kernel_q8(pos_ref, bt_ref, qa_ref, qr_ref, ckv_ref, kr_ref,
+                   cs_ref, rs_ref, o_ref, acc, m_s, l_s, *, ps, n_pages,
+                   length, scale):
+    b, p = pl.program_id(0), pl.program_id(1)
+
+    @pl.when(p == 0)
+    def _():
+        acc[...] = jnp.zeros_like(acc)
+        m_s[...] = jnp.full_like(m_s, NEG_INF)
+        l_s[...] = jnp.zeros_like(l_s)
+
+    pos = pos_ref[b]
+
+    @pl.when((p * ps <= pos) & (p * ps < length))
+    def _():
+        qa = qa_ref[0].astype(jnp.float32)                     # (H, r)
+        qr = qr_ref[0].astype(jnp.float32)                     # (H, dr)
+        ckv = ckv_ref[0].astype(jnp.float32) * cs_ref[0, 0]    # (ps, r)
+        kr = kr_ref[0].astype(jnp.float32) * rs_ref[0, 0]      # (ps, dr)
+        s = (jax.lax.dot_general(qa, ckv, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+             + jax.lax.dot_general(qr, kr, (((1,), (1,)), ((), ())),
+                                   preferred_element_type=jnp.float32))
+        s = s * scale + _page_mask(pos, p, ps, length, None)
+        _online_update(s, ckv, acc, m_s, l_s)
+
+    @pl.when(p == n_pages - 1)
+    def _():
+        o_ref[0] = (acc[...] / jnp.maximum(l_s[...], 1e-30)
+                    ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("length", "scale", "interpret"))
+def paged_mla_fwd_q8(q_abs, q_rope, pool_ckv, pool_krope, ckv_scale,
+                     krope_scale, block_tables, pos, *, length, scale,
+                     interpret=True):
+    """Int8 latent pools + per-page float32 scales.
+
+    pool_ckv: (P, page, r) int8; pool_krope: (P, page, dr) int8;
+    ckv/krope_scale: (P,) float32 -> latent output (B, H, r)."""
+    B, H, r = q_abs.shape
+    _P, ps, _ = pool_ckv.shape
+    dr = q_rope.shape[-1]
+    n_pages = -(-length // ps)
+    bt = block_tables[:, :n_pages].astype(jnp.int32)
+    kern = functools.partial(_mla_kernel_q8, ps=ps, n_pages=n_pages,
+                             length=length, scale=scale)
+    page_map = lambda b, p, pos_ref, bt_ref: (bt_ref[b, p], 0, 0)
+    sc_map = lambda b, p, pos_ref, bt_ref: (bt_ref[b, p], 0)
+    q_map = lambda b, p, pos_ref, bt_ref: (b, 0, 0)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, n_pages),
+        in_specs=[
+            pl.BlockSpec((1, H, r), q_map),
+            pl.BlockSpec((1, H, dr), q_map),
+            pl.BlockSpec((1, ps, r), page_map),
+            pl.BlockSpec((1, ps, dr), page_map),
+            pl.BlockSpec((1, 1), sc_map),
+            pl.BlockSpec((1, 1), sc_map),
+        ],
+        out_specs=pl.BlockSpec((1, H, r), q_map),
+        scratch_shapes=[
+            pltpu.VMEM((H, r), jnp.float32),
+            pltpu.VMEM((H, 1), jnp.float32),
+            pltpu.VMEM((H, 1), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kern, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, H, r), q_abs.dtype),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+        name="paged_mla_decode_q8",
+    )(pos.astype(jnp.int32), bt, q_abs, q_rope, pool_ckv, pool_krope,
+      ckv_scale.astype(jnp.float32).reshape(-1, 1),
+      krope_scale.astype(jnp.float32).reshape(-1, 1))

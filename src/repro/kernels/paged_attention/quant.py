@@ -1,0 +1,72 @@
+"""Symmetric int8 per-page quantization for the paged KV cache.
+
+One scale per (page, feature-row): a pool leaf shaped
+``(num_pages, page_size, *feat, d)`` quantizes with a float32 scale
+tensor shaped ``(num_pages, *feat)`` — the page axis and the trailing
+vector dim share a scale, everything in between (e.g. the KV-head axis)
+gets its own.  For GQA pools ``(P, ps, KV, hd)`` that is a scale per
+page per KV head; for MLA latent pools ``(P, ps, r)`` a scale per page.
+
+Code grid: SYMMETRIC round-to-nearest onto ``[-QMAX, QMAX]`` with
+``QMAX = 127`` — the two's-complement code -128 is never emitted.  This
+is deliberately the *symmetric* convention of the paper's weight/bias
+DACs (``core.quant.quantize_bias_6b`` clips to the 63-code grid
+[-31, 31]; see the grid notes there), NOT the full two's-complement
+grid of the ADC preset (``quantize_gate_bias_adc``, [-32, 31]): an
+asymmetric grid would make ``dequant(quant(-x)) != -dequant(quant(x))``
+and bias every attention score sum.  With ``scale = absmax / QMAX``
+round-trip error is bounded by half an LSB: ``|x - deq(q(x))| <=
+0.5 * scale`` elementwise (exactly the property the hypothesis suite
+pins).
+
+``MIN_SCALE`` floors the scale so all-zero pages stay invertible
+(codes 0, scale MIN_SCALE) and the engine's monotone scale update never
+divides by zero when rescaling a page's existing codes.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+QMAX = 127
+MIN_SCALE = 1e-8
+
+
+def _expand(scale, ndim, page_axis):
+    """Re-insert the two reduced axes so ``scale`` broadcasts against the
+    codes: (P, *feat) -> (P, 1, *feat, 1) for ndim-dim page rows."""
+    return jnp.expand_dims(scale, (page_axis, ndim - 1))
+
+
+def page_abs_scale(x, *, page_axis=1):
+    """absmax/QMAX scale over (page_axis, last axis), floored at
+    MIN_SCALE.  x: (..., page, *feat, d) -> float32 (..., *feat)."""
+    s = jnp.max(jnp.abs(x.astype(jnp.float32)),
+                axis=(page_axis, x.ndim - 1))
+    return jnp.maximum(s / QMAX, MIN_SCALE)
+
+
+def quantize(x, scale, *, page_axis=1):
+    """Round-to-nearest symmetric int8 codes for page rows ``x`` under
+    per-row ``scale`` (shape = x.shape minus page_axis and last axis)."""
+    s = _expand(scale, x.ndim, page_axis)
+    codes = jnp.round(x.astype(jnp.float32) / s)
+    return jnp.clip(codes, -QMAX, QMAX).astype(jnp.int8)
+
+
+def dequantize(codes, scale, *, page_axis=1, dtype=jnp.float32):
+    """codes * scale, broadcast per page row."""
+    s = _expand(scale, codes.ndim, page_axis)
+    return (codes.astype(jnp.float32) * s).astype(dtype)
+
+
+def rescale_codes(codes, old_scale, new_scale, *, page_axis=1):
+    """Re-express existing codes under a grown scale: round(codes *
+    old/new).  The engine's scale update is monotone (new >= old), so the
+    ratio is <= 1 and re-clipping is a no-op; in the steady state
+    old == new bitwise, the ratio is exactly 1.0, and round(c * 1.0) == c
+    — repeated decode writes never perturb stored pages.  A fresh page
+    passes old_scale = 0 so the stale tenant's codes zero out."""
+    ratio = _expand((old_scale / new_scale).astype(jnp.float32),
+                    codes.ndim, page_axis)
+    codes = jnp.round(codes.astype(jnp.float32) * ratio)
+    return jnp.clip(codes, -QMAX, QMAX).astype(jnp.int8)

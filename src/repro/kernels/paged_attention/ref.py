@@ -29,6 +29,8 @@ import math
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.paged_attention import quant
+
 NEG_INF = -1e30
 
 
@@ -42,6 +44,20 @@ def gather_pages(pool, block_tables, length):
     idx = jnp.arange(length)
     pages = block_tables[:, idx // ps]            # (B, length)
     return pool[pages, idx[None, :] % ps]
+
+
+def gather_dequant(pool, scale, block_tables, length, dtype=jnp.float32):
+    """Dense dequantized view of an int8 pool's first ``length`` entries.
+
+    Gathers codes AND their per-page scales through the block table —
+    per-request traffic only, never the whole pool.  pool: (P, page,
+    *feat, d) int8; scale: (P, *feat) f32 -> (B, length, *feat, d)."""
+    ps = pool.shape[1]
+    idx = jnp.arange(length)
+    pages = block_tables[:, idx // ps]            # (B, length)
+    vals = pool[pages, idx[None, :] % ps].astype(jnp.float32)
+    sc = scale[pages]                             # (B, length, *feat)
+    return (vals * sc[..., None]).astype(dtype)
 
 
 def paged_positions(pos, length, window=None):
@@ -63,14 +79,19 @@ def paged_positions(pos, length, window=None):
 
 
 def paged_gqa_ref(q, pool_k, pool_v, block_tables, pos, *, length,
-                  window=None):
+                  window=None, k_scale=None, v_scale=None):
     """q: (B, H, hd); pool_k/v: (P, page, KV, hd); pos: (B,) -> (B, H, hd).
 
     fp32 score/softmax math (the kernel's numerics), grouped queries
-    share KV heads without expanding them in memory."""
+    share KV heads without expanding them in memory.  With int8 pools
+    pass ``k_scale``/``v_scale`` (P, KV): the oracle dequantizes the
+    whole pool up front — definitional, not efficient."""
     B, H, hd = q.shape
     KV = pool_k.shape[2]
     G = H // KV
+    if k_scale is not None:
+        pool_k = quant.dequantize(pool_k, k_scale)
+        pool_v = quant.dequantize(pool_v, v_scale)
     kd = gather_pages(pool_k, block_tables, length)   # (B, L, KV, hd)
     vd = gather_pages(pool_v, block_tables, length)
     _k_pos, valid = paged_positions(pos, length, window)
@@ -84,12 +105,16 @@ def paged_gqa_ref(q, pool_k, pool_v, block_tables, pos, *, length,
 
 
 def paged_mla_ref(q_abs, q_rope, pool_ckv, pool_krope, block_tables, pos, *,
-                  length, scale):
+                  length, scale, ckv_scale=None, krope_scale=None):
     """Weight-absorbed MLA decode over latent pages.
 
     q_abs: (B, H, r) absorbed queries; q_rope: (B, H, dr); pool_ckv:
     (P, page, r); pool_krope: (P, page, dr) -> latent output (B, H, r)
-    (the caller up-projects through W^{UV})."""
+    (the caller up-projects through W^{UV}).  With int8 latent pools
+    pass ``ckv_scale``/``krope_scale`` (P,)."""
+    if ckv_scale is not None:
+        pool_ckv = quant.dequantize(pool_ckv, ckv_scale)
+        pool_krope = quant.dequantize(pool_krope, krope_scale)
     ccd = gather_pages(pool_ckv, block_tables, length)     # (B, L, r)
     crd = gather_pages(pool_krope, block_tables, length)   # (B, L, dr)
     _k_pos, valid = paged_positions(pos, length, None)

@@ -135,6 +135,20 @@ def main(argv=None):
                          "KV cache)")
     ap.add_argument("--page-size", type=int, default=16,
                     help="tokens per KV page (paged layout)")
+    ap.add_argument("--kv-dtype", default=None,
+                    choices=["bf16", "int8"],
+                    help="paged KV-pool storage dtype: 'int8' stores "
+                         "symmetric per-page codes + float32 scales per "
+                         "page per KV head — half the pool bytes, so "
+                         "~2x the concurrent requests fit a fixed pool "
+                         "(README §Paged KV cache)")
+    ap.add_argument("--paged-impl", default=None,
+                    choices=["gather", "pallas", "pallas_tpu"],
+                    help="paged decode read: 'pallas' (default) = the "
+                         "block-table kernel, interpret off-TPU / "
+                         "compiled on TPU; 'gather' = dense-view oracle "
+                         "(bitwise-dense, slower); 'pallas_tpu' = "
+                         "compiled only")
     ap.add_argument("--num-pages", type=int, default=0,
                     help="page-pool capacity; 0 auto-sizes to the dense "
                          "equivalent (slots x pages-per-max-len-request) "
@@ -166,6 +180,13 @@ def main(argv=None):
     cfg = get_config(args.arch + ("-smoke" if args.smoke else ""))
     if args.scan_backend:
         cfg = dataclasses.replace(cfg, scan_backend=args.scan_backend)
+    if args.kv_dtype or args.paged_impl:
+        if args.kv_layout != "paged":
+            ap.error("--kv-dtype / --paged-impl need --kv-layout paged")
+        if args.kv_dtype:
+            cfg = dataclasses.replace(cfg, kv_dtype=args.kv_dtype)
+        if args.paged_impl:
+            cfg = dataclasses.replace(cfg, paged_impl=args.paged_impl)
     if args.moe_dispatch:
         if cfg.moe is None:
             ap.error(f"--moe-dispatch given but {cfg.name} has no MoE "

@@ -16,7 +16,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, MLAConfig
-from repro.kernels.paged_attention.ref import gather_pages, paged_positions
+from repro.kernels.paged_attention import quant as kvq
+from repro.kernels.paged_attention.ref import (gather_dequant, gather_pages,
+                                               paged_positions)
 from repro.models.module import Module, RMSNorm, fan_in_init
 
 NEG_INF = -1e30
@@ -50,6 +52,39 @@ def causal_mask(q_pos, k_pos, window: int | None = None):
     if window is not None:
         m &= (q_pos[..., :, None] - k_pos[..., None, :]) < window
     return jnp.where(m, 0.0, NEG_INF)
+
+
+def _paged_write_q8(pool, scale, wpage, in_page, fresh, tok):
+    """Quantized page-granular decode write (kv_dtype="int8"): read the
+    slot's live page row, grow its scale monotonically to admit the new
+    token, rescale the existing codes, scatter the token's codes, write
+    the row and scale back.
+
+    In the steady state the scale is unchanged, the rescale ratio is
+    exactly 1.0, and round(c * 1.0) == c — repeated decode writes never
+    perturb stored codes.  ``fresh`` marks writes that START a new page:
+    the previous tenant's scale is reset to 0 there, which also zeroes
+    its stale codes through the rescale.  (A sliding-window ring recycles
+    pages in place, so its pages are fresh only on the first lap and the
+    scale grows monotonically over the window's history — conservative,
+    never wrong.)
+
+    pool: (P, ps, *feat, d) int8; scale: (P, *feat) f32; wpage: (B,)
+    page ids (out of bounds for inactive slots — reads clamp, writes
+    drop, which IS the frozen-slot merge); in_page: (B,) in-page index;
+    tok: (B, *feat, d) this step's values."""
+    B = tok.shape[0]
+    rows = pool[wpage]                            # (B, ps, *feat, d)
+    old_s = scale[wpage]                          # (B, *feat)
+    f = fresh.reshape((B,) + (1,) * (old_s.ndim - 1))
+    old_s = jnp.where(f, 0.0, old_s)
+    tok_s = jnp.max(jnp.abs(tok.astype(jnp.float32)), axis=-1) / kvq.QMAX
+    new_s = jnp.maximum(jnp.maximum(old_s, tok_s), kvq.MIN_SCALE)
+    rows = kvq.rescale_codes(rows, old_s, new_s)
+    code = jnp.clip(jnp.round(tok.astype(jnp.float32) / new_s[..., None]),
+                    -kvq.QMAX, kvq.QMAX).astype(jnp.int8)
+    rows = rows.at[jnp.arange(B), in_page].set(code)
+    return pool.at[wpage].set(rows), scale.at[wpage].set(new_s)
 
 
 def _sdpa(q, k, v, mask):
@@ -217,12 +252,21 @@ class GQAAttention(Module):
     # --- paged decode (shared page pool + per-request block tables) ---
     def paged_cache_spec(self, num_pages, page_size, dtype=jnp.bfloat16):
         c = self.cfg
+        if c.kv_dtype == "int8":
+            s = jax.ShapeDtypeStruct(
+                (num_pages, page_size, c.n_kv_heads, c.head_dim), jnp.int8)
+            sc = jax.ShapeDtypeStruct((num_pages, c.n_kv_heads),
+                                      jnp.float32)
+            return {"k": s, "v": s, "k_scale": sc, "v_scale": sc}
         s = jax.ShapeDtypeStruct(
             (num_pages, page_size, c.n_kv_heads, c.head_dim), dtype)
         return {"k": s, "v": s}
 
     def paged_cache_axes(self):
         a = ("pages", "page", "kv_heads", "head_dim")
+        if self.cfg.kv_dtype == "int8":
+            sc = ("pages", "kv_heads")
+            return {"k": a, "v": a, "k_scale": sc, "v_scale": sc}
         return {"k": a, "v": a}
 
     def ring_length(self, length):
@@ -241,33 +285,54 @@ class GQAAttention(Module):
         reads the chain back.  The default "gather" impl reconstructs the
         dense in-cache view and runs EXACTLY the dense ``decode`` math —
         entry j of the view equals dense cache entry j bitwise wherever
-        the causal/window mask can see it, so paged == dense bitwise.
-        "pallas"/"pallas_tpu" route the read through the page-indirect
-        kernel instead (fp32 online softmax; no dense view is built)."""
+        the causal/window mask can see it, so paged == dense bitwise
+        (bf16 pools).  "pallas" (the default) / "pallas_tpu" route the
+        read through the page-indirect kernel instead (fp32 online
+        softmax; no dense view is built).  With kv_dtype="int8" the
+        write quantizes into the slot's live page (``_paged_write_q8``)
+        and the read dequantizes per page — in-register in the kernel,
+        via the scale gather on the oracle path."""
         B = x.shape[0]
         q, k, v = self._qkv(params, x, pos[:, None])
         Pp, ps = cache["k"].shape[0], cache["k"].shape[1]
         L = self.ring_length(length)
         slot = (pos % L) if self.window else pos          # in-cache index
         wpage = jnp.where(active, bt[jnp.arange(B), slot // ps], Pp)
-        ck = cache["k"].at[wpage, slot % ps].set(
-            k[:, 0].astype(cache["k"].dtype))
-        cv = cache["v"].at[wpage, slot % ps].set(
-            v[:, 0].astype(cache["v"].dtype))
+        q8 = self.cfg.kv_dtype == "int8"
+        if q8:
+            # a page is brand-new only when the write lands on its first
+            # entry at an unwrapped position (ring laps recycle in place)
+            fresh = ((slot % ps) == 0) & (pos == slot)
+            ck, cks = _paged_write_q8(cache["k"], cache["k_scale"],
+                                      wpage, slot % ps, fresh, k[:, 0])
+            cv, cvs = _paged_write_q8(cache["v"], cache["v_scale"],
+                                      wpage, slot % ps, fresh, v[:, 0])
+            new = {"k": ck, "v": cv, "k_scale": cks, "v_scale": cvs}
+        else:
+            cks = cvs = None
+            ck = cache["k"].at[wpage, slot % ps].set(
+                k[:, 0].astype(cache["k"].dtype))
+            cv = cache["v"].at[wpage, slot % ps].set(
+                v[:, 0].astype(cache["v"].dtype))
+            new = {"k": ck, "v": cv}
         impl = self.cfg.paged_impl
         if impl != "gather":
             from repro.kernels.paged_attention.ops import paged_gqa_attention
             out = paged_gqa_attention(
                 q[:, 0], ck, cv, bt, pos, length=L, window=self.window,
-                backend=impl)[:, None]
+                backend=impl, k_scale=cks, v_scale=cvs)[:, None]
         else:
-            kd = gather_pages(ck, bt, L)                  # (B, L, KV, hd)
-            vd = gather_pages(cv, bt, L)
+            if q8:
+                kd = gather_dequant(ck, cks, bt, L, q.dtype)
+                vd = gather_dequant(cv, cvs, bt, L, q.dtype)
+            else:
+                kd = gather_pages(ck, bt, L).astype(q.dtype)
+                vd = gather_pages(cv, bt, L).astype(q.dtype)
             _k_pos, valid = paged_positions(pos, L, self.window)
             mask = jnp.where(valid, 0.0, NEG_INF)[:, None, None, :]
-            out = _sdpa(q, kd.astype(q.dtype), vd.astype(q.dtype), mask)
+            out = _sdpa(q, kd, vd, mask)
         y = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
-        return y, {"k": ck, "v": cv}
+        return y, new
 
     def decode(self, params, x, cache, pos):
         """One-step decode. x: (B, 1, D); pos: scalar current position."""
@@ -439,16 +504,25 @@ class MLAAttention(Module):
     # --- paged decode over latent pages ---
     def paged_cache_spec(self, num_pages, page_size, dtype=jnp.bfloat16):
         m = self.m
-        return {
+        if self.cfg.kv_dtype == "int8":
+            dtype = jnp.int8
+        spec = {
             "ckv": jax.ShapeDtypeStruct(
                 (num_pages, page_size, m.kv_lora_rank), dtype),
             "krope": jax.ShapeDtypeStruct(
                 (num_pages, page_size, m.qk_rope_head_dim), dtype),
         }
+        if self.cfg.kv_dtype == "int8":
+            sc = jax.ShapeDtypeStruct((num_pages,), jnp.float32)
+            spec.update(ckv_scale=sc, krope_scale=sc)
+        return spec
 
     def paged_cache_axes(self):
-        return {"ckv": ("pages", "page", "kv_lora"),
-                "krope": ("pages", "page", "head_dim")}
+        a = {"ckv": ("pages", "page", "kv_lora"),
+             "krope": ("pages", "page", "head_dim")}
+        if self.cfg.kv_dtype == "int8":
+            a.update(ckv_scale=("pages",), krope_scale=("pages",))
+        return a
 
     def ring_length(self, length):
         return length
@@ -464,10 +538,23 @@ class MLAAttention(Module):
         q_nope, q_rope, ckv, k_rope = self._latents(params, x, pos[:, None])
         Pp, ps = cache["ckv"].shape[0], cache["ckv"].shape[1]
         wpage = jnp.where(active, bt[jnp.arange(B), pos // ps], Pp)
-        cc = cache["ckv"].at[wpage, pos % ps].set(
-            ckv[:, 0].astype(cache["ckv"].dtype))
-        cr = cache["krope"].at[wpage, pos % ps].set(
-            k_rope[:, 0].astype(cache["krope"].dtype))
+        q8 = self.cfg.kv_dtype == "int8"
+        if q8:
+            fresh = (pos % ps) == 0          # latent pages index globally
+            cc, ccs = _paged_write_q8(cache["ckv"], cache["ckv_scale"],
+                                      wpage, pos % ps, fresh, ckv[:, 0])
+            cr, crs = _paged_write_q8(cache["krope"],
+                                      cache["krope_scale"], wpage,
+                                      pos % ps, fresh, k_rope[:, 0])
+            new = {"ckv": cc, "krope": cr, "ckv_scale": ccs,
+                   "krope_scale": crs}
+        else:
+            ccs = crs = None
+            cc = cache["ckv"].at[wpage, pos % ps].set(
+                ckv[:, 0].astype(cache["ckv"].dtype))
+            cr = cache["krope"].at[wpage, pos % ps].set(
+                k_rope[:, 0].astype(cache["krope"].dtype))
+            new = {"ckv": cc, "krope": cr}
         w_uk = params["w_ukv"][:, :, :m.qk_nope_head_dim].astype(x.dtype)
         w_uv = params["w_ukv"][:, :, m.qk_nope_head_dim:].astype(x.dtype)
         q_abs = jnp.einsum("bshk,rhk->bshr", q_nope, w_uk)
@@ -477,23 +564,26 @@ class MLAAttention(Module):
             from repro.kernels.paged_attention.ops import paged_mla_attention
             o_latent = paged_mla_attention(
                 q_abs[:, 0], q_rope[:, 0], cc, cr, bt, pos, length=length,
-                scale=scale, backend=impl)[:, None]
+                scale=scale, backend=impl, ckv_scale=ccs,
+                krope_scale=crs)[:, None]
             o_latent = o_latent.astype(x.dtype)
         else:
-            ccd = gather_pages(cc, bt, length)            # (B, L, r)
-            crd = gather_pages(cr, bt, length)
-            scores = (jnp.einsum("bshr,blr->bhsl", q_abs,
-                                 ccd.astype(x.dtype))
-                      + jnp.einsum("bshk,blk->bhsl", q_rope,
-                                   crd.astype(x.dtype)))
+            if q8:
+                ccd = gather_dequant(cc, ccs, bt, length, x.dtype)
+                crd = gather_dequant(cr, crs, bt, length, x.dtype)
+            else:
+                ccd = gather_pages(cc, bt, length).astype(x.dtype)
+                crd = gather_pages(cr, bt, length).astype(x.dtype)
+            scores = (jnp.einsum("bshr,blr->bhsl", q_abs, ccd)
+                      + jnp.einsum("bshk,blk->bhsl", q_rope, crd))
             _k_pos, valid = paged_positions(pos, length, None)
             mask = jnp.where(valid, 0.0, NEG_INF)[:, None, None, :]
             w = jax.nn.softmax(scores.astype(jnp.float32) * scale + mask,
                                -1).astype(x.dtype)
-            o_latent = jnp.einsum("bhsl,blr->bshr", w, ccd.astype(x.dtype))
+            o_latent = jnp.einsum("bhsl,blr->bshr", w, ccd)
         out = jnp.einsum("bshr,rhk->bshk", o_latent, w_uv)
         y = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
-        return y, {"ckv": cc, "krope": cr}
+        return y, new
 
     def decode(self, params, x, cache, pos):
         c, m = self.cfg, self.m

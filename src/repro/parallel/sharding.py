@@ -181,6 +181,12 @@ CACHE_RULES = {
     # row-to-row copy WITHIN each device's own pool shard (page rows are
     # whole on every device; only head/latent dims are split), so page
     # sharing never adds a collective to the decode step.
+    # Int8 pools (kv_dtype="int8") add per-page float32 scale leaves
+    # with axes ("pages", "kv_heads") / ("pages",): the same table
+    # places them — page axis replicated next to its codes, kv_heads
+    # TP-sharded exactly like the pool dim they scale — so COW copies
+    # and page installs move a page's codes and its scale row together
+    # without any extra rule.
     "pages": None,
     "page": None,
 }

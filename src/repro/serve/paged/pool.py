@@ -25,6 +25,12 @@ int32 page ids around.  Invariants the serving engine relies on:
     :meth:`incref`/:meth:`decref`; when the free list runs dry the pool
     calls its ``reclaim`` hook so the holder can drop unpinned pages
     before a reserve-covered allocation would fail.
+
+Quantized pools (``kv_dtype="int8"``) change nothing here: a page id
+names the page's int8 code row AND its float32 scale row in every pool
+leaf, so refcounts, COW, and release move them as one unit — the device
+side (``DecoderStepModel.copy_pages`` / ``_write_impl_paged``) copies
+and installs ``<key>_scale`` leaves page-for-page with their codes.
 """
 from __future__ import annotations
 

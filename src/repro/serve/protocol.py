@@ -180,9 +180,16 @@ class DecoderStepModel(StepModel):
         slot-batched ``decode_step_paged`` (a vmap cannot thread shared
         pool state), admission prefill still computes the dense wave
         cache and ``write_slots`` scatters it PAGE-granularly, and the
-        engine allocates pages as positions cross page boundaries.  With
-        the default ``paged_impl="gather"`` the decode math is bitwise
-        identical to the dense layout.
+        engine allocates pages as positions cross page boundaries.  The
+        default ``paged_impl="pallas"`` reads through the page-indirect
+        kernel (pinned per-family tolerance vs the gather oracle);
+        ``paged_impl="gather"`` keeps the decode math bitwise identical
+        to the dense layout.  With ``kv_dtype="int8"`` pools store
+        symmetric per-page codes + float32 scale leaves (``*_scale``):
+        ``write_slots`` quantizes page rows on install, the in-graph
+        decode write requantizes incrementally, and the scales ride the
+        pool subtrees so page copies (COW) and sharding need no special
+        cases.
     """
 
     autoregressive = True
@@ -401,12 +408,34 @@ class DecoderStepModel(StepModel):
         """Native dense B=1 prefill cache gathered from ``bt_row``'s
         pages — the in-cache index mapping (absolute for global/MLA,
         ring for windows) is exactly ``gather_pages``'s, so the seeded
-        cache is bitwise the dense cache the chain's writer produced."""
-        from repro.kernels.paged_attention.ref import gather_pages
+        cache is bitwise the dense cache the chain's writer produced
+        (bf16 pools).  Int8 pools seed the DEQUANTIZED view (codes ×
+        per-page scale): re-installing it quantizes back to bit-exact
+        codes (see ``_write_impl_paged``)."""
+        from repro.kernels.paged_attention.ref import (gather_dequant,
+                                                       gather_pages)
         tmpl = self.model.cache_spec(1, self.max_len)
         out = {}
         for name, sub in state.items():
             ax = self._slot_axis[name]
+            qkeys = ({k for k in sub if k + "_scale" in sub}
+                     if isinstance(sub, dict) else set())
+            if qkeys:
+                nsub = {}
+                for key in sorted(qkeys):
+                    spec = tmpl[name][key]
+                    Lv = spec.shape[ax + 1]
+                    pool, sc = sub[key], sub[key + "_scale"]
+                    if ax == 0:
+                        nsub[key] = gather_dequant(pool, sc, bt_row, Lv,
+                                                   spec.dtype)
+                    else:
+                        nsub[key] = jax.vmap(
+                            lambda p, s, Lv=Lv: gather_dequant(
+                                p, s, bt_row, Lv))(pool, sc).astype(
+                                    spec.dtype)
+                out[name] = nsub
+                continue
 
             def g(pool, spec, ax=ax):
                 Lv = spec.shape[ax + 1]
@@ -714,8 +743,9 @@ class DecoderStepModel(StepModel):
         for name, sub in state.items():
             ax = self._slot_axis[name]
             if name in self._pool_names:
-                def updp(s, v, ax=ax):
+                def rows(v, ax=ax):
                     # v: dense wave cache; slot axis at ax, length at ax+1
+                    # -> ((..., n, ps, ...) page rows, n)
                     Lv = v.shape[ax + 1]
                     n = -(-min(plen, Lv) // ps)
                     take = min(n * ps, Lv)
@@ -727,10 +757,39 @@ class DecoderStepModel(StepModel):
                         padw[ax + 1] = (0, n * ps - take)
                         v2 = jnp.pad(v2, padw)
                     shape = v2.shape[:ax + 1] + (n, ps) + v2.shape[ax + 2:]
-                    v2 = v2.reshape(shape).astype(s.dtype)
+                    return v2.reshape(shape), n
+
+                def scat(s, v2, n, ax=ax):
                     if ax == 0:
                         return s.at[pages[:, :n]].set(v2)
                     return s.at[:, pages[:, :n]].set(v2)
+
+                # int8 pools carry float32 ``<key>_scale`` leaves the
+                # dense wave cache does not have: quantize each data
+                # leaf's page rows on install (symmetric absmax scale per
+                # page per feature row) and scatter codes + scales.
+                # Re-installing an unchanged page (prefix attaches
+                # rewrite the whole chain) reproduces its codes
+                # bit-exactly: a quantized page's max |code| is QMAX, so
+                # the recomputed scale matches to float rounding.
+                qkeys = ({k for k in sub if k + "_scale" in sub}
+                         if isinstance(sub, dict) else set())
+                if qkeys:
+                    from repro.kernels.paged_attention import quant as kvq
+                    nsub = {}
+                    for key in sorted(qkeys):
+                        v2, n = rows(batch_state[name][key])
+                        sc = kvq.page_abs_scale(v2, page_axis=ax + 2)
+                        codes = kvq.quantize(v2, sc, page_axis=ax + 2)
+                        nsub[key] = scat(sub[key], codes, n)
+                        nsub[key + "_scale"] = scat(sub[key + "_scale"],
+                                                    sc, n)
+                    out[name] = nsub
+                    continue
+
+                def updp(s, v, ax=ax):
+                    v2, n = rows(v, ax=ax)
+                    return scat(s, v2.astype(s.dtype), n, ax=ax)
 
                 out[name] = jax.tree_util.tree_map(updp, sub,
                                                    batch_state[name])

@@ -1,0 +1,152 @@
+"""Property suite for the int8 per-page KV quantizer
+(repro.kernels.paged_attention.quant) and the engine behaviours built on
+it (decode-write scale monotonicity, COW fork bit-exactness).
+
+Pinned properties:
+
+  * round-trip: |x - deq(quant(x))| <= 0.5 * scale elementwise (the
+    symmetric round-to-nearest grid's half-LSB bound), for every page
+    and feature row independently;
+  * scale positivity: page_abs_scale >= MIN_SCALE > 0 always, including
+    all-zero pages (which round-trip to exact zeros);
+  * symmetry: quant(-x) == -quant(x) (codes), so dequant is odd — the
+    reason the KV grid follows the paper's symmetric DAC convention and
+    not the ADC's two's-complement grid (see core.quant grid notes);
+  * code range: codes in [-127, 127]; -128 never emitted;
+  * rescale identity: rescale_codes(c, s, s) == c bitwise (steady-state
+    decode writes never perturb stored pages), and growing the scale
+    re-expresses codes within the same half-LSB bound;
+  * requantize idempotence: quantizing the dequantized view of a
+    quantized page reproduces the codes bit-exactly (a quantized page
+    has max|code| == QMAX unless all-zero, so absmax/QMAX returns the
+    same scale) — this is what makes prefix-cache attach rewrites safe;
+  * COW fork: copying a page's codes and scale row preserves the
+    dequantized view bit-exactly (pages are (codes, scale) units).
+
+Runs under hypothesis when available (shrinks failing cases); the
+container always runs the seeded fallback over many draws.
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.kernels.paged_attention import quant
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+P, PS, KV, HD = 5, 4, 2, 8     # GQA-shaped pool (P, ps, KV, hd)
+
+
+def _pool(rng, magnitude):
+    x = rng.standard_normal((P, PS, KV, HD)).astype(np.float32)
+    return x * magnitude
+
+
+def check_roundtrip(x):
+    xj = jnp.asarray(x)
+    sc = quant.page_abs_scale(xj)
+    codes = quant.quantize(xj, sc)
+    deq = quant.dequantize(codes, sc)
+    sc_np = np.asarray(sc)                         # (P, KV)
+    assert (sc_np >= quant.MIN_SCALE).all()
+    c = np.asarray(codes)
+    assert c.min() >= -quant.QMAX and c.max() <= quant.QMAX
+    # elementwise half-LSB bound, each (page, kv) row under ITS scale
+    err = np.abs(np.asarray(deq) - x)
+    bound = 0.5 * sc_np[:, None, :, None] * (1 + 1e-6)
+    assert (err <= bound).all(), float((err - bound).max())
+    # symmetry: quant(-x) == -quant(x)
+    neg = np.asarray(quant.quantize(jnp.asarray(-x), sc))
+    np.testing.assert_array_equal(neg, -c)
+    # rescale identity at equal scales — bitwise
+    same = np.asarray(quant.rescale_codes(codes, sc, sc))
+    np.testing.assert_array_equal(same, c)
+    # requantize idempotence: codes hit QMAX per row (or the row is all
+    # zero), so absmax/QMAX of the dequantized view returns the scale
+    sc2 = quant.page_abs_scale(deq)
+    codes2 = np.asarray(quant.quantize(deq, sc2))
+    np.testing.assert_array_equal(codes2, c)
+    # growing the scale re-expresses codes within the new grid's LSB
+    grown = sc * 1.7
+    re = quant.rescale_codes(codes, sc, grown)
+    err2 = np.abs(np.asarray(quant.dequantize(re, grown)) -
+                  np.asarray(deq))
+    bound2 = 0.5 * np.asarray(grown)[:, None, :, None] * (1 + 1e-6)
+    assert (err2 <= bound2).all()
+
+
+def test_roundtrip_seeded_sweep():
+    rng = np.random.default_rng(0)
+    for mag in (1e-6, 1e-2, 1.0, 37.0, 1e4):
+        for _ in range(8):
+            check_roundtrip(_pool(rng, mag))
+
+
+def test_all_zero_page_is_invertible():
+    x = np.zeros((P, PS, KV, HD), np.float32)
+    sc = quant.page_abs_scale(jnp.asarray(x))
+    assert (np.asarray(sc) == quant.MIN_SCALE).all()
+    codes = quant.quantize(jnp.asarray(x), sc)
+    np.testing.assert_array_equal(np.asarray(codes), 0)
+    np.testing.assert_array_equal(
+        np.asarray(quant.dequantize(codes, sc)), 0.0)
+
+
+def test_fresh_page_rescale_zeroes_stale_tenant():
+    """The decode write path passes old_scale=0 for a page's first
+    token: every stale code rescales to 0 (ratio 0), so the previous
+    tenant's data never leaks through a recycled page."""
+    rng = np.random.default_rng(1)
+    x = _pool(rng, 5.0)
+    sc = quant.page_abs_scale(jnp.asarray(x))
+    codes = quant.quantize(jnp.asarray(x), sc)
+    zero = jnp.zeros_like(sc)
+    wiped = quant.rescale_codes(codes, zero, sc)
+    np.testing.assert_array_equal(np.asarray(wiped), 0)
+
+
+def test_mla_page_axis_shapes():
+    """MLA latent pools (P, ps, r): one scale per page, page_axis=1,
+    same bound."""
+    rng = np.random.default_rng(2)
+    x = rng.standard_normal((P, PS, 16)).astype(np.float32) * 3
+    sc = quant.page_abs_scale(jnp.asarray(x))
+    assert sc.shape == (P,)
+    deq = np.asarray(quant.dequantize(quant.quantize(jnp.asarray(x), sc),
+                                      sc))
+    assert (np.abs(deq - x)
+            <= 0.5 * np.asarray(sc)[:, None, None] * (1 + 1e-6)).all()
+
+
+def test_cow_fork_is_bit_exact():
+    """A COW page copy moves (codes row, scale row) as one unit: the
+    fork's dequantized view equals the parent's bitwise — mirrors
+    DecoderStepModel.copy_pages, which copies every pool leaf (codes AND
+    <key>_scale) page-for-page."""
+    rng = np.random.default_rng(3)
+    x = _pool(rng, 2.0)
+    sc = quant.page_abs_scale(jnp.asarray(x))
+    codes = quant.quantize(jnp.asarray(x), sc)
+    src, dst = 1, 4
+    codes2 = codes.at[dst].set(codes[src])
+    sc2 = sc.at[dst].set(sc[src])
+    a = np.asarray(quant.dequantize(codes, sc))[src]
+    b = np.asarray(quant.dequantize(codes2, sc2))[dst]
+    np.testing.assert_array_equal(a, b)
+
+
+@pytest.mark.skipif(not HAVE_HYPOTHESIS, reason="hypothesis not installed")
+def test_roundtrip_hypothesis():
+    @settings(max_examples=200, deadline=None)
+    @given(st.integers(0, 2**32 - 1),
+           st.floats(1e-6, 1e5, allow_nan=False, allow_infinity=False))
+    def run(seed, mag):
+        check_roundtrip(_pool(np.random.default_rng(seed), mag))
+
+    run()

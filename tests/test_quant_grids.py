@@ -1,0 +1,82 @@
+"""Exact-value pins for the two DELIBERATELY different signed 6 b code
+grids (paper §3.1.2, Fig. 3C) — the reconciliation the grid notes in
+core.quant document:
+
+  * quantize_bias_6b — SYMMETRIC [-31, +31] (63 live codes): the
+    weight/bias DAC's segmented bank straddles zero symmetrically, so
+    code -32 is never emitted and quantize(-x) == -quantize(x) exactly;
+  * quantize_gate_bias_adc — full TWO'S-COMPLEMENT [-32, +31] on the
+    fixed grid LSB = 6/63: the ADC preset is a plain signed 6 b
+    register, so the asymmetric -32 code physically exists (one extra
+    step of negative bias range) and symmetry breaks at that edge.
+
+The serving int8 KV quantizer (kernels.paged_attention.quant) follows
+the symmetric convention with QMAX = 127 mirroring the 31 here; its
+half-LSB/symmetry properties are pinned in
+tests/test_paged_quant_properties.py.  No hypothesis dependency: these
+exact pins must run on minimal installs too.
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import quant
+from repro.kernels.paged_attention import quant as kvq
+
+
+def test_bias_6b_grid_is_symmetric_63_codes():
+    lsb = 1.0 / 31.0                        # absmax=1 -> scale = 1/31
+    b = jnp.asarray(np.arange(-31, 32) * lsb, jnp.float32)
+    bq = np.asarray(quant.quantize_bias_6b(b, scale=lsb))
+    codes = np.round(bq / lsb).astype(int)
+    np.testing.assert_array_equal(codes, np.arange(-31, 32))
+    assert len(set(codes.tolist())) == 63   # 63 live codes out of 64
+    # code -32 is never emitted: values past the negative edge clip to -31
+    deep = jnp.asarray([-40.0 * lsb, -31.49 * lsb], jnp.float32)
+    dq = np.asarray(quant.quantize_bias_6b(deep, scale=lsb))
+    np.testing.assert_allclose(dq, [-31 * lsb, -31 * lsb], rtol=1e-6)
+    # exact odd symmetry on the whole grid
+    neg = np.asarray(quant.quantize_bias_6b(-b, scale=lsb))
+    np.testing.assert_array_equal(neg, -bq)
+    # default scale = absmax/31: the extreme values are reproduced exactly
+    ends = jnp.asarray([1.0, -1.0], jnp.float32)
+    np.testing.assert_array_equal(
+        np.asarray(quant.quantize_bias_6b(ends)), [1.0, -1.0])
+
+
+def test_gate_bias_adc_grid_is_twos_complement():
+    lsb = quant.ADC_GATE_BIAS_LSB
+    assert lsb == 6.0 / 63.0                # fixed by the ADC, not absmax
+    # code -32 EXISTS: -32*LSB is representable exactly...
+    v = jnp.asarray([-32.0 * lsb], jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(quant.quantize_gate_bias_adc(v)), [-32 * lsb],
+        rtol=1e-6)
+    # ...values below it clip to -32, values above +31 clip to +31
+    edges = jnp.asarray([-40.0 * lsb, 40.0 * lsb], jnp.float32)
+    eq = np.asarray(quant.quantize_gate_bias_adc(edges))
+    np.testing.assert_allclose(eq, [-32 * lsb, 31 * lsb], rtol=1e-6)
+    # symmetry therefore BREAKS exactly at the -32 edge (and only there)
+    x = jnp.asarray([32.0 * lsb], jnp.float32)
+    a = float(quant.quantize_gate_bias_adc(x)[0])      # clips to +31
+    b = float(quant.quantize_gate_bias_adc(-x)[0])     # lands on -32
+    np.testing.assert_allclose([a, b], [31 * lsb, -32 * lsb], rtol=1e-6)
+    assert abs(a + b) > 0.5 * lsb           # |a| != |b|: one-code gap
+    # full sweep stays on the 64-code grid
+    sweep = jnp.asarray(np.linspace(-5, 5, 1001), jnp.float32)
+    codes = np.round(np.asarray(quant.quantize_gate_bias_adc(sweep))
+                     / lsb).astype(int)
+    assert codes.min() == -32 and codes.max() == 31
+
+
+def test_int8_kv_grid_mirrors_symmetric_convention():
+    """QMAX=127 of the int8 range <-> 31 of the 6 b range: same
+    symmetric grid family; -128 plays the role of the never-emitted
+    -32."""
+    x = jnp.asarray(np.linspace(-3, 3, 101, dtype=np.float32)
+                    .reshape(1, 101, 1))
+    sc = kvq.page_abs_scale(x)
+    codes = np.asarray(kvq.quantize(x, sc))
+    assert codes.min() == -kvq.QMAX and codes.max() == kvq.QMAX
+    assert kvq.QMAX == 127                  # -128 never emitted
+    neg = np.asarray(kvq.quantize(-x, sc))
+    np.testing.assert_array_equal(neg, -codes)

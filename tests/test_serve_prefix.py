@@ -7,11 +7,20 @@ attention families (global GQA, sliding window, MLA), with exactly one
 compiled decode step.  Sharing changes memory traffic and scheduling,
 never numerics.
 
+The whole suite pins paged_impl="gather" (the bitwise oracle): the
+streams here are compared against independently *prefilled* requests,
+and the default pallas decode path is only tolerance-equal to the dense
+prefill numerics — a sampled near-tie can legitimately flip under it.
+Sharing semantics (attach points, COW copies, refcounts) are identical
+across impls; the oracle just makes the stream equality exact.
+
 Also covers the engine-loop bugs the feature exposed: admission must
 refill a slot freed mid-wave (a max_new_tokens=1 request retiring at
 admission), and run() must raise instead of busy-spinning when a
 deferred request can never be admitted.
 """
+import dataclasses
+
 import jax
 import numpy as np
 import pytest
@@ -25,7 +34,7 @@ SPS = dict(temperature=0.9, top_k=12, top_p=0.9, seed=3)
 
 
 def _built(arch):
-    cfg = get_config(arch)
+    cfg = dataclasses.replace(get_config(arch), paged_impl="gather")
     model = build_model(cfg)
     return cfg, model, model.init(jax.random.PRNGKey(0))
 
