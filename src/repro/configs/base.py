@@ -267,6 +267,15 @@ class ServeConfig:
     # page-aligned prompt prefix is resident attach to the existing
     # pages and prefill only the tail (README §Prefix caching)
     prefix_cache: bool = False
+    # admission/preemption policy (repro.serve.scheduler.POLICIES):
+    #   "fifo"     — strict arrival order, defer-at-head (the historical
+    #                behavior, byte for byte); never preempts
+    #   "priority" — higher submit(priority=...) first; may evict a
+    #                strictly-lower-priority running request when a
+    #                high-priority arrival is blocked (paged layout)
+    #   "sjf"      — shortest-prefill-first with aging (README
+    #                §Scheduling & preemption)
+    policy: str = "fifo"
 
 
 @dataclasses.dataclass(frozen=True)

@@ -72,7 +72,8 @@ def build_engine(model, params, serve: ServeConfig = ServeConfig(),
     sm = DecoderStepModel(model, max_len=serve.max_len,
                           prefill_chunk=serve.prefill_chunk, **kw)
     return ServeEngine(sm, params, slots=serve.slots, mesh=mesh,
-                       prefix_cache=serve.prefix_cache)
+                       prefix_cache=serve.prefix_cache,
+                       policy=serve.policy)
 
 
 def parse_mesh(spec: str):
@@ -159,6 +160,17 @@ def main(argv=None):
                          "so requests sharing a page-aligned prompt "
                          "prefix attach to them and prefill only the "
                          "tail (README §Prefix caching)")
+    ap.add_argument("--policy", default="fifo",
+                    choices=["fifo", "priority", "sjf"],
+                    help="admission/preemption policy: 'fifo' = strict "
+                         "arrival order with defer-at-head; 'priority' "
+                         "= per-request priority classes (may preempt "
+                         "lower-priority running requests under the "
+                         "paged layout); 'sjf' = shortest-prefill-first "
+                         "with aging (README §Scheduling & preemption)")
+    ap.add_argument("--verbose", action="store_true",
+                    help="print a per-step stats line (occupancy, "
+                         "queue depth, pool pages, preemptions)")
     ap.add_argument("--fork", type=int, default=0,
                     help="fork the FIRST admitted request into N extra "
                          "copy-on-write streams after one decode step "
@@ -229,7 +241,8 @@ def main(argv=None):
                                    kv_layout=args.kv_layout,
                                    page_size=args.page_size,
                                    num_pages=args.num_pages,
-                                   prefix_cache=args.prefix_cache),
+                                   prefix_cache=args.prefix_cache,
+                                   policy=args.policy),
                        mesh=mesh)
     if eng.pool is not None:
         print(f"paged KV: {eng.pool.num_pages} pages x "
@@ -262,12 +275,14 @@ def main(argv=None):
             kids = eng.fork(first, min(args.fork, room))
             print(f"forked request uid={first.uid} into "
                   f"{len(kids)} COW streams")
-    done = eng.run()
+    done = eng.run(verbose=args.verbose)
     dt = time.time() - t0
     total = int(plens.sum() + glens.sum())
+    stats = eng.stats()
     print(f"engine: {len(done)} requests, {eng.n_emitted} tokens in "
           f"{dt:.2f}s ({total/dt:.1f} tok/s incl. prefill + compile), "
-          f"slot utilization {eng.utilization:.2f}")
+          f"slot utilization {stats.utilization:.2f}, "
+          f"policy {stats.policy}, {stats.n_preemptions} preemption(s)")
     if eng.prefix_cache is not None:
         pc = eng.prefix_cache
         print(f"prefix cache: {eng.n_prefix_hits} hits / "

@@ -7,16 +7,23 @@ state write, retirement is a state free.  No paged KV allocator needed for
 the pure recurrent stacks; attention stacks ride along behind the same
 StepModel protocol with per-slot position tracking.
 
-  * :mod:`repro.serve.protocol` — the StepModel contract + adapters for
+The serving stack is layered (README §Scheduling & preemption):
+
+  * :mod:`repro.serve.state`     — SlotTable/Request: host-side slot +
+    request lifecycle state (the STATE layer)
+  * :mod:`repro.serve.scheduler` — SchedulingPolicy (fifo / priority /
+    sjf): admission order + preemption victims (the SCHEDULER layer)
+  * :mod:`repro.serve.engine`    — the fixed-capacity engine driving
+    the jitted step/write/prefill programs (the EXECUTOR layer)
+  * :mod:`repro.serve.protocol`  — the StepModel contract + adapters for
     DecoderLM (LM generation) and MinimalistNetwork (frame streaming)
-  * :mod:`repro.serve.sampling` — per-request temperature/top-k/top-p
+  * :mod:`repro.serve.sampling`  — per-request temperature/top-k/top-p
     with a counter-based PRNG (fold_in(seed, uid, pos)): reproducible
     per request, retrace-free in the slot batch
-  * :mod:`repro.serve.prefill`  — grid-padded masked chunked prefill
+  * :mod:`repro.serve.prefill`   — grid-padded masked chunked prefill
     (one linear_scan / K-V block write per chunk; exactly one compiled
     chunk shape across ragged prompt lengths)
-  * :mod:`repro.serve.engine`   — the fixed-capacity slot scheduler
-  * :mod:`repro.serve.paged`    — paged KV cache for the attention
+  * :mod:`repro.serve.paged`     — paged KV cache for the attention
     stacks: refcounted block-table page allocator + page pools, so cache
     memory scales with LIVE tokens instead of slots × max_len (the
     O(1)-state paths never needed it and are untouched), plus the
@@ -24,14 +31,20 @@ StepModel protocol with per-slot position tracking.
     and the copy-on-write page sharing behind ``ServeEngine.fork``
 """
 from repro.configs.base import SamplingParams
-from repro.serve.engine import Request, ServeEngine
+from repro.serve.engine import EngineStats, Request, ServeEngine
 from repro.serve.paged import PagedConfig, PagePool, PrefixCache
 from repro.serve.prefill import chunked_prefill
 from repro.serve.protocol import (DecoderStepModel, MinimalistStepModel,
                                   ServeShardings, StepModel)
 from repro.serve.sampling import sample_tokens
+from repro.serve.scheduler import (POLICIES, FIFOPolicy, PriorityPolicy,
+                                   SchedulingPolicy, SJFPolicy,
+                                   make_policy)
+from repro.serve.state import SlotTable
 
 __all__ = ["Request", "SamplingParams", "ServeEngine", "ServeShardings",
            "chunked_prefill", "sample_tokens", "StepModel",
            "DecoderStepModel", "MinimalistStepModel", "PagedConfig",
-           "PagePool", "PrefixCache"]
+           "PagePool", "PrefixCache", "EngineStats", "SlotTable",
+           "SchedulingPolicy", "FIFOPolicy", "PriorityPolicy",
+           "SJFPolicy", "POLICIES", "make_policy"]

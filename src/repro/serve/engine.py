@@ -1,17 +1,39 @@
-"""Fixed-capacity continuous-batching scheduler.
+"""Fixed-capacity continuous-batching engine (the EXECUTOR layer).
 
-The engine owns ``slots`` recurrent states (one per in-flight request) plus
-per-slot position / budget counters.  Requests of arbitrary prompt and
-generation lengths are admitted into free slots as they open up and retired
-the step they finish — the decode step itself is ONE jitted program over
-the full slot batch whose shapes never change, so XLA compiles it exactly
-once per engine (no slot compaction, no retraces).
+The serving stack is split into three layers with explicit seams:
+
+  * STATE  — :mod:`repro.serve.state`: :class:`SlotTable` owns the
+    waiting queue, the free-slot bitmask, per-slot position / budget /
+    sampling-knob arrays and the page-pool interactions (release on
+    free) behind small explicit mutators.
+  * SCHEDULER — :mod:`repro.serve.scheduler`: a
+    :class:`~repro.serve.scheduler.SchedulingPolicy` orders admission
+    (``admit_order``) and may name a preemption victim
+    (``select_victim``).  ``policy="fifo"`` (the default) reproduces the
+    historical strict-FIFO defer-at-head admission byte for byte;
+    ``"priority"`` / ``"sjf"`` reorder the queue deterministically (uid
+    tie-break) and, under ``priority``, evict lower-priority running
+    requests when a higher-priority arrival is blocked.
+  * EXECUTOR — this module: the jitted step / write / prefill paths.
+    The decode step stays ONE compiled program over the full slot batch
+    whose shapes never change, under every policy — scheduling decisions
+    are host-side list manipulation, invisible to jit.
+
+Preemption (paged layout only): evicting a running request snapshots
+its page chain + per-slot carry to host memory (``device_get`` of
+exactly its pages via the block table), releases the pages back to the
+pool, and re-queues it; re-admission reserves afresh, re-seeds FRESH
+pages with the snapshotted bytes and resumes mid-stream with no
+prefill.  Reads go through the block table and the sampling PRNG is
+counter-based on (seed, uid, pos), so a preempted-then-resumed stream
+is bitwise-equal to one that was never disturbed.
 
 Request lifecycle::
 
     submit() -> WAITING -> [admit: chunked prefill -> state write] ->
-    RUNNING (slot batch decode, inactive slots masked) -> retire ->
-    FINISHED (tokens / stream outputs collected on the host)
+    RUNNING (slot batch decode, inactive slots masked)
+       -> retire -> FINISHED (tokens / stream outputs on the host)
+       -> preempt -> WAITING (snapshot held) -> resume -> RUNNING
 
 Two request flavors, selected by the StepModel:
 
@@ -32,7 +54,6 @@ Two request flavors, selected by the StepModel:
 from __future__ import annotations
 
 import dataclasses
-from collections import deque
 from typing import Any, List, Optional
 
 import jax.numpy as jnp
@@ -40,43 +61,41 @@ import numpy as np
 
 from repro.common import pow2ceil
 from repro.configs.base import SamplingParams
-from repro.serve.sampling import KNOB_DTYPES, KNOB_GREEDY
-
-def _knob_values(req):
-    """A request's per-slot knob values (schema: sampling.KNOB_DTYPES).
-
-    The uid is folded into the counter-based PRNG key as two 32-bit
-    words (low bits + the bits above them) so the FULL uid reaches the
-    key — a single masked word would give requests whose uids differ by
-    its period (e.g. 2**31 under the old ``& 0x7FFFFFFF`` mask)
-    bitwise-identical sampled streams."""
-    sp = req.sampling
-    return {"seed": sp.seed, "uid": req.uid & 0xFFFFFFFF,
-            "uid_hi": (req.uid >> 32) & 0xFFFFFFFF,
-            "temperature": sp.temperature, "top_k": sp.top_k,
-            "top_p": sp.top_p}
+from repro.serve.sampling import KNOB_DTYPES
+from repro.serve.scheduler import make_policy
+# Request/_knob_values moved to serve.state with the layer split; they
+# are re-exported here because engine.py was their public home
+from repro.serve.state import Request, SlotTable, _knob_values  # noqa: F401
 
 
-@dataclasses.dataclass
-class Request:
-    uid: int
-    prompt: np.ndarray                 # (P,) int32 tokens | (P, d_in) frames
-    max_new_tokens: int = 0            # 0 for pure streaming requests
-    eos_id: Optional[int] = None
-    # default_factory: every request owns its params instance — a shared
-    # class-level default would let one request's (user-)mutated knobs
-    # silently leak into every other default-sampled request
-    sampling: SamplingParams = dataclasses.field(
-        default_factory=SamplingParams)
-    # filled by the engine:
-    outputs: List[Any] = dataclasses.field(default_factory=list)
-    finished: bool = False
-    cancelled: bool = False
+@dataclasses.dataclass(frozen=True)
+class EngineStats:
+    """One host-side snapshot of engine occupancy (``ServeEngine.stats()``).
 
-    @property
-    def tokens(self) -> np.ndarray:
-        """Generated token ids (LM) / per-frame outputs (streaming)."""
-        return np.asarray(self.outputs)
+    Replaces the bare ``utilization()`` readout: the load harness and
+    ``run(verbose=True)`` record these per wave, and the pool fields are
+    what a capacity planner actually needs (pages, not a ratio)."""
+
+    policy: str
+    n_steps: int
+    slots: int
+    active_slots: int
+    queue_depth: int
+    pages_in_use: int          # 0 when unpaged
+    pages_free: int            # 0 when unpaged
+    pages_reserved: int        # 0 when unpaged
+    n_preemptions: int
+    utilization: float         # decode tokens per slot-step paid
+
+    def line(self) -> str:
+        """Compact single-line rendering for ``run(verbose=True)``."""
+        return (f"[{self.policy} step {self.n_steps}] "
+                f"slots {self.active_slots}/{self.slots} "
+                f"queue {self.queue_depth} "
+                f"pages {self.pages_in_use} used / {self.pages_free} "
+                f"free / {self.pages_reserved} reserved "
+                f"preempt {self.n_preemptions} "
+                f"util {self.utilization:.2f}")
 
 
 class ServeEngine:
@@ -90,14 +109,20 @@ class ServeEngine:
     — the decode step stays ONE compiled (now SPMD) program.  On a 1×1
     mesh this is bitwise identical to the no-mesh engine; the semantics
     (admission, retirement, per-request reproducibility) never change.
+
+    ``policy=`` selects the admission/preemption policy: a name from
+    :data:`repro.serve.scheduler.POLICIES` ("fifo" default, "priority",
+    "sjf") or a :class:`~repro.serve.scheduler.SchedulingPolicy`
+    instance.
     """
 
     def __init__(self, step_model, params, *, slots: int = 8, mesh=None,
-                 prefix_cache: bool = False):
+                 prefix_cache: bool = False, policy="fifo"):
         self.sm = step_model
         self.slots = int(slots)
         if self.slots < 1:
             raise ValueError("slots must be >= 1")
+        self.policy = make_policy(policy)
         if mesh is not None:
             step_model.bind_mesh(mesh, self.slots)
         self.mesh = step_model.mesh
@@ -124,17 +149,8 @@ class ServeEngine:
                 self.pool, step_model.paged.page_size,
                 full_prompt_only=step_model._has_window)
         self.state = step_model.init_state(self.slots)
-        self.free_mask = (1 << self.slots) - 1     # bit i set = slot i free
-        self.waiting: deque[Request] = deque()
-        self.slot_req: List[Optional[Request]] = [None] * self.slots
-        self.pos = np.zeros(self.slots, np.int32)
-        self.remaining = np.zeros(self.slots, np.int64)
-        self.active = np.zeros(self.slots, bool)
-        # per-slot sampling knobs: plain DATA through the one jitted step
-        # (greedy defaults; a sampled request overwrites them at admission)
-        self.knobs = {k: np.full(self.slots, KNOB_GREEDY[k], KNOB_DTYPES[k])
-                      for k in KNOB_DTYPES}
-        self._cur: Optional[np.ndarray] = None     # next input per slot
+        self.st = SlotTable(self.slots, pool=self.pool,
+                            pages_for_req=self._pages_for_req)
         self._uid = 0
         # telemetry
         self.n_steps = 0
@@ -144,14 +160,67 @@ class ServeEngine:
         self.n_prefix_tokens = 0    # prompt positions skipped by attaches
         self.n_cow_copies = 0       # device page copies (decode COW)
         self.n_forks = 0
-        self.finished: List[Request] = []
+        self.n_preemptions = 0      # victims evicted by the policy
+
+    # -- back-compat views onto the SlotTable ---------------------------
+    # (tests and user code address scheduling state through the engine;
+    # the STATE layer owns it, these read straight through)
+    @property
+    def free_mask(self) -> int:
+        return self.st.free_mask
+
+    @property
+    def waiting(self):
+        return self.st.waiting
+
+    @property
+    def slot_req(self):
+        return self.st.slot_req
+
+    @property
+    def pos(self):
+        return self.st.pos
+
+    @property
+    def remaining(self):
+        return self.st.remaining
+
+    @property
+    def active(self):
+        return self.st.active
+
+    @property
+    def knobs(self):
+        return self.st.knobs
+
+    @property
+    def finished(self):
+        return self.st.finished
+
+    @property
+    def _cur(self):
+        return self.st.cur
+
+    @_cur.setter
+    def _cur(self, v):
+        self.st.cur = v
+
+    def _pages_for_req(self, req: Request) -> int:
+        """Worst-case reservation: prompt + full budget.  A resumed
+        (preempted) request reserves by the SAME formula — its live
+        chain never exceeds it, so restore cannot fail mid-resume."""
+        if self.pool is None:
+            return 0
+        return self.sm.pages_for(len(req.prompt) + req.max_new_tokens)
 
     # ------------------------------------------------------------------
     # submission / admission
     # ------------------------------------------------------------------
     def submit(self, prompt, max_new_tokens: int = 0,
                eos_id: Optional[int] = None,
-               sampling: Optional[SamplingParams] = None) -> Request:
+               sampling: Optional[SamplingParams] = None, *,
+               priority: int = 0,
+               deadline: Optional[float] = None) -> Request:
         prompt = np.asarray(prompt)
         # ndim first: len() of a 0-d array raises TypeError, and a bare
         # scalar submission deserves the same clean rejection as []
@@ -190,31 +259,12 @@ class ServeEngine:
                 # guarantees the pool holds one max-length request, so
                 # any request accepted here fits an empty pool and
                 # admission only ever DEFERS (see admit())
-        req = Request(self._uid, prompt, max_new_tokens, eos_id, sampling)
+        req = Request(self._uid, prompt, max_new_tokens, eos_id, sampling,
+                      priority=priority, deadline=deadline)
+        req.validate_scheduling()          # raises BEFORE the uid burns
         self._uid += 1
-        self.waiting.append(req)
+        self.st.waiting.append(req)
         return req
-
-    def _alloc_slot(self) -> int:
-        bit = int(self.free_mask & -self.free_mask)
-        self.free_mask = int(self.free_mask) ^ bit
-        return bit.bit_length() - 1
-
-    def _free_slot(self, slot: int):
-        self.free_mask = int(self.free_mask) | (1 << int(slot))
-        self.slot_req[slot] = None
-        self.active[slot] = False
-        if self.pool is not None:
-            # pages (and the unused reservation tail) go straight back
-            # into circulation; the pool content is NOT cleared — any
-            # future read of a recycled page is position-masked
-            self.pool.release(slot)
-        for k, v in KNOB_GREEDY.items():
-            self.knobs[k][slot] = v
-
-    def _set_sampling(self, slot: int, req: Request):
-        for k, v in _knob_values(req).items():
-            self.knobs[k][slot] = v
 
     def _wave_sampling(self, group, pad_len):
         """Per-request sampling knob arrays for an admission wave (padding
@@ -240,54 +290,73 @@ class ServeEngine:
         progress is possible.  Looping matters: a slot freed MID-wave
         (eos or ``max_new_tokens==1`` on the wave's first sampled token
         retires it inside the prefill loop) refills in the SAME call
-        instead of idling for a whole decode step."""
-        while self._admit_once():
-            pass
+        instead of idling for a whole decode step.
+
+        When admission stalls, the policy may name a running victim to
+        PREEMPT (``select_victim``); its eviction frees a slot + pages
+        and admission retries.  Termination: each pass either admits a
+        request or shrinks the running set, and ``select_victim``
+        returning None ends the round."""
+        self.policy.begin_round(self.st)
+        while True:
+            if self._admit_once():
+                continue
+            victim = self.policy.select_victim(self.st)
+            if victim is None:
+                break
+            self._preempt(victim)
 
     def _admit_once(self) -> bool:
         """One admission wave: same-length prompts prefill as one batched
         chunked call, their carries land in one scatter write, and the
         wave costs one host sync — admission overhead amortizes over the
-        wave.  Returns True iff at least one request was admitted.
+        wave.  Returns True iff at least one request was admitted (or a
+        preempted one resumed).
+
+        The POLICY picks the wave: admission tries candidates in
+        ``policy.admit_order`` and stops at the first it cannot place —
+        under "fifo" that is exactly the historical strict-FIFO
+        defer-at-head loop (no bypass by smaller requests behind the
+        head; head-of-line blocking is the price of starvation-freedom).
 
         Paged KV: admission additionally RESERVES the request's
         worst-case page chain (prompt + full generation budget) — the
         FULL worst case even when a prefix attach or fork will share
         pages, so sharing is an opportunistic saving, never load-bearing
         capacity, and decode-time page appends / COW copies can never
-        fail.  When the pool cannot cover the next request's reservation
-        the queue DEFERS — strictly FIFO, no bypass by smaller requests
-        behind it (head-of-line blocking is the price of
-        starvation-freedom) — and retries as finished requests release
-        pages.  Requests that can never fit were already rejected at
+        fail.  Requests that can never fit were already rejected at
         submit().
 
         Prefix caching runs SINGLETON waves (one request per wave, in
-        FIFO order): each admission inserts its prompt's pages before
+        policy order): each admission inserts its prompt's pages before
         the next request's cache lookup, so same-batch duplicates hit
         too."""
+        st = self.st
         admitted = []
-        while self.waiting and self.free_mask:
-            req = self.waiting[0]
+        resumed = False
+        while st.waiting and st.free_mask:
+            req = self.policy.admit_order(st.waiting, st)[0]
             if self.pool is not None and not self.pool.can_admit(
-                    self.sm.pages_for(len(req.prompt)
-                                      + req.max_new_tokens)):
+                    self._pages_for_req(req)):
                 break                      # defer until pages free up
-            self.waiting.popleft()
-            slot = self._alloc_slot()
+            st.pop_waiting(req)
+            slot = st.alloc_slot()
             if self.pool is not None:
-                self.pool.reserve(slot, self.sm.pages_for(
-                    len(req.prompt) + req.max_new_tokens))
-            self.slot_req[slot] = req
-            self.active[slot] = True
+                self.pool.reserve(slot, self._pages_for_req(req))
+            st.slot_req[slot] = req
+            if req.snapshot is not None:
+                self._resume(req, slot)    # no prefill: pages re-seed
+                resumed = True
+                continue
+            st.active[slot] = True
             admitted.append((req, slot))
-            if self._cur is None:
+            if st.cur is None:
                 shape = (self.slots,) + tuple(req.prompt.shape[1:])
-                self._cur = np.zeros(shape, req.prompt.dtype)
+                st.cur = np.zeros(shape, req.prompt.dtype)
             if self.prefix_cache is not None:
                 break                      # singleton waves (see above)
         if not admitted:
-            return False
+            return resumed
         if not self.sm.autoregressive:
             # streaming: blank state reset for the whole wave in one write
             slots = [s for _r, s in admitted]
@@ -295,9 +364,9 @@ class ServeEngine:
             blank = self.sm.init_state(len(pad))
             self.state = self.sm.write_slots(self.state, blank, pad)
             for req, slot in admitted:
-                self.pos[slot] = 0
-                self.remaining[slot] = len(req.prompt)
-                self._cur[slot] = req.prompt[0]
+                st.pos[slot] = 0
+                st.remaining[slot] = len(req.prompt)
+                st.cur[slot] = req.prompt[0]
             return True
         groups: dict = {}
         for req, slot in admitted:
@@ -357,6 +426,7 @@ class ServeEngine:
     def _install_wave(self, plen, group, last, carry):
         """Scatter a prefilled wave into its slots, pin its prompts in
         the prefix cache, and draw/book-keep the first sampled token."""
+        st = self.st
         slots = [s for _r, s in group]
         pad = self._pad_slots(slots)
         if self.pool is None:
@@ -386,47 +456,94 @@ class ServeEngine:
             t = int(tok0[i])
             req.outputs.append(t)
             self.n_emitted += 1
-            self.pos[slot] = plen
-            self.remaining[slot] = req.max_new_tokens - 1
-            self._cur[slot] = t
-            self._set_sampling(slot, req)
-            if self.remaining[slot] <= 0 or t == req.eos_id:
-                self._retire(slot)
+            st.pos[slot] = plen
+            st.remaining[slot] = req.max_new_tokens - 1
+            st.cur[slot] = t
+            st.set_sampling(slot, req)
+            if st.remaining[slot] <= 0 or t == req.eos_id:
+                st.retire(slot)
+
+    # ------------------------------------------------------------------
+    # preemption (policy-driven victim swap-out / swap-in)
+    # ------------------------------------------------------------------
+    def _preempt(self, slot: int):
+        """Evict running ``slot``: device_get exactly its page chain +
+        per-slot carry to host memory, release its pages/reservation and
+        put the request back on the queue holding the snapshot.  Eager
+        transfers only — the jitted step's compile count stays 1."""
+        st = self.st
+        req = st.slot_req[slot]
+        if req is None or not st.active[slot]:
+            raise ValueError(f"slot {slot} is not running (cannot "
+                             "preempt)")
+        if self.pool is None:
+            raise ValueError("preemption needs kv_layout='paged' (page "
+                             "swap is what makes eviction cheap)")
+        n = int(self.pool.chain_len[slot])
+        pages = self.pool.block_tables[slot, :n].copy()
+        req.snapshot = {
+            "n_pages": n,
+            "state": self.sm.snapshot_slot(self.state, slot, pages),
+            "pos": int(st.pos[slot]),
+            "remaining": int(st.remaining[slot]),
+            "cur": np.copy(st.cur[slot]),
+        }
+        req.n_preemptions += 1
+        self.n_preemptions += 1
+        st.free_slot(slot)                 # pages + reservation go back
+        # appendleft: a policy that keeps arrival order re-tries the
+        # victim first; ordering policies re-sort anyway
+        st.waiting.appendleft(req)
+
+    def _resume(self, req: Request, slot: int):
+        """Re-admit a preempted request (caller holds slot+reservation):
+        grow a FRESH chain, re-seed its pages from the snapshot, restore
+        the per-slot carry/counters — then decode continues mid-stream,
+        bitwise where it left off.  No prefill, no first-token draw."""
+        st = self.st
+        snap = req.snapshot
+        self.pool.grow(slot, snap["n_pages"])
+        pages = self.pool.block_tables[slot, :snap["n_pages"]]
+        self.state = self.sm.restore_slot(self.state, snap["state"],
+                                          slot, pages)
+        st.pos[slot] = snap["pos"]
+        st.remaining[slot] = snap["remaining"]
+        st.cur[slot] = snap["cur"]
+        st.set_sampling(slot, req)
+        st.active[slot] = True
+        req.snapshot = None                # drop the host bytes
 
     # ------------------------------------------------------------------
     # decode
     # ------------------------------------------------------------------
     def _retire(self, slot: int):
-        req = self.slot_req[slot]
-        req.finished = True
-        self.finished.append(req)
-        self._free_slot(slot)
+        self.st.retire(slot)
 
     def cancel(self, req: Request):
-        """Abort a request: a waiting one leaves the queue, a running one
-        frees its slot (and, under the paged layout, its pages) before
-        the next step.  Tokens already emitted stay on the request, which
-        is marked finished+cancelled and never joins ``finished``."""
+        """Abort a request: a waiting one leaves the queue (the pool is
+        never touched — a queued request holds no slot, pages or
+        reservation), a running one frees its slot (and, under the paged
+        layout, its pages) before the next step.  Tokens already emitted
+        stay on the request, which is marked finished+cancelled and
+        never joins ``finished``."""
         if req.finished:
             return
-        # identity matches only: Request.__eq__ would compare prompt
-        # arrays elementwise, and a LOOKALIKE request must not be freed
-        if any(r is req for r in self.waiting):
-            self.waiting = deque(r for r in self.waiting if r is not req)
-        else:
-            for slot, r in enumerate(self.slot_req):
+        if not self.st.discard_waiting(req):
+            for slot, r in enumerate(self.st.slot_req):
                 if r is req:
-                    self._free_slot(slot)
+                    self.st.free_slot(slot)
                     break
             else:
                 raise ValueError("request is not known to this engine")
+        req.snapshot = None                # a preempted wait drops bytes
         req.finished = True
         req.cancelled = True
 
     def step(self):
         """Admit what fits, then run ONE slot-batched decode step."""
         self.admit()
-        if not self.active.any():
+        st = self.st
+        if not st.active.any():
             return
         bt = None
         if self.pool is not None:
@@ -438,10 +555,10 @@ class ServeEngine:
             # it) first detaches to a private copy; the device copies
             # for the whole step batch run as ONE jitted program.
             cow_src, cow_dst = [], []
-            for slot in np.flatnonzero(self.active):
+            for slot in np.flatnonzero(st.active):
                 self.pool.grow(slot,
-                               self.sm.pages_for(int(self.pos[slot]) + 1))
-                for ci in self.sm.write_page_indices(int(self.pos[slot])):
+                               self.sm.pages_for(int(st.pos[slot]) + 1))
+                for ci in self.sm.write_page_indices(int(st.pos[slot])):
                     pair = self.pool.cow(slot, ci)
                     if pair is not None:
                         cow_src.append(pair[0])
@@ -451,34 +568,34 @@ class ServeEngine:
                                                 cow_dst)
                 self.n_cow_copies += len(cow_src)
             bt = self.pool.block_tables
-        active = jnp.asarray(self.active)
-        pos = jnp.asarray(self.pos)
-        x = jnp.asarray(self._cur)
+        active = jnp.asarray(st.active)
+        pos = jnp.asarray(st.pos)
+        x = jnp.asarray(st.cur)
         sampling = None
         if self.sm.autoregressive:
-            sampling = {k: jnp.asarray(v) for k, v in self.knobs.items()}
+            sampling = {k: jnp.asarray(v) for k, v in st.knobs.items()}
         kw = {} if bt is None else {"bt": bt}
         out, self.state = self.sm.step(self.params, x, self.state, pos,
                                        active, sampling, **kw)
         emitted = np.asarray(out)
         self.n_steps += 1
-        for slot in np.flatnonzero(self.active):
-            req = self.slot_req[slot]
+        for slot in np.flatnonzero(st.active):
+            req = st.slot_req[slot]
             req.outputs.append(emitted[slot].copy())
             self.n_emitted += 1
             self._n_decoded += 1
-            self.pos[slot] += 1
-            self.remaining[slot] -= 1
+            st.pos[slot] += 1
+            st.remaining[slot] -= 1
             if self.sm.autoregressive:
-                self._cur[slot] = emitted[slot]
-                done = (self.remaining[slot] <= 0
+                st.cur[slot] = emitted[slot]
+                done = (st.remaining[slot] <= 0
                         or emitted[slot] == req.eos_id)
             else:
-                done = self.remaining[slot] <= 0
+                done = st.remaining[slot] <= 0
                 if not done:
-                    self._cur[slot] = req.prompt[self.pos[slot]]
+                    st.cur[slot] = req.prompt[st.pos[slot]]
             if done:
-                self._retire(slot)
+                st.retire(slot)
 
     def fork(self, req: Request, n: int = 1, *,
              max_new_tokens: Optional[int] = None,
@@ -501,12 +618,13 @@ class ServeEngine:
         Children need a free slot and a full worst-case reservation NOW
         — fork raises rather than queueing (a queued fork would race the
         parent's ongoing decode)."""
+        st = self.st
         if self.pool is None:
             raise ValueError("fork() needs kv_layout='paged' (page "
                              "sharing is what makes a fork O(1))")
         if not self.sm.autoregressive:
             raise ValueError("fork() applies to LM requests only")
-        parent = next((s for s, r in enumerate(self.slot_req)
+        parent = next((s for s, r in enumerate(st.slot_req)
                        if r is req), None)
         if parent is None:
             raise ValueError(
@@ -516,8 +634,8 @@ class ServeEngine:
             sampling.validate()
         children: List[Request] = []
         for _ in range(int(n)):
-            pos = int(self.pos[parent])
-            budget = (int(self.remaining[parent])
+            pos = int(st.pos[parent])
+            budget = (int(st.remaining[parent])
                       if max_new_tokens is None else int(max_new_tokens))
             if budget < 1:
                 raise ValueError(f"fork needs a generation budget >= 1, "
@@ -526,7 +644,7 @@ class ServeEngine:
                 raise ValueError(
                     f"fork at position {pos} + {budget} new tokens "
                     f"exceeds max_len={self.sm.max_len}")
-            if not self.free_mask:
+            if not st.free_mask:
                 raise RuntimeError("no free slot to fork into")
             need = self.sm.pages_for(pos + budget)
             if not self.pool.can_admit(need):
@@ -535,7 +653,7 @@ class ServeEngine:
                     f"pages but only {self.pool.available} are "
                     "unreserved (shared pages don't count — "
                     "reservations stay worst-case under sharing)")
-            slot = self._alloc_slot()
+            slot = st.alloc_slot()
             self.pool.reserve(slot, need)
             nchain = int(self.pool.chain_len[parent])
             self.pool.share(slot,
@@ -543,42 +661,46 @@ class ServeEngine:
             samp = (dataclasses.replace(sampling) if sampling is not None
                     else dataclasses.replace(req.sampling))
             child = Request(self._uid, req.prompt, budget, req.eos_id,
-                            samp)
+                            samp, priority=req.priority,
+                            deadline=req.deadline)
             self._uid += 1
             child.outputs = list(req.outputs)
-            self.slot_req[slot] = child
-            self.active[slot] = True
-            self.pos[slot] = self.pos[parent]
-            self.remaining[slot] = budget
-            self._cur[slot] = self._cur[parent]
-            self._set_sampling(slot, child)
+            st.slot_req[slot] = child
+            st.active[slot] = True
+            st.pos[slot] = st.pos[parent]
+            st.remaining[slot] = budget
+            st.cur[slot] = st.cur[parent]
+            st.set_sampling(slot, child)
             self.state = self.sm.copy_slot(self.state, parent, slot)
             self.n_forks += 1
             children.append(child)
         return children
 
-    def run(self, max_steps: Optional[int] = None) -> List[Request]:
+    def run(self, max_steps: Optional[int] = None, *,
+            verbose: bool = False) -> List[Request]:
         """Drive until every submitted request finishes; returns them in
-        completion order.
+        completion order.  ``verbose=True`` prints a :meth:`stats` line
+        after every step (occupancy, queue, pool pages, preemptions).
 
         Deadlock guard: a step with nothing active, nothing retired and
         a non-empty queue can never make progress (no running request
         will ever free the pages the queue's head is deferred on) — the
         old loop busy-spun forever; now it raises, naming the blocked
         request and the pool state."""
+        st = self.st
         steps = 0
-        while self.waiting or self.active.any():
-            n_finished = len(self.finished)
+        while st.waiting or st.active.any():
+            n_finished = len(st.finished)
             self.step()
+            if verbose:
+                print(self.stats().line())
             steps += 1
             if max_steps is not None and steps >= max_steps:
                 break
-            if (self.waiting and not self.active.any()
-                    and len(self.finished) == n_finished):
-                head = self.waiting[0]
-                need = (self.sm.pages_for(len(head.prompt)
-                                          + head.max_new_tokens)
-                        if self.pool is not None else 0)
+            if (st.waiting and not st.active.any()
+                    and len(st.finished) == n_finished):
+                head = st.waiting[0]
+                need = self._pages_for_req(head)
                 pool = ("no page pool" if self.pool is None else
                         f"pool: {self.pool.available} of "
                         f"{self.pool.num_pages} pages unreserved, "
@@ -589,15 +711,32 @@ class ServeEngine:
                     f"(prompt={len(head.prompt)} tokens, "
                     f"max_new_tokens={head.max_new_tokens}, needs "
                     f"{need} pages) cannot admit, no slot is active to "
-                    f"free capacity, and {len(self.waiting)} request(s) "
+                    f"free capacity, and {len(st.waiting)} request(s) "
                     f"wait behind it — {pool}")
-        return self.finished
+        return st.finished
 
     # ------------------------------------------------------------------
+    # observability
+    # ------------------------------------------------------------------
+    def stats(self) -> EngineStats:
+        """Current occupancy snapshot (see :class:`EngineStats`)."""
+        paid = self.n_steps * self.slots
+        return EngineStats(
+            policy=self.policy.name,
+            n_steps=self.n_steps,
+            slots=self.slots,
+            active_slots=self.st.n_active,
+            queue_depth=self.st.queue_depth,
+            pages_in_use=(self.pool.pages_in_use if self.pool else 0),
+            pages_free=(len(self.pool._free) if self.pool else 0),
+            pages_reserved=(self.pool.reserved_total if self.pool
+                            else 0),
+            n_preemptions=self.n_preemptions,
+            utilization=self._n_decoded / paid if paid else 0.0)
+
     @property
     def utilization(self) -> float:
         """Decode-emitted tokens per slot-step actually paid for (tokens
         produced by admission prefill are excluded — they cost prefill
         FLOPs, not decode slot-steps)."""
-        paid = self.n_steps * self.slots
-        return self._n_decoded / paid if paid else 0.0
+        return self.stats().utilization

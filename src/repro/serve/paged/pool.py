@@ -215,12 +215,29 @@ class PagePool:
 
     def decref(self, pages: Sequence[int]) -> List[int]:
         """Drop an external hold; pages hitting refcount zero return to
-        the free list.  Returns the freed page ids."""
+        the free list.  Returns the freed page ids.
+
+        Validates the WHOLE batch (with multiplicity — the same id may
+        legally appear once per distinct hold) BEFORE mutating: a
+        refcount underflow raises ValueError and leaves the pool
+        untouched, instead of half-applying the batch and pushing a
+        still-live page onto the free list where the next ``_pop``
+        would hand it to a second writer."""
+        pages = [int(p) for p in pages]
+        need: dict = {}
+        for p in pages:
+            need[p] = need.get(p, 0) + 1
+        for p, n in need.items():
+            if not 0 <= p < self.num_pages:
+                raise ValueError(f"page {p} is not a page id "
+                                 f"(pool holds {self.num_pages})")
+            if self.refcount[p] < n:
+                raise ValueError(
+                    f"page {p} refcount underflow (double-free): "
+                    f"dropping {n} hold(s) but only "
+                    f"{int(self.refcount[p])} exist")
         freed = []
         for p in pages:
-            p = int(p)
-            if self.refcount[p] < 1:
-                raise RuntimeError(f"page {p} double-free")
             self.refcount[p] -= 1
             if self.refcount[p] == 0:
                 self._free.append(p)
@@ -231,9 +248,18 @@ class PagePool:
     def release(self, slot: int):
         """Finish/cancel: decrement the chain's refcounts (pages return
         to the free list only at zero — a fork or prefix hold keeps them
-        alive) and drop the remaining reservation.  Idempotent for an
-        empty slot."""
+        alive) and drop the remaining reservation.
+
+        Raises ValueError on a double release: a slot holding neither a
+        chain nor a reservation has nothing to give back, so a second
+        release means two owners think they freed it — the old
+        silent-no-op behavior let that bug ride until the free list
+        aliased."""
         n = int(self.chain_len[slot])
+        if n == 0 and not self._reserved[slot]:
+            raise ValueError(
+                f"slot {slot} double-release: it holds no chain and no "
+                "reservation")
         self.decref(self.block_tables[slot, :n])
         self.reserved_total -= int(self._reserved[slot])
         self._reserved[slot] = 0

@@ -463,6 +463,72 @@ class DecoderStepModel(StepModel):
             cache = self.place_cache(cache)
         return cache
 
+    # -- preemption (scheduler victim swap-out / swap-in) ----------------
+    def snapshot_slot(self, state, slot, pages):
+        """Host snapshot of everything slot ``slot`` owns: its chain's
+        page rows (``pages`` = the physical ids, from the block table)
+        out of every pool leaf, plus its per-slot row of every non-pool
+        (O(1)-state) leaf — so hybrid recurrent/attention stacks swap
+        out whole.  Eager ops + one ``device_get``: preemption is a
+        rare host-paced event, so it buys no extra jitted program and
+        the decode step's compile count stays 1.  Int8 pools snapshot
+        codes AND ``<key>_scale`` rows (they ride the same subtree), so
+        a restore reproduces the quantized bytes bit-exactly."""
+        if self.kv_layout != "paged":
+            raise ValueError("preemption snapshots need kv_layout="
+                             "'paged' (page swap is what makes them "
+                             "cheap)")
+        pg = jnp.asarray(pages, jnp.int32)
+        snap = {}
+        for name, sub in state.items():
+            ax = self._slot_axis[name]
+            if name in self._pool_names:
+                def take(s, ax=ax):
+                    return jnp.take(s, pg, axis=ax)
+            else:
+                def take(s, ax=ax):
+                    return jax.lax.index_in_dim(s, int(slot), axis=ax,
+                                                keepdims=False)
+            snap[name] = jax.tree_util.tree_map(take, sub)
+        return jax.device_get(snap)
+
+    def restore_slot(self, state, snap, slot, pages):
+        """Inverse of :meth:`snapshot_slot`: install a host snapshot
+        into ``slot`` under a FRESH page chain ``pages``.  The new ids
+        need not match the snapshotted ones — every decode read goes
+        through the block table, so the resumed stream sees identical
+        bytes at identical positions and (with the counter-based PRNG
+        keyed on (seed, uid, pos)) decodes bitwise-equal to a run that
+        was never preempted."""
+        if self.kv_layout != "paged":
+            raise ValueError("preemption restores need kv_layout="
+                             "'paged'")
+        pg = jnp.asarray(pages, jnp.int32)
+        slot = int(slot)
+        out = {}
+        for name, sub in state.items():
+            ax = self._slot_axis[name]
+            if name in self._pool_names:
+                def put(s, v, ax=ax):
+                    v = jnp.asarray(v, s.dtype)
+                    if ax == 0:
+                        return s.at[pg].set(v)
+                    return s.at[:, pg].set(v)
+            else:
+                def put(s, v, ax=ax):
+                    v = jnp.asarray(v, s.dtype)
+                    if ax == 0:
+                        return s.at[slot].set(v)
+                    return s.at[:, slot].set(v)
+            out[name] = jax.tree_util.tree_map(put, sub, snap[name])
+        if self.mesh is not None:
+            # eager scatters can drift placement — re-pin to the serve
+            # cache shardings so the next jitted step sees the one
+            # placement it was compiled for
+            out = jax.device_put(
+                out, self._state_sharding(self.mesh, self._bound_slots))
+        return out
+
     # -- mesh placement --------------------------------------------------
     def state_spec(self, batch):
         """ShapeDtypeStruct tree of init_state(batch) (no allocation)."""

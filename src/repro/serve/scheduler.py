@@ -1,0 +1,163 @@
+"""Pluggable admission/preemption policies (the SCHEDULER layer).
+
+A :class:`SchedulingPolicy` decides two things, and only two things:
+
+  * ``admit_order(queue, state)`` — the order in which waiting requests
+    should be considered for admission.  The engine admits greedily from
+    the front of this order and STOPS at the first candidate it cannot
+    place (head-of-line within the policy's order): under ``fifo`` that
+    is byte-for-byte the old strict-FIFO defer-at-head admission, under
+    ``priority``/``sjf`` the head-of-line victim is a policy choice, not
+    an accident of arrival order.
+  * ``select_victim(state)`` — optionally name a RUNNING slot to preempt
+    when the policy-ordered head is blocked (no free slot, or the page
+    pool cannot cover its reservation).  The engine swaps the victim's
+    page chain + carry to host memory, releases its pages, and re-queues
+    it for later resume (see ``ServeEngine._preempt``); preempted-then-
+    resumed streams are bitwise-equal to undisturbed runs.  Returning
+    ``None`` (the default) disables preemption.
+
+Policies see only the host-side :class:`~repro.serve.state.SlotTable`
+— never device state or compiled programs — so a new policy is a few
+lines of pure python with no retrace risk: the executor's jitted step
+is the same ONE compiled program under every policy.
+
+Determinism contract: every ordering ties-breaks on the request uid
+(submission order), so a policy's decisions are a pure function of the
+submitted workload — re-running the same submissions reproduces the
+same admission order, the same preemptions, and (with the gather paged
+impl) the same bits.
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+from repro.serve.state import Request, SlotTable
+
+#: Legal values of the engine's ``policy=`` knob / ``--policy`` flag.
+POLICIES = ("fifo", "priority", "sjf")
+
+
+class SchedulingPolicy:
+    """Contract only; see module docstring."""
+
+    name: str = "base"
+
+    def begin_round(self, state: SlotTable):
+        """Hook: called once per admission round (one engine step),
+        before any ``admit_order`` call — aging counters live here."""
+
+    def admit_order(self, queue, state: SlotTable) -> List[Request]:
+        """Waiting requests in the order admission should try them."""
+        raise NotImplementedError
+
+    def select_victim(self, state: SlotTable) -> Optional[int]:
+        """Slot to preempt so the blocked head can admit, or None."""
+        return None
+
+    def _head_blocked(self, state: SlotTable) -> Optional[Request]:
+        """The policy-ordered head iff it cannot currently admit (the
+        only situation preemption may consider a victim for)."""
+        if not state.waiting:
+            return None
+        head = self.admit_order(state.waiting, state)[0]
+        if state.free_mask and (state.pool is None or
+                                state.pool.can_admit(
+                                    state.pages_needed(head))):
+            return None                    # nothing blocked — no victim
+        return head
+
+    def __repr__(self):
+        return f"{type(self).__name__}()"
+
+
+class FIFOPolicy(SchedulingPolicy):
+    """Strict arrival order with defer-at-head — byte-for-byte the
+    engine's historical admission (head-of-line blocking is the price
+    of starvation-freedom).  Never preempts."""
+
+    name = "fifo"
+
+    def admit_order(self, queue, state):
+        return list(queue)
+
+
+class PriorityPolicy(SchedulingPolicy):
+    """Per-request priority classes (``submit(priority=...)``, higher
+    first), uid tie-break inside a class.  When the highest-priority
+    waiting request is blocked, the lowest-priority running request
+    (youngest — largest uid — within the class, so the least work is
+    thrown away per eviction... the youngest has decoded fewest tokens
+    under equal budgets) is offered as a preemption victim, but only on
+    a STRICT priority gap: equal-priority traffic never thrashes."""
+
+    name = "priority"
+
+    def __init__(self, preempt: bool = True):
+        self.preempt = bool(preempt)
+
+    def admit_order(self, queue, state):
+        return sorted(queue, key=lambda r: (-r.priority, r.uid))
+
+    def select_victim(self, state):
+        if not self.preempt or state.pool is None:
+            return None                   # page swap is what makes
+        head = self._head_blocked(state)  # eviction cheap — paged only
+        if head is None:
+            return None
+        victim = None
+        for slot, r in state.running():
+            key = (r.priority, -r.uid)
+            if victim is None or key < victim[0]:
+                victim = (key, slot)
+        if victim is not None and victim[0][0] < head.priority:
+            return victim[1]
+        return None
+
+
+class SJFPolicy(SchedulingPolicy):
+    """Shortest-prefill-first with aging.  The admission key is
+    ``prefill_cost - aging * rounds_waited`` (uid tie-break): short
+    prompts jump the queue, but every waiting request's key falls by
+    ``aging`` per engine step, so a prompt of length P is guaranteed to
+    outrank ANY newcomer after at most ceil((P - 1) / aging) rounds —
+    the starvation bound the policy tests pin.  Preempted requests have
+    zero prefill left (their pages resume from host bytes), so they
+    re-admit ahead of fresh prompts.  Never preempts on its own."""
+
+    name = "sjf"
+
+    def __init__(self, aging: float = 1.0):
+        if not aging > 0:
+            raise ValueError(f"aging must be > 0, got {aging}")
+        self.aging = float(aging)
+        self._age = {}                    # uid -> rounds spent waiting
+
+    def begin_round(self, state):
+        live = {r.uid for r in state.waiting}
+        for uid in live:
+            self._age[uid] = self._age.get(uid, -1) + 1
+        for uid in set(self._age) - live:  # admitted / cancelled: forget
+            del self._age[uid]
+
+    def _cost(self, req):
+        plen = 0 if req.snapshot is not None else len(req.prompt)
+        return plen - self.aging * self._age.get(req.uid, 0)
+
+    def admit_order(self, queue, state):
+        return sorted(queue, key=lambda r: (self._cost(r), r.uid))
+
+
+def make_policy(policy) -> SchedulingPolicy:
+    """Resolve the engine's ``policy=`` knob: a name from
+    :data:`POLICIES` or an already-built SchedulingPolicy instance."""
+    if isinstance(policy, SchedulingPolicy):
+        return policy
+    if policy == "fifo":
+        return FIFOPolicy()
+    if policy == "priority":
+        return PriorityPolicy()
+    if policy == "sjf":
+        return SJFPolicy()
+    raise ValueError(f"policy must be one of {POLICIES} or a "
+                     f"SchedulingPolicy instance, got {policy!r}")

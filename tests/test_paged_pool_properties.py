@@ -153,6 +153,81 @@ def test_pool_properties_hypothesis():
     prop()
 
 
+def _fingerprint(pool):
+    """Every observable allocator field, copied."""
+    return (pool.block_tables.copy(), pool.chain_len.copy(),
+            pool.refcount.copy(), list(pool._free),
+            pool._reserved.copy(), int(pool.reserved_total),
+            int(pool.n_cow))
+
+
+def _assert_unchanged(pool, fp):
+    bt, cl, rc, free, res, rt, ncow = fp
+    assert (pool.block_tables == bt).all()
+    assert (pool.chain_len == cl).all()
+    assert (pool.refcount == rc).all()
+    assert pool._free == free
+    assert (pool._reserved == res).all()
+    assert pool.reserved_total == rt and pool.n_cow == ncow
+
+
+def _misuse_leaves_pool_unchanged(ops):
+    """Drive the pool through a valid op sequence, then prove that every
+    flavor of refcount underflow / double release raises ValueError and
+    leaves the allocator EXACTLY as it was — the failed call must not
+    half-apply (the old code pushed pages to the free list as it walked
+    the batch, so an underflow mid-batch corrupted the free list)."""
+    sh = Shadow(PagePool(NUM_PAGES, SLOTS, MAX_PAGES))
+    for code, r in ops:
+        apply_op(sh, code % N_OPS, r)
+    pool = sh.pool
+    fp = _fingerprint(pool)
+    dead = [p for p in range(pool.num_pages) if pool.refcount[p] == 0]
+    live = [p for p in range(pool.num_pages) if pool.refcount[p] >= 1]
+    if dead:  # underflow on a dead page
+        with pytest.raises(ValueError, match="double-free"):
+            pool.decref([dead[0]])
+        _assert_unchanged(pool, fp)
+    if live and dead:  # live prefix, dead tail: nothing may half-apply
+        with pytest.raises(ValueError, match="double-free"):
+            pool.decref([live[0], dead[0]])
+        _assert_unchanged(pool, fp)
+    singles = [p for p in live if pool.refcount[p] == 1]
+    if singles:  # duplicate ids in ONE call must count with multiplicity
+        with pytest.raises(ValueError, match="double-free"):
+            pool.decref([singles[0], singles[0]])
+        _assert_unchanged(pool, fp)
+    empty = [s for s in range(pool.slots)
+             if pool.chain_len[s] == 0 and pool._reserved[s] == 0]
+    if empty:  # double release of a slot holding nothing
+        with pytest.raises(ValueError, match="double-release"):
+            pool.release(empty[0])
+        _assert_unchanged(pool, fp)
+    with pytest.raises(ValueError, match="not a page id"):
+        pool.decref([pool.num_pages])
+    _assert_unchanged(pool, fp)
+    check_invariants(sh)
+
+
+def test_pool_misuse_unchanged_seeded():
+    """Always-on fallback for the underflow/double-release property."""
+    for seed in range(25):
+        rng = np.random.default_rng(1000 + seed)
+        ops = [(int(rng.integers(N_OPS)), int(rng.integers(1 << 16)))
+               for _ in range(60)]
+        _misuse_leaves_pool_unchanged(ops)
+
+
+@pytest.mark.skipif(not HAVE_HYPOTHESIS, reason="hypothesis not installed")
+def test_pool_misuse_unchanged_hypothesis():
+    @settings(max_examples=150, deadline=None)
+    @given(st.lists(st.tuples(st.integers(0, N_OPS - 1),
+                              st.integers(0, 1 << 16)), max_size=80))
+    def prop(ops):
+        _misuse_leaves_pool_unchanged(ops)
+    prop()
+
+
 def test_pool_misuse_raises():
     """The guard rails: double reserve, over-reservation growth, sharing
     dead pages, double-free, cow past the chain."""
@@ -169,7 +244,7 @@ def test_pool_misuse_raises():
         pool.cow(0, 3)
     with pytest.raises(RuntimeError, match="not live"):
         pool.incref([7])
-    with pytest.raises(RuntimeError, match="double-free"):
+    with pytest.raises(ValueError, match="double-free"):
         pool.decref([7])
     pool.reserve(1, 2)
     with pytest.raises(RuntimeError, match="not live"):
@@ -177,3 +252,7 @@ def test_pool_misuse_raises():
     pool.release(0)
     pool.release(1)
     assert pool.pages_in_use == 0 and pool.reserved_total == 0
+    # double release: the slot gave back its chain AND reservation above,
+    # so a second release means two owners think they freed it
+    with pytest.raises(ValueError, match="double-release"):
+        pool.release(1)

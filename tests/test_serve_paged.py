@@ -352,7 +352,10 @@ def test_page_pool_allocator_unit():
     assert pool.available == 3 and pool.pages_in_use == 3
     pool.release(1)
     assert pool.available == 6 and pool.pages_in_use == 0
-    pool.release(1)                        # idempotent on empty slot
+    # double-release raises instead of silently no-opping: a second
+    # release means two owners believed they freed the slot
+    with pytest.raises(ValueError, match="double-release"):
+        pool.release(1)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,211 @@
+"""Preemption: evict-running / resume-later is invisible in the bytes.
+
+The contract under test: a preempted-then-resumed stream is BITWISE
+equal to one that was never disturbed — greedy and sampled, across the
+three attention families (global GQA / sliding window / MLA latents),
+pinned against the ``paged_impl="gather"`` oracle (dense decode math
+through the block table).  Two mechanisms make it hold, and both are
+exercised here:
+
+  * the snapshot swaps the request's page BYTES to host memory and
+    re-seeds them into FRESH physical pages on resume (the LIFO free
+    list typically hands the chain back in a different order) — reads
+    go through the block table, so the mapping change is invisible;
+  * the sampling PRNG is counter-based on (seed, uid, pos) — when a
+    token is drawn cannot change what is drawn.
+
+The snapshot/restore path is eager host transfers, so the decode step's
+compile count stays at 1 throughout.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import SamplingParams, get_config
+from repro.models import build_model
+from repro.serve import DecoderStepModel, PagedConfig, ServeEngine
+
+LENS = [(5, 8), (9, 6), (3, 7)]
+SPS = [None, dict(temperature=0.9, top_k=12, seed=3),
+       dict(temperature=1.2, top_p=0.8, seed=5)]
+
+
+def _build(cfg, params, *, policy="fifo", slots=2, max_len=32,
+           num_pages=0, lens=LENS, sps=SPS, submit_all=True):
+    model = build_model(dataclasses.replace(cfg, paged_impl="gather"))
+    sm = DecoderStepModel(model, max_len=max_len, prefill_chunk=8,
+                          kv_layout="paged",
+                          paged=PagedConfig(page_size=4,
+                                            num_pages=num_pages))
+    eng = ServeEngine(sm, params, slots=slots, policy=policy)
+    reqs = []
+    if submit_all:
+        reqs = _submit(eng, cfg, lens, sps)
+    return eng, sm, reqs
+
+
+def _submit(eng, cfg, lens, sps, **kw):
+    rng = np.random.default_rng(1)
+    prompts = [rng.integers(0, cfg.vocab, size=p) for p, _g in lens]
+    return [eng.submit(p, max_new_tokens=g,
+                       sampling=SamplingParams(**sp) if sp else None,
+                       **kw)
+            for p, (_pl, g), sp in zip(prompts, lens, sps)]
+
+
+def _drain(eng, sm, reqs):
+    eng.run()
+    assert sm._jit_step._cache_size() == 1
+    assert eng.pool.pages_in_use == 0 and eng.pool.reserved_total == 0
+    return [list(r.tokens) for r in reqs]
+
+
+@pytest.mark.parametrize("arch", ["smollm-360m-smoke",      # global GQA
+                                  "gemma3-4b-smoke",        # sliding window
+                                  "deepseek-v3-671b-smoke"  # MLA latents
+                                  ])
+def test_preempt_resume_bitwise(arch):
+    """Force-evict EVERY active slot mid-stream, let the engine resume
+    them (into different slots and differently-ordered physical pages),
+    and require the exact undisturbed streams — greedy + sampled."""
+    cfg = get_config(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng0, sm0, reqs0 = _build(cfg, params)
+    ref = _drain(eng0, sm0, reqs0)
+
+    eng, sm, reqs = _build(cfg, params)
+    eng.step()
+    eng.step()
+    victims = [int(s) for s in np.flatnonzero(eng.active)]
+    assert victims                          # mid-stream, nothing finished
+    chains = {s: list(eng.pool.block_tables[s,
+                                            :eng.pool.chain_len[s]])
+              for s in victims}
+    for s in victims:
+        eng._preempt(s)
+    assert not eng.active.any()
+    assert eng.pool.pages_in_use == 0       # pages really went back
+    assert all(r.snapshot is not None
+               for r in eng.waiting if r.n_preemptions)
+    got = _drain(eng, sm, reqs)
+    assert got == ref
+    assert eng.n_preemptions == len(victims)
+    assert sum(r.n_preemptions for r in reqs) == len(victims)
+    assert all(r.snapshot is None for r in reqs)   # host bytes dropped
+    del chains                              # (mapping change is internal)
+
+
+def test_priority_policy_preempts_for_high_priority():
+    """End-to-end policy-driven preemption, blocked on SLOTS: two
+    low-priority requests occupy both slots; a later high-priority
+    arrival evicts the youngest low one, runs, and the victim resumes —
+    every stream bitwise equal to the same traffic under fifo (which
+    never preempts: the arrival just waits)."""
+    cfg = get_config("smollm-360m-smoke")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    lens = [(6, 18), (6, 16), (4, 4)]
+    sps = [None, dict(temperature=0.8, top_k=10, seed=7), None]
+    prios = [0, 0, 5]
+
+    def drive(policy):
+        eng, sm, _ = _build(cfg, params, policy=policy,
+                            submit_all=False)
+        low = _submit(eng, cfg, lens[:2], sps[:2])
+        for i, r in enumerate(low):
+            r.priority = prios[i]           # (already 0; explicit)
+        eng.step()
+        eng.step()
+        high = _submit(eng, cfg, lens[2:], sps[2:], priority=prios[2])
+        reqs = low + high
+        toks = _drain(eng, sm, reqs)
+        order = [eng.finished.index(r) for r in reqs]
+        return toks, order, eng, reqs
+
+    ref_toks, _ref_order, ref_eng, _ = drive("fifo")
+    assert ref_eng.n_preemptions == 0
+    toks, order, eng, reqs = drive("priority")
+    assert toks == ref_toks                 # preemption moved no bytes
+    assert eng.n_preemptions == 1
+    victim = reqs[1]                        # youngest of the low class
+    assert victim.n_preemptions == 1
+    assert order[2] < order[1]              # high finished before victim
+    assert eng.stats().n_preemptions == 1
+
+
+def test_priority_policy_preempts_for_pages():
+    """Same, blocked on PAGES: a slot is free but the pool is fully
+    reserved by the low-priority pair — the eviction is what returns
+    pages.  The victim's reservation comes back to it on resume via the
+    same worst-case formula, so the drain still empties the pool."""
+    cfg = get_config("smollm-360m-smoke")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    lens = [(6, 18), (6, 16), (4, 4)]
+    sps = [None, None, None]
+
+    eng, sm, _ = _build(cfg, params, policy="priority", slots=3,
+                        num_pages=12, submit_all=False)
+    low = _submit(eng, cfg, lens[:2], sps[:2])
+    eng.step()
+    assert int(eng.active.sum()) == 2
+    assert eng.pool.available == 0          # 6 + 6 pages reserved
+    high = _submit(eng, cfg, lens[2:], sps[2:], priority=5)
+    eng.step()
+    assert eng.n_preemptions == 1
+    assert high[0] in [eng.slot_req[s]
+                       for s in np.flatnonzero(eng.active)]
+    toks = _drain(eng, sm, low + high)
+    # bitwise vs an unconstrained fifo run of the same submissions
+    # (same two-batch submit pattern -> same prompt bytes and uids)
+    eng0, sm0, _ = _build(cfg, params, slots=3, submit_all=False)
+    ref_low = _submit(eng0, cfg, lens[:2], sps[:2])
+    ref_high = _submit(eng0, cfg, lens[2:], sps[2:])
+    ref = _drain(eng0, sm0, ref_low + ref_high)
+    assert toks == ref
+
+
+def test_cancel_preempted_request_drops_snapshot():
+    """A preempted request sits in the queue holding only host bytes —
+    cancelling it drops them, touches no pool state (its pages were
+    released at eviction), and the rest of the traffic drains."""
+    cfg = get_config("smollm-360m-smoke")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng, sm, reqs = _build(cfg, params)
+    eng.step()
+    victim = int(np.flatnonzero(eng.active)[0])
+    vreq = eng.slot_req[victim]
+    eng._preempt(victim)
+    assert vreq.snapshot is not None and vreq in eng.waiting
+    fp = (eng.pool.refcount.copy(), list(eng.pool._free),
+          eng.pool.reserved_total)
+    eng.cancel(vreq)
+    assert vreq.cancelled and vreq.snapshot is None
+    assert vreq not in eng.waiting
+    assert (eng.pool.refcount == fp[0]).all()
+    assert eng.pool._free == fp[1] and eng.pool.reserved_total == fp[2]
+    eng.run()
+    assert eng.pool.pages_in_use == 0 and eng.pool.reserved_total == 0
+    assert sm._jit_step._cache_size() == 1
+
+
+def test_preempt_misuse_raises():
+    cfg = get_config("smollm-360m-smoke")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng, _sm, _reqs = _build(cfg, params)
+    with pytest.raises(ValueError, match="not running"):
+        eng._preempt(0)                     # nothing admitted yet
+    # dense engines have no pages to swap
+    dense_sm = DecoderStepModel(build_model(cfg), max_len=32,
+                                prefill_chunk=8)
+    dense = ServeEngine(dense_sm, params, slots=2)
+    rng = np.random.default_rng(0)
+    dense.submit(rng.integers(0, cfg.vocab, 4), max_new_tokens=4)
+    dense.step()
+    with pytest.raises(ValueError, match="paged"):
+        dense._preempt(0)

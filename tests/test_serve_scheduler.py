@@ -1,0 +1,319 @@
+"""Scheduler/state layer: policy ordering, SlotTable lifecycle, the
+submit() scheduling-field validation, cancel-of-queued, and stats().
+
+Policy decisions are host-side list manipulation over the SlotTable —
+deterministic (uid tie-breaks everywhere) and invisible to jit, so the
+unit half of this suite runs with no model at all.  The engine-level
+half pins the load-bearing contracts: ``policy="fifo"`` reproduces the
+legacy admission byte for byte, and NO policy ever changes a request's
+token stream (scheduling moves requests in time, the counter-based PRNG
+keeps their bytes) — only completion ORDER moves.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import SamplingParams, get_config
+from repro.models import build_model
+from repro.serve import (DecoderStepModel, FIFOPolicy, PagedConfig,
+                         PagePool, PriorityPolicy, Request, ServeEngine,
+                         SJFPolicy, SlotTable, make_policy)
+
+
+def _req(uid, plen=4, gen=4, **kw):
+    return Request(uid, np.zeros(plen, np.int32), gen, **kw)
+
+
+# ---------------------------------------------------------------------------
+# policy units (no model, no jit)
+# ---------------------------------------------------------------------------
+
+def test_fifo_admit_order_is_arrival_order():
+    tab = SlotTable(4)
+    reqs = [_req(u, priority=p) for u, p in
+            [(0, 9), (1, 0), (2, 5), (3, 7)]]
+    tab.waiting.extend(reqs)
+    order = FIFOPolicy().admit_order(tab.waiting, tab)
+    assert [r.uid for r in order] == [0, 1, 2, 3]   # priorities ignored
+    assert FIFOPolicy().select_victim(tab) is None
+
+
+def test_priority_order_deterministic_under_shuffle():
+    """Same submitted set -> same order, whatever the arrival shuffle;
+    higher priority first, uid breaks ties inside a class."""
+    base = [(0, 1), (1, 3), (2, 3), (3, 0), (4, 1)]
+    want = [1, 2, 0, 4, 3]
+    pol = PriorityPolicy()
+    rng = np.random.default_rng(0)
+    for _ in range(5):
+        tab = SlotTable(4)
+        perm = rng.permutation(len(base))
+        tab.waiting.extend(_req(u, priority=p)
+                           for u, p in [base[i] for i in perm])
+        assert [r.uid for r in pol.admit_order(tab.waiting, tab)] == want
+
+
+def test_sjf_orders_by_prefill_cost_with_uid_tiebreak():
+    tab = SlotTable(4)
+    tab.waiting.extend([_req(0, plen=9), _req(1, plen=2), _req(2, plen=9),
+                        _req(3, plen=5)])
+    pol = SJFPolicy(aging=1.0)
+    pol.begin_round(tab)
+    assert [r.uid for r in pol.admit_order(tab.waiting, tab)] \
+        == [1, 3, 0, 2]
+    with pytest.raises(ValueError, match="aging"):
+        SJFPolicy(aging=0.0)
+
+
+def test_sjf_aging_bound():
+    """A P-token prompt outranks ANY fresh newcomer after at most
+    ceil((P - 1) / aging) rounds — the starvation bound.  Here P=10,
+    aging=1: by round 9 the old prompt's effective cost has decayed to
+    the newcomer's and its lower uid wins the tie."""
+    P = 10
+    pol = SJFPolicy(aging=1.0)
+    tab = SlotTable(2)
+    old = _req(0, plen=P)
+    tab.waiting.append(old)
+    uid, rounds = 1, None
+    for rnd in range(P + 3):
+        pol.begin_round(tab)
+        tab.waiting.append(_req(uid, plen=1))   # fresh 1-token rival
+        uid += 1
+        head = pol.admit_order(tab.waiting, tab)[0]
+        if head is old:
+            rounds = rnd
+            break
+        tab.pop_waiting(head)                   # rival admits, old waits
+    assert rounds is not None and rounds <= P - 1
+
+
+def test_sjf_resumed_requests_have_zero_prefill_cost():
+    """A preempted request's pages re-seed from host bytes — no prefill
+    left — so SJF re-admits it ahead of fresh prompts."""
+    tab = SlotTable(2)
+    preempted = _req(5, plen=50)
+    preempted.snapshot = {"n_pages": 1}         # any non-None marker
+    tab.waiting.extend([_req(1, plen=2), preempted])
+    pol = SJFPolicy()
+    pol.begin_round(tab)
+    assert pol.admit_order(tab.waiting, tab)[0] is preempted
+
+
+def test_priority_select_victim_strict_gap_only():
+    """Victim = the lowest-priority (then youngest) RUNNING slot, and
+    only when the blocked head outranks it STRICTLY — equal-priority
+    traffic never thrashes."""
+    pool = PagePool(8, 2, 4)
+    tab = SlotTable(2, pool=pool, pages_for_req=lambda r: 4)
+    for uid, prio in [(0, 1), (1, 0)]:
+        s = tab.alloc_slot()
+        pool.reserve(s, 4)
+        r = _req(uid, priority=prio)
+        tab.slot_req[s] = r
+        tab.active[s] = True
+    pol = PriorityPolicy()
+    assert pol.select_victim(tab) is None       # nothing waiting
+    tab.waiting.append(_req(2, priority=5))
+    assert pol.select_victim(tab) == 1          # slot 1: priority 0 < 5
+    for s in (0, 1):                            # equal priority: no gap
+        tab.slot_req[s].priority = 5
+    assert pol.select_victim(tab) is None
+    tab.slot_req[0].priority, tab.slot_req[1].priority = 1, 0
+    assert pol.select_victim(tab) == 1          # gap is back
+    assert PriorityPolicy(preempt=False).select_victim(tab) is None
+    # unpaged state: eviction has no page swap to make it cheap -> None
+    tab2 = SlotTable(2)
+    tab2.waiting.append(_req(9, priority=5))
+    assert pol.select_victim(tab2) is None
+
+
+def test_make_policy_names_and_instances():
+    assert isinstance(make_policy("fifo"), FIFOPolicy)
+    assert isinstance(make_policy("priority"), PriorityPolicy)
+    assert isinstance(make_policy("sjf"), SJFPolicy)
+    pol = SJFPolicy(aging=2.0)
+    assert make_policy(pol) is pol
+    with pytest.raises(ValueError, match="policy must be one of"):
+        make_policy("lifo")
+
+
+def test_slot_table_discard_waiting_identity_only():
+    """Cancel path: only the SAME object leaves the queue — a lookalike
+    (equal prompt bytes) must not be dequeued."""
+    tab = SlotTable(2)
+    a, b = _req(0), _req(1)
+    lookalike = _req(0)
+    tab.waiting.extend([a, b])
+    assert not tab.discard_waiting(lookalike)
+    assert tab.discard_waiting(a)
+    assert list(tab.waiting) == [b]
+    assert not tab.discard_waiting(a)           # already gone
+
+
+# ---------------------------------------------------------------------------
+# submit() scheduling-field validation + cancel-of-queued (satellites)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def gqa():
+    cfg = get_config("smollm-360m-smoke")
+    model = build_model(cfg)
+    return cfg, model, model.init(jax.random.PRNGKey(0))
+
+
+def _engine(cfg, model, params, *, policy="fifo", slots=2, max_len=32,
+            num_pages=0, page_size=4, impl="gather"):
+    m = build_model(dataclasses.replace(cfg, paged_impl=impl)) \
+        if impl else model
+    sm = DecoderStepModel(m, max_len=max_len, prefill_chunk=8,
+                          kv_layout="paged",
+                          paged=PagedConfig(page_size=page_size,
+                                            num_pages=num_pages))
+    return ServeEngine(sm, params, slots=slots, policy=policy), sm
+
+
+def test_submit_validates_priority_and_deadline(gqa):
+    """Satellite: bad scheduling fields die at submit() with a clear
+    ValueError — not deep inside a policy comparison or an int32 slot
+    array — and a failed submit leaves the queue (and uid counter)
+    untouched."""
+    cfg, model, params = gqa
+    eng, _ = _engine(cfg, model, params)
+    prompt = np.arange(4)
+    for bad in [1.5, "high", None, True, 2**31, -2**31 - 1]:
+        with pytest.raises(ValueError, match="priority"):
+            eng.submit(prompt, max_new_tokens=2, priority=bad)
+    for bad in [0.0, -3.0, float("nan"), float("inf"), "soon", True]:
+        with pytest.raises(ValueError, match="deadline"):
+            eng.submit(prompt, max_new_tokens=2, deadline=bad)
+    assert not eng.waiting
+    ok = eng.submit(prompt, max_new_tokens=2, priority=3, deadline=1.5)
+    assert ok.uid == 0                       # failed submits burned no uid
+    assert ok.priority == 3 and ok.deadline == 1.5
+    r2 = eng.submit(prompt, max_new_tokens=2,
+                    priority=np.int32(2), deadline=np.float64(9.0))
+    assert r2.priority == 2                  # numpy scalars accepted
+    eng.run()
+
+
+def test_cancel_queued_request_never_touches_pool(gqa):
+    """Satellite: cancelling a never-admitted request removes it from
+    the queue and provably leaves the page pool alone (a queued request
+    holds no slot, pages or reservation)."""
+    cfg, model, params = gqa
+    eng, _ = _engine(cfg, model, params, slots=1, num_pages=8)
+    rng = np.random.default_rng(0)
+    a = eng.submit(rng.integers(0, cfg.vocab, 8), max_new_tokens=20)
+    b = eng.submit(rng.integers(0, cfg.vocab, 8), max_new_tokens=4)
+    eng.step()                               # a admits; b deferred (slots)
+    assert b in eng.waiting
+    fp = (eng.pool.block_tables.copy(), eng.pool.chain_len.copy(),
+          eng.pool.refcount.copy(), list(eng.pool._free),
+          eng.pool.reserved_total)
+    eng.cancel(b)
+    assert b.cancelled and b.finished and b not in eng.waiting
+    assert (eng.pool.block_tables == fp[0]).all()
+    assert (eng.pool.chain_len == fp[1]).all()
+    assert (eng.pool.refcount == fp[2]).all()
+    assert eng.pool._free == fp[3] and eng.pool.reserved_total == fp[4]
+    eng.run()
+    assert eng.pool.pages_in_use == 0 and eng.pool.reserved_total == 0
+
+
+# ---------------------------------------------------------------------------
+# engine-level policy contracts
+# ---------------------------------------------------------------------------
+
+LENS = [(5, 4), (13, 6), (3, 3), (9, 5)]
+SPS = [None, dict(temperature=0.9, top_k=12, seed=3), None,
+       dict(temperature=1.2, top_p=0.8, seed=5)]
+PRIOS = [0, 0, 5, 1]
+
+
+def _run_policy(cfg, model, params, policy, *, slots=2):
+    eng, sm = _engine(cfg, model, params, policy=policy, slots=slots)
+    rng = np.random.default_rng(1)
+    reqs = []
+    for i, (p, g) in enumerate(LENS):
+        sp = SamplingParams(**SPS[i]) if SPS[i] else None
+        reqs.append(eng.submit(rng.integers(0, cfg.vocab, size=p),
+                               max_new_tokens=g, sampling=sp,
+                               priority=PRIOS[i]))
+    done = eng.run()
+    assert sm._jit_step._cache_size() == 1
+    assert eng.pool.pages_in_use == 0 and eng.pool.reserved_total == 0
+    return [list(r.tokens) for r in reqs], [r.uid for r in done], eng
+
+
+def test_policies_move_requests_in_time_never_in_bytes(gqa):
+    """The load-bearing contract: fifo/priority/sjf produce IDENTICAL
+    per-request token streams (the counter-based PRNG keys on
+    (seed, uid, pos), so when a request runs cannot change what it
+    says); only completion order moves.  fifo == the legacy admission:
+    under 2 slots the first two arrivals admit first, so uid 2 (the
+    high-priority short request) finishes last of the first three under
+    fifo but is boosted by both priority (class 5) and sjf (3-token
+    prompt)."""
+    cfg, model, params = gqa
+    fifo_toks, fifo_order, _ = _run_policy(cfg, model, params, "fifo")
+    prio_toks, prio_order, _ = _run_policy(cfg, model, params,
+                                           "priority")
+    sjf_toks, sjf_order, _ = _run_policy(cfg, model, params, "sjf")
+    assert fifo_toks == prio_toks == sjf_toks
+    assert fifo_order.index(2) > 0           # fifo: uid 2 waits its turn
+    assert prio_order[0] == 2                # priority: class 5 first out
+    assert sjf_order[0] == 2                 # sjf: shortest prompt first
+    assert fifo_order != prio_order
+
+
+def test_fifo_defer_at_head_no_bypass(gqa):
+    """fifo reproduces the legacy head-of-line rule: when the head
+    cannot reserve, smaller requests behind it do NOT bypass (that is
+    sjf's job)."""
+    cfg, model, params = gqa
+    rng = np.random.default_rng(2)
+    eng, _ = _engine(cfg, model, params, slots=3, max_len=24,
+                     num_pages=7)
+    a = eng.submit(rng.integers(0, cfg.vocab, 8), max_new_tokens=16)
+    b = eng.submit(rng.integers(0, cfg.vocab, 10), max_new_tokens=14)
+    c = eng.submit(rng.integers(0, cfg.vocab, 3), max_new_tokens=2)
+    eng.step()
+    # a holds 6 pages of 7; b (head, needs 6) defers; c (needs 2) must
+    # NOT slip past it even though one page is free
+    assert int(eng.active.sum()) == 1
+    assert list(eng.waiting) == [b, c]
+    eng.run()
+    assert eng.pool.pages_in_use == 0 and eng.pool.reserved_total == 0
+
+
+def test_stats_snapshot_and_verbose_run(gqa, capsys):
+    """Satellite: stats() reports occupancy / queue / pool pages /
+    preemptions, and run(verbose=True) emits one line per step."""
+    cfg, model, params = gqa
+    eng, _ = _engine(cfg, model, params, slots=2, num_pages=12)
+    rng = np.random.default_rng(3)
+    s0 = eng.stats()
+    assert s0.active_slots == 0 and s0.queue_depth == 0
+    assert s0.pages_in_use == 0 and s0.pages_free == 12
+    assert s0.policy == "fifo" and s0.utilization == 0.0
+    for _ in range(3):
+        eng.submit(rng.integers(0, cfg.vocab, 6), max_new_tokens=6)
+    eng.step()
+    s1 = eng.stats()
+    assert s1.active_slots == 2 and s1.queue_depth == 1
+    assert s1.pages_in_use == eng.pool.pages_in_use > 0
+    assert s1.pages_reserved == eng.pool.reserved_total > 0
+    assert s1.pages_free == len(eng.pool._free)
+    assert s1.n_steps == 1 and s1.n_preemptions == 0
+    assert 0.0 < s1.utilization <= 1.0
+    assert eng.utilization == s1.utilization   # legacy readout survives
+    eng.run(verbose=True)
+    out = capsys.readouterr().out
+    lines = [ln for ln in out.splitlines() if ln.startswith("[fifo")]
+    assert len(lines) == eng.n_steps - 1       # one line per driven step
+    assert "queue" in lines[0] and "pages" in lines[0]
+    s2 = eng.stats()
+    assert s2.active_slots == 0 and s2.pages_in_use == 0
