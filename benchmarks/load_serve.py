@@ -7,8 +7,9 @@ reports, per policy:
   * p50 / p99 time-to-first-token, in ENGINE STEPS (deterministic,
     hardware-independent — this is what the improvement is pinned on)
     and in wall-clock ms, overall and for the high-priority class;
-  * p50 / p99 inter-token latency (wall time of one decode step —
-    every active request emits one token per step);
+  * p50 / p99 inter-token latency (wall time of one PURE decode step —
+    every active request emits one token per step; steps that also ran
+    admission prefill are excluded so the column is not prefill noise);
   * the engine's final ``stats()`` snapshot (steps, preemptions, slot
     utilization) so the artifact records HOW the policy got its win.
 
@@ -120,14 +121,22 @@ def replay(trace, policy, model, params, cfg, slots, max_len, seed):
             r = eng.submit(prompt, max_new_tokens=gen, priority=prio)
             arrived[r] = step_no
             wall_in[r] = time.perf_counter()
-        eng.admit()
-        observe()                        # tok0 can land at admission
-        if bool(eng.active.any()):
-            s0 = time.perf_counter()
-            eng.step()
-            itl.append(time.perf_counter() - s0)
-            observe()
-            step_no += 1
+        # step() admits first, then decodes — no explicit admit() here:
+        # it would run the policy's begin_round twice per virtual step
+        # and age sjf's queue at 2x the configured rate
+        prev_steps = eng.n_steps
+        prev_done = len(eng.finished)
+        prefills = eng.n_emitted - eng._n_decoded
+        s0 = time.perf_counter()
+        eng.step()
+        dt = time.perf_counter() - s0
+        observe()                        # tok0 lands at admission or decode
+        if eng.n_steps > prev_steps:
+            if eng.n_emitted - eng._n_decoded == prefills:
+                itl.append(dt)           # pure decode step: keep the
+            step_no += 1                 # itl column free of prefill
+        elif len(eng.finished) > prev_done:
+            continue                     # a wave admitted and retired
         elif pending:                    # idle gap: jump to next arrival
             step_no = max(step_no + 1, pending[0][0])
         else:                            # blocked with no arrivals left

@@ -22,9 +22,9 @@ The serving stack is split into three layers with explicit seams:
 Preemption (paged layout only): evicting a running request snapshots
 its page chain + per-slot carry to host memory (``device_get`` of
 exactly its pages via the block table), releases the pages back to the
-pool, and re-queues it; re-admission reserves afresh, re-seeds FRESH
-pages with the snapshotted bytes and resumes mid-stream with no
-prefill.  Reads go through the block table and the sampling PRNG is
+pool, and re-queues it; re-admission re-reserves what the slot held at
+eviction (recorded in the snapshot), re-seeds FRESH pages with the
+snapshotted bytes and resumes mid-stream with no prefill.  Reads go through the block table and the sampling PRNG is
 counter-based on (seed, uid, pos), so a preempted-then-resumed stream
 is bitwise-equal to one that was never disturbed.
 
@@ -206,11 +206,20 @@ class ServeEngine:
         self.st.cur = v
 
     def _pages_for_req(self, req: Request) -> int:
-        """Worst-case reservation: prompt + full budget.  A resumed
-        (preempted) request reserves by the SAME formula — its live
-        chain never exceeds it, so restore cannot fail mid-resume."""
+        """Worst-case reservation: prompt + full budget for a fresh
+        request; for a preempted one, the ORIGINAL reservation its slot
+        held at eviction (recorded in the snapshot).  The two differ for
+        fork children: a child's ``max_new_tokens`` counts from the FORK
+        POINT while its chain covers every position up to there, so the
+        prompt+budget formula would under-reserve it and restore (or a
+        later decode append) would die in ``pool.grow``.  Re-reserving
+        exactly what the slot held keeps the guarantee that the live
+        chain never exceeds the reservation, so restore cannot fail
+        mid-resume."""
         if self.pool is None:
             return 0
+        if req.snapshot is not None:
+            return req.snapshot["reserve"]
         return self.sm.pages_for(len(req.prompt) + req.max_new_tokens)
 
     # ------------------------------------------------------------------
@@ -483,6 +492,10 @@ class ServeEngine:
         pages = self.pool.block_tables[slot, :n].copy()
         req.snapshot = {
             "n_pages": n,
+            # the slot's reservation at eviction — re-admission reserves
+            # exactly this (see _pages_for_req: prompt+budget would
+            # under-size a fork child's chain)
+            "reserve": self.pool.reserved_for(slot),
             "state": self.sm.snapshot_slot(self.state, slot, pages),
             "pos": int(st.pos[slot]),
             "remaining": int(st.remaining[slot]),
@@ -699,7 +712,9 @@ class ServeEngine:
                 break
             if (st.waiting and not st.active.any()
                     and len(st.finished) == n_finished):
-                head = st.waiting[0]
+                # the blocked head is the POLICY's head — under
+                # priority/sjf that need not be waiting[0]
+                head = self.policy.admit_order(st.waiting, st)[0]
                 need = self._pages_for_req(head)
                 pool = ("no page pool" if self.pool is None else
                         f"pool: {self.pool.available} of "

@@ -129,6 +129,12 @@ class PagePool:
         self._reserved[slot] = n_pages
         self.reserved_total += n_pages
 
+    def reserved_for(self, slot: int) -> int:
+        """Pages currently promised to ``slot`` (0 when it holds no
+        reservation) — what eviction would hand back, and what a
+        preemption snapshot must record to re-admit safely."""
+        return int(self._reserved[slot])
+
     # -- allocation core -------------------------------------------------
     def _pop(self) -> int:
         """Take one page off the free list (refcount 0 -> 1), asking the

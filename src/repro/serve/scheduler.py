@@ -105,14 +105,24 @@ class PriorityPolicy(SchedulingPolicy):
         head = self._head_blocked(state)  # eviction cheap — paged only
         if head is None:
             return None
-        victim = None
+        victim, freeable = None, 0
         for slot, r in state.running():
+            if not r.priority < head.priority:
+                continue                  # strict gap only: no thrash
+            freeable += state.pool.reserved_for(slot)
             key = (r.priority, -r.uid)
             if victim is None or key < victim[0]:
                 victim = (key, slot)
-        if victim is not None and victim[0][0] < head.priority:
-            return victim[1]
-        return None
+        if victim is None:
+            return None
+        # eviction must be able to unblock the head: the engine evicts
+        # one victim per retry, so name one only if the CUMULATIVE
+        # evictable set's released reservations (plus what is already
+        # unreserved) cover the head's need — otherwise the eviction
+        # discards decode work and admits nothing
+        if state.pages_needed(head) > state.pool.available + freeable:
+            return None
+        return victim[1]
 
 
 class SJFPolicy(SchedulingPolicy):

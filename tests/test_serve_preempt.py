@@ -139,8 +139,8 @@ def test_priority_policy_preempts_for_high_priority():
 def test_priority_policy_preempts_for_pages():
     """Same, blocked on PAGES: a slot is free but the pool is fully
     reserved by the low-priority pair — the eviction is what returns
-    pages.  The victim's reservation comes back to it on resume via the
-    same worst-case formula, so the drain still empties the pool."""
+    pages.  The victim's reservation comes back to it on resume from
+    its snapshot, so the drain still empties the pool."""
     cfg = get_config("smollm-360m-smoke")
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
@@ -166,6 +166,52 @@ def test_priority_policy_preempts_for_pages():
     ref_high = _submit(eng0, cfg, lens[2:], sps[2:])
     ref = _drain(eng0, sm0, ref_low + ref_high)
     assert toks == ref
+
+
+def test_fork_child_preempt_resume_bitwise():
+    """Regression: a fork child's ``max_new_tokens`` counts from the
+    FORK POINT, so the prompt+budget reservation formula under-sizes
+    its chain (which covers every position up to the fork).  Re-
+    admission must reserve what the slot held at eviction (recorded in
+    the snapshot) — with the naive formula, ``pool.grow`` raised
+    'exceeds its reservation' mid-resume or at the next page-boundary
+    decode append, after the slot was already allocated.  Greedy parent
+    + sampled child, streams pinned bitwise against an undisturbed run."""
+    cfg = get_config("smollm-360m-smoke")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    def drive(preempt):
+        eng, sm, _ = _build(cfg, params, slots=3, submit_all=False)
+        rng = np.random.default_rng(4)
+        parent = eng.submit(rng.integers(0, cfg.vocab, 6),
+                            max_new_tokens=18)
+        for _ in range(7):
+            eng.step()                  # parent decodes well past its
+        [child] = eng.fork(             # prompt before the fork
+            parent, max_new_tokens=8,
+            sampling=SamplingParams(temperature=0.9, top_k=12, seed=3))
+        for _ in range(2):
+            eng.step()
+        if preempt:
+            slot = next(s for s, r in enumerate(eng.slot_req)
+                        if r is child)
+            # the gap under test: the chain must eventually cover
+            # pos+remaining positions, more than prompt+budget covers
+            assert (sm.pages_for(int(eng.pos[slot])
+                                 + int(eng.remaining[slot]))
+                    > sm.pages_for(len(child.prompt)
+                                   + child.max_new_tokens))
+            eng._preempt(slot)
+            assert child.snapshot["reserve"] == sm.pages_for(
+                int(child.snapshot["pos"])
+                + int(child.snapshot["remaining"]))
+        return _drain(eng, sm, [parent, child]), eng, child
+
+    ref, _, _ = drive(preempt=False)
+    got, eng, child = drive(preempt=True)
+    assert got == ref                   # resume moved no bytes
+    assert child.n_preemptions == 1 and child.snapshot is None
 
 
 def test_cancel_preempted_request_drops_snapshot():

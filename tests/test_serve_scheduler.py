@@ -130,6 +130,33 @@ def test_priority_select_victim_strict_gap_only():
     assert pol.select_victim(tab2) is None
 
 
+def test_priority_select_victim_only_when_eviction_can_unblock():
+    """Naming a victim whose eviction cannot (even cumulatively) free
+    enough pages for the blocked head would discard decode work and
+    admit nothing — the policy must return None instead."""
+    pool = PagePool(8, 2, 8)
+    tab = SlotTable(2, pool=pool,
+                    pages_for_req=lambda r: int(r.max_new_tokens))
+    for uid, prio in [(0, 9), (1, 0)]:
+        s = tab.alloc_slot()
+        pool.reserve(s, 4)
+        tab.slot_req[s] = _req(uid, gen=4, priority=prio)
+        tab.active[s] = True
+    pol = PriorityPolicy()
+    head = _req(2, gen=8, priority=5)
+    tab.waiting.append(head)
+    # the only strictly-lower running slot (1) frees 4 pages; the head
+    # needs 8 and nothing is unreserved -> eviction cannot unblock it
+    assert pol.select_victim(tab) is None
+    head.max_new_tokens = 4                     # slot 1's 4 pages suffice
+    assert pol.select_victim(tab) == 1
+    # cumulative progress: both running slots outranked -> their summed
+    # reservations (4 + 4) cover the head's 8, one eviction at a time
+    head.max_new_tokens = 8
+    tab.slot_req[0].priority = 1
+    assert pol.select_victim(tab) == 1
+
+
 def test_make_policy_names_and_instances():
     assert isinstance(make_policy("fifo"), FIFOPolicy)
     assert isinstance(make_policy("priority"), PriorityPolicy)
@@ -287,6 +314,22 @@ def test_fifo_defer_at_head_no_bypass(gqa):
     assert list(eng.waiting) == [b, c]
     eng.run()
     assert eng.pool.pages_in_use == 0 and eng.pool.reserved_total == 0
+
+
+def test_stall_diagnostic_names_policy_head(gqa):
+    """run()'s deadlock error reports the POLICY-ordered head — under
+    priority the blocked request is the highest waiting class, not
+    waiting[0]."""
+    cfg, model, params = gqa
+    eng, _ = _engine(cfg, model, params, policy="priority")
+    eng.pool.reserve(1, eng.pool.num_pages)     # simulate a leaked hold
+    rng = np.random.default_rng(5)
+    low = eng.submit(rng.integers(0, cfg.vocab, 6), max_new_tokens=4)
+    high = eng.submit(rng.integers(0, cfg.vocab, 4), max_new_tokens=4,
+                      priority=5)
+    assert eng.waiting[0] is low                # arrival order differs
+    with pytest.raises(RuntimeError, match=f"uid={high.uid} "):
+        eng.run()
 
 
 def test_stats_snapshot_and_verbose_run(gqa, capsys):
