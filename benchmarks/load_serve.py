@@ -29,6 +29,11 @@ each on the class the policy actually optimizes:
     under sustained overload every policy's all-requests tail is
     capacity-bound, and trading a bounded few steps of convoy TTFT for
     the short class's tail is exactly sjf's bargain.
+  * edf:      deadline-MISS RATE (finish step > the request's deadline,
+    scored over the SLO-tagged requests) strictly beats fifo.  Short
+    arrivals carry ``deadline = arrival + gen + SLO_SLACK`` on the
+    virtual step clock; the convoy is best-effort (no deadline), so it
+    sorts last at admission and is the first preemption victim.
 
 Both streams are bitwise identical across policies (counter-based PRNG;
 see tests/test_serve_scheduler.py) — the harness also checks that, so a
@@ -36,10 +41,11 @@ latency win can never be bought with changed bytes.
 
     PYTHONPATH=src python -m benchmarks.load_serve [--smoke] \
         [--arch smollm-360m-smoke] [--slots 4] [--n 32] [--rate 1.5] \
-        [--policies fifo,priority,sjf] [--trace trace.json]
+        [--policies fifo,priority,sjf,edf] [--trace trace.json]
 
 Trace file format: JSON list of [arrival_step, prompt_len, max_new,
-priority] rows (sorted by arrival_step).
+priority] or [arrival_step, prompt_len, max_new, priority, deadline]
+rows (sorted by arrival_step; deadline null = best-effort).
 """
 from __future__ import annotations
 
@@ -61,29 +67,35 @@ from repro.serve import DecoderStepModel, PagedConfig, ServeEngine
 LONG_P, LONG_G = 24, 16          # the convoy job
 SHORT_PS, SHORT_GS = (4, 6, 8), (3, 4, 5, 6)
 HIGH_PRIORITY = 5
+SLO_SLACK = 12                   # steps past arrival + gen before a miss
 
 
 def poisson_trace(rng, n, rate, slots, p_high=0.25, p_long=0.1):
     """Burst of ``slots + 1`` long jobs at step 0, then ``n`` Poisson
-    arrivals (mean ``rate`` requests/step) of mostly short jobs."""
-    trace = [(0, LONG_P, LONG_G, 0) for _ in range(slots + 1)]
+    arrivals (mean ``rate`` requests/step) of mostly short jobs.  Short
+    jobs carry a step-clock deadline (the SLO class edf optimizes);
+    the convoy and long arrivals are best-effort (deadline None)."""
+    trace = [(0, LONG_P, LONG_G, 0, None) for _ in range(slots + 1)]
     t = 0.0
     for _ in range(n):
         t += rng.exponential(1.0 / rate)
         if rng.random() < p_long:
-            plen, gen, prio = LONG_P, LONG_G, 0
+            plen, gen, prio, dl = LONG_P, LONG_G, 0, None
         else:
             plen = int(rng.choice(SHORT_PS))
             gen = int(rng.choice(SHORT_GS))
             prio = HIGH_PRIORITY if rng.random() < p_high else 0
-        trace.append((int(t), plen, gen, prio))
+            dl = int(t) + gen + SLO_SLACK
+        trace.append((int(t), plen, gen, prio, dl))
     return trace
 
 
 def load_trace(path):
     with open(path) as f:
         rows = json.load(f)
-    return [(int(s), int(p), int(g), int(pr)) for s, p, g, pr in rows]
+    return [(int(r[0]), int(r[1]), int(r[2]), int(r[3]),
+             None if len(r) < 5 or r[4] is None else float(r[4]))
+            for r in rows]
 
 
 def replay(trace, policy, model, params, cfg, slots, max_len, seed):
@@ -97,14 +109,14 @@ def replay(trace, policy, model, params, cfg, slots, max_len, seed):
     # prompt to its chunk grid: chunk = min(prefill_chunk, pow2ceil(P)))
     grid = sorted({-(-p // min(chunk, pow2ceil(p)))
                    * min(chunk, pow2ceil(p))
-                   for _s, p, _g, _pr in trace})
+                   for _s, p, _g, _pr, _dl in trace})
     _warm_engine(sm, params, slots, grid)
     eng = ServeEngine(sm, params, slots=slots, policy=policy)
     rng = np.random.default_rng(seed)    # same seed -> same prompt bytes
     pending = deque(
-        (astep, rng.integers(0, cfg.vocab, size=plen), gen, prio)
-        for astep, plen, gen, prio in trace)
-    arrived, tok0 = {}, {}               # req -> arrival step / tok0 step
+        (astep, rng.integers(0, cfg.vocab, size=plen), gen, prio, dl)
+        for astep, plen, gen, prio, dl in trace)
+    arrived, tok0, fin = {}, {}, {}      # req -> arrival/tok0/finish step
     wall_in, wall_tok0 = {}, {}
     itl = []
     step_no = 0
@@ -114,11 +126,14 @@ def replay(trace, policy, model, params, cfg, slots, max_len, seed):
             if r not in tok0 and r.outputs:
                 tok0[r] = step_no
                 wall_tok0[r] = time.perf_counter()
+            if r not in fin and r.finished:
+                fin[r] = step_no
 
     while pending or eng.waiting or bool(eng.active.any()):
         while pending and pending[0][0] <= step_no:
-            _a, prompt, gen, prio = pending.popleft()
-            r = eng.submit(prompt, max_new_tokens=gen, priority=prio)
+            _a, prompt, gen, prio, dl = pending.popleft()
+            r = eng.submit(prompt, max_new_tokens=gen, priority=prio,
+                           deadline=dl)
             arrived[r] = step_no
             wall_in[r] = time.perf_counter()
         # step() admits first, then decodes — no explicit admit() here:
@@ -144,10 +159,14 @@ def replay(trace, policy, model, params, cfg, slots, max_len, seed):
                                "nothing running and nothing arriving")
 
     assert len(tok0) == len(arrived), "some request never emitted tok0"
+    assert len(fin) == len(arrived), "some request never finished"
     recs = [{"req": r,
              "prio": r.priority,
              "ttft_steps": tok0[r] - arrived[r],
-             "ttft_ms": (wall_tok0[r] - wall_in[r]) * 1e3}
+             "ttft_ms": (wall_tok0[r] - wall_in[r]) * 1e3,
+             "deadline": r.deadline,
+             "missed": (r.deadline is not None
+                        and fin[r] > r.deadline)}
             for r in arrived]
     streams = {r.uid: list(map(int, r.tokens)) for r in arrived}
     return recs, np.array(itl), eng.stats(), streams
@@ -185,20 +204,28 @@ def summarize(policy, recs, itl, stats):
                    f"preemptions={stats.n_preemptions};"
                    f"util={stats.utilization:.2f}",
     })
+    slo = [r for r in recs if r["deadline"] is not None]
+    missed = sum(r["missed"] for r in slo)
+    rows.append({
+        "name": f"load_serve/{policy}/deadline",
+        "us_per_call": "0",
+        "derived": f"n_slo={len(slo)};missed={missed};"
+                   f"miss_rate={missed / max(len(slo), 1):.3f}",
+    })
     return rows
 
 
 def run(arch="smollm-360m-smoke", slots=4, n=32, rate=1.5, seed=0,
-        policies=("fifo", "priority", "sjf"), trace_path=None):
+        policies=("fifo", "priority", "sjf", "edf"), trace_path=None):
     cfg = get_config(arch)
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     rng = np.random.default_rng(seed)
     trace = (load_trace(trace_path) if trace_path
              else poisson_trace(rng, n, rate, slots))
-    max_len = max(p + g for _s, p, g, _pr in trace) + 1
+    max_len = max(p + g for _s, p, g, _pr, _dl in trace) + 1
 
-    rows, p99 = [], {}
+    rows, p99, miss = [], {}, {}
     streams = {}
     for policy in policies:
         recs, itl, stats, toks = replay(trace, policy, model, params,
@@ -212,6 +239,9 @@ def run(arch="smollm-360m-smoke", slots=4, n=32, rate=1.5, seed=0,
                   if len(r["req"].prompt) < LONG_P]
         p99[policy, "short"] = _pct(shorts, 99)
         p99[policy, "p50"] = _pct([r["ttft_steps"] for r in recs], 50)
+        slo = [r for r in recs if r["deadline"] is not None]
+        miss[policy] = (sum(r["missed"] for r in slo)
+                        / max(len(slo), 1))
 
     for policy in policies:              # latency won, bytes untouched
         assert streams[policy] == streams[policies[0]], \
@@ -239,6 +269,12 @@ def run(arch="smollm-360m-smoke", slots=4, n=32, rate=1.5, seed=0,
         derived.append(f"all_p50_steps_sjf={s50:.1f}")
         derived.append(f"all_p99_steps_fifo={p99['fifo', 'all']:.1f}")
         derived.append(f"all_p99_steps_sjf={p99['sjf', 'all']:.1f}")
+    if "fifo" in policies and "edf" in policies:
+        f, e = miss["fifo"], miss["edf"]
+        assert e < f, (f"edf deadline miss rate {e:.3f} did not beat "
+                       f"fifo {f:.3f}")
+        derived.append(f"miss_rate_fifo={f:.3f}")
+        derived.append(f"miss_rate_edf={e:.3f}")
     rows.append({"name": "load_serve/summary", "us_per_call": "0",
                  "derived": ";".join(derived)})
     return emit(rows)
@@ -253,7 +289,7 @@ def main(argv=None):
     ap.add_argument("--rate", type=float, default=1.5,
                     help="mean arrivals per engine step")
     ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--policies", default="fifo,priority,sjf")
+    ap.add_argument("--policies", default="fifo,priority,sjf,edf")
     ap.add_argument("--trace", default=None,
                     help="JSON trace file: [[step, plen, gen, prio], ..]")
     ap.add_argument("--smoke", action="store_true",

@@ -1,0 +1,144 @@
+"""Speculative decoding: wave cost vs per-token decode (README section
+"Speculative decoding").
+
+What this pins is the MACHINERY, not drafter quality: both models run
+with a zeroed LM head, so every logit row is exactly zero and both the
+drafter's greedy argmax and the target's pick token 0 — acceptance is
+100% by construction.  That makes the measurement deterministic: each
+verify wave decides exactly K tokens, so accepted-tokens/step = K and
+the batch-1 speedup is the pure ratio (cost of K per-token steps) /
+(cost of one propose + verify wave).  Real workloads sit below this
+ceiling in proportion to the drafter's actual acceptance rate; the row
+is the regression canary for the wave path itself (propose scan, K-wide
+verify, page-granular commit, host bookkeeping).
+
+Reported per batch size (default 1 / 4), target smollm smoke (GQA,
+paged-gather), drafter minGRU smoke:
+  * plain engine tokens/s + per-step p50 vs the spec engine at K=4
+  * decoded tokens per engine step (= K at 100% acceptance)
+  * acceptance rate (= 1.0 here; < 1 means the wave path regressed)
+Asserts: accepted-tokens/step > 1.5 and batch-1 speedup > 1.
+
+    PYTHONPATH=src python -m benchmarks.spec_decode [--spec-k 4] \
+        [--batches 1,4] [--gen 32]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs import get_config
+from repro.models import build_model
+from repro.serve import (DecoderStepModel, DraftStepModel, PagedConfig,
+                         ServeEngine)
+
+TARGET = "smollm-360m-smoke"
+DRAFTER = "minimalist-lm-360m-smoke"
+
+
+def _zero_head(params):
+    """Zero the LM head so logits are exactly 0 for every token: greedy
+    argmax is deterministically token 0 for ANY stack, which makes an
+    arbitrary drafter agree with an arbitrary target on every draft."""
+    key = "lm_head" if "lm_head" in params else "embed"
+    return {**params,
+            key: jax.tree_util.tree_map(jnp.zeros_like, params[key])}
+
+
+def _build(spec_k, slots, max_len, page_size=16):
+    cfg = dataclasses.replace(get_config(TARGET), paged_impl="gather")
+    model = build_model(cfg)
+    params = _zero_head(model.init(jax.random.PRNGKey(0)))
+    sm = DecoderStepModel(model, max_len=max_len, kv_layout="paged",
+                          paged=PagedConfig(page_size=page_size))
+    kw = {}
+    if spec_k > 1:
+        dmodel = build_model(get_config(DRAFTER))
+        dparams = _zero_head(dmodel.init(jax.random.PRNGKey(1)))
+        kw = dict(drafter=DraftStepModel(dmodel, spec_k=spec_k),
+                  drafter_params=dparams, spec_k=spec_k)
+    return ServeEngine(sm, params, slots=slots, **kw), cfg
+
+
+def _drain(eng, prompts, glens, timed):
+    """Submit the workload and drain it; per-decode-step latencies out.
+    Counter deltas (not totals) so a warmup drain on the same engine —
+    which owns the compile caches — stays out of the timed numbers."""
+    d0, s0 = eng._n_decoded, eng.n_steps
+    for p, g in zip(prompts, glens):
+        eng.submit(p, max_new_tokens=int(g))
+    lat = []
+    t0 = time.perf_counter()
+    while eng.waiting or eng.active.any():
+        eng.admit()
+        t1 = time.perf_counter()
+        eng.step()
+        lat.append(time.perf_counter() - t1)
+    dt = time.perf_counter() - t0
+    decoded, steps = eng._n_decoded - d0, eng.n_steps - s0
+    if not timed:
+        return None
+    return {"tok_s": decoded / dt, "lat": np.array(lat),
+            "per_step": decoded / max(steps, 1)}
+
+
+def run(spec_k=4, batches=(1, 4), gen=32, prompt=16):
+    rng = np.random.default_rng(29)
+    rows = []
+    for batch in batches:
+        n = 2 * batch
+        prompts = [rng.integers(0, 512, size=prompt, dtype=np.int64)
+                   for _ in range(n)]
+        glens = [gen] * n
+        max_len = prompt + gen + spec_k + 1
+        out = {}
+        for label, k in (("plain", 1), (f"spec_k{spec_k}", spec_k)):
+            eng, _cfg = _build(k, batch, max_len)
+            _drain(eng, prompts, glens, timed=False)      # compile
+            r = _drain(eng, prompts, glens, timed=True)
+            assert eng.pool.pages_in_use == 0
+            r["accept"] = eng.stats().accept_rate if k > 1 else 0.0
+            out[label] = r
+            rows.append({
+                "name": f"spec_decode/{label}/batch{batch}",
+                "us_per_call": f"{np.median(r['lat'])*1e6:.0f}",
+                "derived": f"tok_s={r['tok_s']:.1f};"
+                           f"p50_ms={np.percentile(r['lat'],50)*1e3:.2f};"
+                           f"tokens_per_step={r['per_step']:.2f};"
+                           f"accept_rate={r['accept']:.2f}",
+            })
+        spec = out[f"spec_k{spec_k}"]
+        speedup = spec["tok_s"] / max(out["plain"]["tok_s"], 1e-9)
+        rows[-1]["derived"] += f";vs_plain={speedup:.2f}x"
+        # the two acceptance bars: the wave must beat per-token decode
+        # at batch 1, and each step must decide clearly more than one
+        # token (the zero-head drafter makes both deterministic)
+        per_slot = spec["per_step"] / max(batch, 1)
+        assert per_slot > 1.5, \
+            f"batch{batch}: {per_slot:.2f} accepted tokens/step <= 1.5"
+        if batch == 1:
+            assert speedup > 1.0, \
+                f"batch-1 spec speedup {speedup:.2f}x <= 1"
+    return emit(rows)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--spec-k", type=int, default=4)
+    ap.add_argument("--batches", default="1,4")
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--prompt", type=int, default=16)
+    args = ap.parse_args(argv)
+    run(spec_k=args.spec_k,
+        batches=tuple(int(b) for b in args.batches.split(",")),
+        gen=args.gen, prompt=args.prompt)
+
+
+if __name__ == "__main__":
+    main()

@@ -275,7 +275,35 @@ class ServeConfig:
     #                high-priority arrival is blocked (paged layout)
     #   "sjf"      — shortest-prefill-first with aging (README
     #                §Scheduling & preemption)
+    #   "edf"      — earliest submit(deadline=...) first; may evict a
+    #                strictly-later-deadline running request (paged)
     policy: str = "fifo"
+    # speculative decoding (README §Speculative decoding): ``drafter``
+    # names the draft arch (a pure O(1)-state stack, e.g.
+    # "minimalist-lm-360m-smoke"); ``spec_k`` is the verify width — the
+    # target scores spec_k positions per wave and commits the accepted
+    # prefix.  spec_k == 1 (the default) is plain decode.
+    spec_k: int = 1
+    drafter: str = ""
+
+    def __post_init__(self):
+        if self.spec_k < 1:
+            raise ValueError(f"spec_k must be >= 1, got {self.spec_k}")
+        if self.spec_k > 1 and not self.drafter:
+            raise ValueError(
+                f"spec_k={self.spec_k} needs a drafter — name a pure "
+                "O(1)-state arch (ServeConfig.drafter) to propose the "
+                "speculative tokens")
+        if self.drafter and self.kv_layout != "paged":
+            raise ValueError(
+                "speculative decoding needs kv_layout='paged': rollback "
+                "relies on uncommitted pages (the pool never holds a "
+                f"rejected token), got kv_layout={self.kv_layout!r}")
+        if self.drafter and self.prefix_cache:
+            raise ValueError(
+                "speculative decoding and prefix_cache are mutually "
+                "exclusive (singleton admission waves would serialize "
+                "the drafter's wave prefill; lift when needed)")
 
 
 @dataclasses.dataclass(frozen=True)

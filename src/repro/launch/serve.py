@@ -16,7 +16,11 @@ local device mesh (TP params/caches over "model", DP slots over "data";
 README §Sharded serving).  ``--kv-layout paged`` stores attention K/V in
 a shared page pool with per-request block tables (``--page-size``,
 ``--num-pages``; README §Paged KV cache) — memory scales with live
-tokens and admission defers when the pool is full.  ``--baseline`` runs
+tokens and admission defers when the pool is full.  ``--drafter ARCH
+--spec-k K`` turns on speculative decoding: a pure-recurrent draft
+model proposes ``k-1`` greedy tokens per wave and the target verifies
+all ``k`` in one paged call (README §Speculative decoding; greedy
+streams stay bitwise identical to plain decode).  ``--baseline`` runs
 the old static-batch loop instead (kept as the benchmark reference).
 """
 from __future__ import annotations
@@ -71,9 +75,20 @@ def build_engine(model, params, serve: ServeConfig = ServeConfig(),
                                     num_pages=serve.num_pages))
     sm = DecoderStepModel(model, max_len=serve.max_len,
                           prefill_chunk=serve.prefill_chunk, **kw)
+    if serve.drafter:
+        from repro.serve import DraftStepModel
+        dcfg = get_config(serve.drafter)
+        dmodel = build_model(dcfg)
+        dparams = dmodel.init(jax.random.PRNGKey(1))
+        kw = dict(drafter=DraftStepModel(
+                      dmodel, spec_k=serve.spec_k,
+                      prefill_chunk=serve.prefill_chunk),
+                  drafter_params=dparams, spec_k=serve.spec_k)
+    else:
+        kw = {}
     return ServeEngine(sm, params, slots=serve.slots, mesh=mesh,
                        prefix_cache=serve.prefix_cache,
-                       policy=serve.policy)
+                       policy=serve.policy, **kw)
 
 
 def parse_mesh(spec: str):
@@ -161,13 +176,26 @@ def main(argv=None):
                          "prefix attach to them and prefill only the "
                          "tail (README §Prefix caching)")
     ap.add_argument("--policy", default="fifo",
-                    choices=["fifo", "priority", "sjf"],
+                    choices=["fifo", "priority", "sjf", "edf"],
                     help="admission/preemption policy: 'fifo' = strict "
                          "arrival order with defer-at-head; 'priority' "
                          "= per-request priority classes (may preempt "
                          "lower-priority running requests under the "
                          "paged layout); 'sjf' = shortest-prefill-first "
-                         "with aging (README §Scheduling & preemption)")
+                         "with aging; 'edf' = earliest-deadline-first "
+                         "(submit(deadline=...); may preempt later-"
+                         "deadline running requests under the paged "
+                         "layout) (README §Scheduling & preemption)")
+    ap.add_argument("--drafter", default="",
+                    help="speculative decoding: arch name of a pure "
+                         "O(1)-state draft model (e.g. minimalist-lm-"
+                         "360m-smoke) proposing greedy k-token waves "
+                         "the target verifies in one paged call; needs "
+                         "--kv-layout paged and a matching vocab "
+                         "(README §Speculative decoding)")
+    ap.add_argument("--spec-k", type=int, default=1,
+                    help="speculative verify width: tokens decided per "
+                         "wave per slot (1 = off; needs --drafter)")
     ap.add_argument("--verbose", action="store_true",
                     help="print a per-step stats line (occupancy, "
                          "queue depth, pool pages, preemptions)")
@@ -235,6 +263,13 @@ def main(argv=None):
         ap.error("--prefix-cache needs --kv-layout paged")
     if args.fork and args.kv_layout != "paged":
         ap.error("--fork needs --kv-layout paged")
+    drafter_name = args.drafter and (
+        args.drafter + ("-smoke" if args.smoke
+                        and not args.drafter.endswith("-smoke") else ""))
+    if drafter_name and args.kv_layout != "paged":
+        ap.error("--drafter needs --kv-layout paged")
+    if args.spec_k > 1 and not drafter_name:
+        ap.error("--spec-k > 1 needs --drafter")
     eng = build_engine(model, params,
                        ServeConfig(slots=args.slots, max_len=max_len,
                                    prefill_chunk=args.prefill_chunk,
@@ -242,8 +277,13 @@ def main(argv=None):
                                    page_size=args.page_size,
                                    num_pages=args.num_pages,
                                    prefix_cache=args.prefix_cache,
-                                   policy=args.policy),
+                                   policy=args.policy,
+                                   spec_k=args.spec_k,
+                                   drafter=drafter_name),
                        mesh=mesh)
+    if eng.drafter is not None:
+        print(f"speculative decoding: drafter {drafter_name}, "
+              f"k={args.spec_k}")
     if eng.pool is not None:
         print(f"paged KV: {eng.pool.num_pages} pages x "
               f"{args.page_size} tokens, "
@@ -283,6 +323,10 @@ def main(argv=None):
           f"{dt:.2f}s ({total/dt:.1f} tok/s incl. prefill + compile), "
           f"slot utilization {stats.utilization:.2f}, "
           f"policy {stats.policy}, {stats.n_preemptions} preemption(s)")
+    if eng.drafter is not None:
+        print(f"spec decode: accept rate {stats.accept_rate:.2f}, "
+              f"{eng.n_emitted / max(eng.n_steps, 1):.2f} "
+              f"accepted tokens/step")
     if eng.prefix_cache is not None:
         pc = eng.prefix_cache
         print(f"prefix cache: {eng.n_prefix_hits} hits / "

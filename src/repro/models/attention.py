@@ -334,6 +334,70 @@ class GQAAttention(Module):
         y = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
         return y, new
 
+    # --- speculative k-token verify (read-only; commit is separate) ---
+    def verify_paged(self, params, x, cache, pos, bt, active, length):
+        """Score K speculative tokens against the page pool WITHOUT
+        writing it.  x: (B, K, D) holds the current token plus K-1
+        drafts at positions ``pos .. pos+K-1``.
+
+        Each query i attends through a per-query dense view: the
+        gathered pool snapshot with the in-flight K/V of tokens m <= i
+        overlaid at their native in-cache indices — exactly the view a
+        sequential ``decode_paged`` at ``pos+i`` would read (the write-
+        then-gather order, the ring eviction of entries more than L back,
+        and the position mask all match by construction), and each query
+        runs the identical S=1 ``_sdpa`` program, so greedy verify logits
+        are bitwise the sequential gather-path logits.  Requires
+        K <= ring length (the engine validates ``spec_k`` against it).
+
+        Returns ``(y (B, K, D), block)`` where ``block`` holds the
+        cache-dtype K/V of all K tokens for a later ``commit_paged`` of
+        however many the verifier accepts — the pool never holds a
+        speculative byte, so rollback is simply not committing."""
+        if self.cfg.kv_dtype == "int8":
+            raise NotImplementedError(
+                "speculative verify requires bf16 pools (int8 page "
+                "rescale is not replayable per accepted prefix)")
+        B, K, _ = x.shape
+        positions = pos[:, None] + jnp.arange(K)[None, :]
+        q, k, v = self._qkv(params, x, positions)
+        L = self.ring_length(length)
+        slot = (positions % L) if self.window else positions   # (B, K)
+        kd0 = gather_pages(cache["k"], bt, L)      # snapshot, pool dtype
+        vd0 = gather_pages(cache["v"], bt, L)
+        kc = k.astype(cache["k"].dtype)
+        vc = v.astype(cache["v"].dtype)
+        rows = jnp.arange(B)[:, None]
+        outs = []
+        for i in range(K):
+            ki = kd0.at[rows, slot[:, :i + 1]].set(
+                kc[:, :i + 1]).astype(q.dtype)
+            vi = vd0.at[rows, slot[:, :i + 1]].set(
+                vc[:, :i + 1]).astype(q.dtype)
+            _k_pos, valid = paged_positions(pos + i, L, self.window)
+            mask = jnp.where(valid, 0.0, NEG_INF)[:, None, None, :]
+            outs.append(_sdpa(q[:, i:i + 1], ki, vi, mask))
+        out = jnp.concatenate(outs, axis=1)
+        y = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
+        return y, {"k": kc, "v": vc}
+
+    def commit_paged(self, cache, block, pos, bt, n_commit, active,
+                     length):
+        """Scatter the first ``n_commit[b]`` verified tokens of
+        ``block`` (from :meth:`verify_paged`) into the pool at positions
+        ``pos[b] .. pos[b]+n_commit[b]-1``.  Rejected/invalid entries
+        write out of bounds — dropped, like every frozen-slot write."""
+        B, K = block["k"].shape[:2]
+        Pp, ps = cache["k"].shape[0], cache["k"].shape[1]
+        L = self.ring_length(length)
+        j = jnp.arange(K)
+        p = pos[:, None] + j[None, :]
+        slot = (p % L) if self.window else p
+        ok = (j[None, :] < n_commit[:, None]) & active[:, None]
+        wpage = jnp.where(ok, bt[jnp.arange(B)[:, None], slot // ps], Pp)
+        return {"k": cache["k"].at[wpage, slot % ps].set(block["k"]),
+                "v": cache["v"].at[wpage, slot % ps].set(block["v"])}
+
     def decode(self, params, x, cache, pos):
         """One-step decode. x: (B, 1, D); pos: scalar current position."""
         B = x.shape[0]
@@ -584,6 +648,62 @@ class MLAAttention(Module):
         out = jnp.einsum("bshr,rhk->bshk", o_latent, w_uv)
         y = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
         return y, new
+
+    # --- speculative k-token verify (read-only; commit is separate) ---
+    def verify_paged(self, params, x, cache, pos, bt, active, length):
+        """MLA k-token verify over latent pages — the same per-query
+        overlaid-snapshot construction as GQAAttention.verify_paged, on
+        the compressed (ckv, k_rope) latents (see that docstring for the
+        bitwise contract)."""
+        if self.cfg.kv_dtype == "int8":
+            raise NotImplementedError(
+                "speculative verify requires bf16 pools (int8 page "
+                "rescale is not replayable per accepted prefix)")
+        c, m = self.cfg, self.m
+        B, K, _ = x.shape
+        positions = pos[:, None] + jnp.arange(K)[None, :]
+        q_nope, q_rope, ckv, k_rope = self._latents(params, x, positions)
+        ccd0 = gather_pages(cache["ckv"], bt, length)
+        crd0 = gather_pages(cache["krope"], bt, length)
+        cc_b = ckv.astype(cache["ckv"].dtype)
+        cr_b = k_rope.astype(cache["krope"].dtype)
+        rows = jnp.arange(B)[:, None]
+        w_uk = params["w_ukv"][:, :, :m.qk_nope_head_dim].astype(x.dtype)
+        w_uv = params["w_ukv"][:, :, m.qk_nope_head_dim:].astype(x.dtype)
+        q_abs = jnp.einsum("bshk,rhk->bshr", q_nope, w_uk)
+        scale = 1.0 / math.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+        outs = []
+        for i in range(K):
+            ccd = ccd0.at[rows, positions[:, :i + 1]].set(
+                cc_b[:, :i + 1]).astype(x.dtype)
+            crd = crd0.at[rows, positions[:, :i + 1]].set(
+                cr_b[:, :i + 1]).astype(x.dtype)
+            scores = (jnp.einsum("bshr,blr->bhsl", q_abs[:, i:i + 1], ccd)
+                      + jnp.einsum("bshk,blk->bhsl", q_rope[:, i:i + 1],
+                                   crd))
+            _k_pos, valid = paged_positions(pos + i, length, None)
+            mask = jnp.where(valid, 0.0, NEG_INF)[:, None, None, :]
+            w = jax.nn.softmax(scores.astype(jnp.float32) * scale + mask,
+                               -1).astype(x.dtype)
+            outs.append(jnp.einsum("bhsl,blr->bshr", w, ccd))
+        o_latent = jnp.concatenate(outs, axis=1)
+        out = jnp.einsum("bshr,rhk->bshk", o_latent, w_uv)
+        y = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
+        return y, {"ckv": cc_b, "krope": cr_b}
+
+    def commit_paged(self, cache, block, pos, bt, n_commit, active,
+                     length):
+        """Commit the first ``n_commit[b]`` verified latents (see
+        GQAAttention.commit_paged)."""
+        B, K = block["ckv"].shape[:2]
+        Pp, ps = cache["ckv"].shape[0], cache["ckv"].shape[1]
+        j = jnp.arange(K)
+        p = pos[:, None] + j[None, :]
+        ok = (j[None, :] < n_commit[:, None]) & active[:, None]
+        wpage = jnp.where(ok, bt[jnp.arange(B)[:, None], p // ps], Pp)
+        return {"ckv": cache["ckv"].at[wpage, p % ps].set(block["ckv"]),
+                "krope": cache["krope"].at[wpage, p % ps].set(
+                    block["krope"])}
 
     def decode(self, params, x, cache, pos):
         c, m = self.cfg, self.m

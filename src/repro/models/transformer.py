@@ -197,6 +197,28 @@ class DecoderLayer(Module):
                                              pos)
         return self._mlp_tail(params, x + h, route="decode"), new_cache
 
+    def verify_paged(self, params, x, cache, pos, bt, active, length):
+        """Speculative k-token verify: score x (B, K, D) against the
+        page pool WITHOUT writing it.  Returns (y, block) where block
+        holds the K tokens' cache-dtype K/V for a later commit_paged.
+        Only attention mixers support this (the engine restricts
+        speculative targets to attention-only stacks — an O(1)-state
+        mixer's carry cannot be rolled back per accepted prefix)."""
+        if not self.paged():
+            raise NotImplementedError(
+                "speculative verify requires attention mixers; "
+                f"{type(self.mixer).__name__} keeps O(1) state")
+        h = self.norm1(params["norm1"], x)
+        h, block = self.mixer.verify_paged(params["mixer"], h, cache,
+                                           pos, bt, active, length)
+        return self._mlp_tail(params, x + h, route="decode"), block
+
+    def commit_paged(self, cache, block, pos, bt, n_commit, active,
+                     length):
+        """Commit the first n_commit[b] verified tokens of ``block``."""
+        return self.mixer.commit_paged(cache, block, pos, bt, n_commit,
+                                       active, length)
+
     def prefill(self, params, x, cache, pos0, length=None):
         """Consume a whole chunk (B, S, D) against the cache in one call.
         ``length`` = number of valid (non-grid-padding) leading tokens."""
@@ -489,6 +511,72 @@ class DecoderLM(Module):
         head = params["embed"] if self.cfg.tie_embeddings \
             else params["lm_head"]
         return self.embed.attend(head, x), new_cache
+
+    def verify_step_paged(self, params, tokens, cache, pos, bt, active,
+                          length):
+        """Score K speculative tokens per slot against the paged caches
+        WITHOUT writing them.  tokens: (B, K) — the current token plus
+        K-1 drafts at positions ``pos .. pos+K-1``.  Returns
+        ``(logits (B, K, V_pad), blocks)``: row j of the logits is the
+        target's next-token distribution for stream position
+        ``pos+1+j``, and ``blocks`` maps layer name -> the cache-dtype
+        K/V block of the K tokens (scanned units stack the repeat axis
+        first), ready for :meth:`commit_step_paged` once the verifier
+        decides how many to keep.  The pool is untouched until then —
+        rejection costs nothing."""
+        x = self.embed(params["embed"], tokens).astype(self.compute_dtype())
+        blocks = {}
+        for l in self.head_layers:
+            x, blocks[l.name] = l.verify_paged(
+                params[l.name], x, cache[l.name], pos, bt, active, length)
+        if self.scan_layers:
+            def body(carry, rep):
+                h = carry
+                rep_params, rep_cache = rep
+                out = {}
+                for l in self.unit_layers:
+                    h, out[l.name] = l.verify_paged(
+                        rep_params[l.name], h, rep_cache[l.name], pos, bt,
+                        active, length)
+                return h, out
+
+            stacked_p = {l.name: params[l.name] for l in self.unit_layers}
+            stacked_c = {l.name: cache[l.name] for l in self.unit_layers}
+            x, stacked_b = jax.lax.scan(body, x, (stacked_p, stacked_c))
+            for l in self.unit_layers:
+                blocks[l.name] = stacked_b[l.name]
+        else:
+            for r in range(self.cfg.n_repeats):
+                for l in self.unit_layers:
+                    nm = f"{l.name}_r{r}"
+                    x, blocks[nm] = l.verify_paged(
+                        params[nm], x, cache[nm], pos, bt, active, length)
+        for l in self.tail_layers:
+            x, blocks[l.name] = l.verify_paged(
+                params[l.name], x, cache[l.name], pos, bt, active, length)
+        x = self.final_norm(params["final_norm"], x)
+        head = params["embed"] if self.cfg.tie_embeddings \
+            else params["lm_head"]
+        return self.embed.attend(head, x), blocks
+
+    def commit_step_paged(self, cache, blocks, pos, bt, n_commit, active,
+                          length):
+        """Commit the first ``n_commit[b]`` verified tokens of every
+        layer's block (from :meth:`verify_step_paged`) into the page
+        pools.  Scanned units commit per repeat under vmap — the commit
+        is a pure scatter, so stacking is free."""
+        new_cache = dict(cache)
+        for name, l, mode in self._all_layers():
+            if mode == "scanned":
+                new_cache[name] = jax.vmap(
+                    lambda c, b, _l=l: _l.commit_paged(
+                        c, b, pos, bt, n_commit, active, length)
+                )(cache[name], blocks[name])
+            else:
+                new_cache[name] = l.commit_paged(
+                    cache[name], blocks[name], pos, bt, n_commit, active,
+                    length)
+        return new_cache
 
     def supports_prefill(self) -> bool:
         """True when every layer can consume whole chunks against its cache

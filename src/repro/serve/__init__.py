@@ -12,7 +12,11 @@ The serving stack is layered (README §Scheduling & preemption):
   * :mod:`repro.serve.state`     — SlotTable/Request: host-side slot +
     request lifecycle state (the STATE layer)
   * :mod:`repro.serve.scheduler` — SchedulingPolicy (fifo / priority /
-    sjf): admission order + preemption victims (the SCHEDULER layer)
+    sjf / edf): admission order + preemption victims (the SCHEDULER
+    layer)
+  * :mod:`repro.serve.spec`      — speculative decoding: the minGRU
+    drafter proposing k-token waves the target verifies in one call
+    (README §Speculative decoding)
   * :mod:`repro.serve.engine`    — the fixed-capacity engine driving
     the jitted step/write/prefill programs (the EXECUTOR layer)
   * :mod:`repro.serve.protocol`  — the StepModel contract + adapters for
@@ -37,14 +41,16 @@ from repro.serve.prefill import chunked_prefill
 from repro.serve.protocol import (DecoderStepModel, MinimalistStepModel,
                                   ServeShardings, StepModel)
 from repro.serve.sampling import sample_tokens
-from repro.serve.scheduler import (POLICIES, FIFOPolicy, PriorityPolicy,
-                                   SchedulingPolicy, SJFPolicy,
-                                   make_policy)
+from repro.serve.scheduler import (POLICIES, EDFPolicy, FIFOPolicy,
+                                   PriorityPolicy, SchedulingPolicy,
+                                   SJFPolicy, make_policy)
+from repro.serve.spec import DraftStepModel
 from repro.serve.state import SlotTable
 
 __all__ = ["Request", "SamplingParams", "ServeEngine", "ServeShardings",
            "chunked_prefill", "sample_tokens", "StepModel",
-           "DecoderStepModel", "MinimalistStepModel", "PagedConfig",
-           "PagePool", "PrefixCache", "EngineStats", "SlotTable",
-           "SchedulingPolicy", "FIFOPolicy", "PriorityPolicy",
-           "SJFPolicy", "POLICIES", "make_policy"]
+           "DecoderStepModel", "MinimalistStepModel", "DraftStepModel",
+           "PagedConfig", "PagePool", "PrefixCache", "EngineStats",
+           "SlotTable", "SchedulingPolicy", "FIFOPolicy",
+           "PriorityPolicy", "SJFPolicy", "EDFPolicy", "POLICIES",
+           "make_policy"]

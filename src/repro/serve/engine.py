@@ -54,6 +54,8 @@ Two request flavors, selected by the StepModel:
 from __future__ import annotations
 
 import dataclasses
+import time
+from collections import deque
 from typing import Any, List, Optional
 
 import jax.numpy as jnp
@@ -63,6 +65,7 @@ from repro.common import pow2ceil
 from repro.configs.base import SamplingParams
 from repro.serve.sampling import KNOB_DTYPES
 from repro.serve.scheduler import make_policy
+from repro.serve.spec import heterogeneous_k
 # Request/_knob_values moved to serve.state with the layer split; they
 # are re-exported here because engine.py was their public home
 from repro.serve.state import Request, SlotTable, _knob_values  # noqa: F401
@@ -86,6 +89,13 @@ class EngineStats:
     pages_reserved: int        # 0 when unpaged
     n_preemptions: int
     utilization: float         # decode tokens per slot-step paid
+    # rate stream (what an autoscaler actually acts on): windowed decode
+    # throughput, submit->admission wait percentiles, and the speculative
+    # draft-acceptance rate (0 when no drafter is configured)
+    tokens_per_s: float = 0.0
+    queue_wait_p50_ms: float = 0.0
+    queue_wait_p99_ms: float = 0.0
+    accept_rate: float = 0.0
 
     def line(self) -> str:
         """Compact single-line rendering for ``run(verbose=True)``."""
@@ -95,7 +105,11 @@ class EngineStats:
                 f"pages {self.pages_in_use} used / {self.pages_free} "
                 f"free / {self.pages_reserved} reserved "
                 f"preempt {self.n_preemptions} "
-                f"util {self.utilization:.2f}")
+                f"util {self.utilization:.2f} "
+                f"tok/s {self.tokens_per_s:.0f} "
+                f"qwait {self.queue_wait_p50_ms:.1f}/"
+                f"{self.queue_wait_p99_ms:.1f}ms "
+                f"accept {self.accept_rate:.2f}")
 
 
 class ServeEngine:
@@ -117,12 +131,23 @@ class ServeEngine:
     """
 
     def __init__(self, step_model, params, *, slots: int = 8, mesh=None,
-                 prefix_cache: bool = False, policy="fifo"):
+                 prefix_cache: bool = False, policy="fifo",
+                 drafter=None, drafter_params=None, spec_k: int = 1):
         self.sm = step_model
         self.slots = int(slots)
         if self.slots < 1:
             raise ValueError("slots must be >= 1")
         self.policy = make_policy(policy)
+        self.spec_k = int(spec_k)
+        self.drafter = drafter
+        self.draft_params = drafter_params
+        if drafter is None:
+            if self.spec_k != 1:
+                raise ValueError(
+                    f"spec_k={spec_k} needs a drafter (spec_k == 1 is "
+                    "plain decode)")
+        else:
+            self._check_spec_compat(step_model, drafter, prefix_cache)
         if mesh is not None:
             step_model.bind_mesh(mesh, self.slots)
         self.mesh = step_model.mesh
@@ -152,6 +177,13 @@ class ServeEngine:
         self.st = SlotTable(self.slots, pool=self.pool,
                             pages_for_req=self._pages_for_req)
         self._uid = 0
+        # speculative decoding: the drafter's stacked-carry store, the
+        # per-slot resume index into its K axis, and each slot's own
+        # verify width (plain DATA through the fixed-K verify program)
+        if self.drafter is not None:
+            self.draft_store = self.drafter.init_store(self.slots)
+            self._draft_sel = np.zeros(self.slots, np.int32)
+            self._req_k = np.ones(self.slots, np.int32)
         # telemetry
         self.n_steps = 0
         self.n_emitted = 0          # all tokens, incl. admission prefill
@@ -161,6 +193,59 @@ class ServeEngine:
         self.n_cow_copies = 0       # device page copies (decode COW)
         self.n_forks = 0
         self.n_preemptions = 0      # victims evicted by the policy
+        self.n_drafts_proposed = 0  # drafter tokens offered to verify
+        self.n_drafts_accepted = 0  # ... that the target accepted
+        # rate stream (EngineStats): bounded windows — (wall time, tokens
+        # decoded) per step, and submit->admission waits in milliseconds
+        self._rate_events = deque(maxlen=256)
+        self._queue_waits = deque(maxlen=512)
+
+    def _check_spec_compat(self, step_model, drafter, prefix_cache):
+        """Everything speculative decoding requires of the target, checked
+        at CONSTRUCTION with specific errors (no request ever burns a uid
+        against an engine that cannot verify it)."""
+        if self.spec_k < 1:
+            raise ValueError(f"spec_k must be >= 1, got {self.spec_k}")
+        if getattr(drafter, "k", None) != self.spec_k:
+            raise ValueError(
+                f"drafter was built for spec_k={getattr(drafter, 'k', None)}"
+                f" but the engine asks {self.spec_k} — the stacked-carry "
+                "store and the verify program share one K")
+        if not getattr(step_model, "autoregressive", False):
+            raise ValueError("speculative decoding applies to "
+                             "autoregressive LM targets only")
+        if getattr(step_model, "kv_layout", "dense") != "paged":
+            raise ValueError(
+                "speculative decoding needs kv_layout='paged': rejection "
+                "rollback = not committing pages (the dense layout writes "
+                "in-place during decode)")
+        if prefix_cache:
+            raise ValueError("speculative decoding and prefix_cache are "
+                             "mutually exclusive (singleton admission "
+                             "waves; lift when needed)")
+        if step_model.model.cfg.kv_dtype != "bf16":
+            raise ValueError(
+                f"speculative verify does not support kv_dtype="
+                f"{step_model.model.cfg.kv_dtype!r}: the k-token snapshot "
+                "overlay reads raw pool rows (quantized pools would need "
+                "an in-graph dequant overlay)")
+        o1 = sorted(set(step_model._slot_axis) - step_model._pool_names)
+        if o1:
+            raise ValueError(
+                f"speculative targets must be attention-only stacks: "
+                f"layers {o1} carry O(1) mixer state whose carry cannot "
+                "be rolled back to an accepted prefix")
+        if drafter.vocab != step_model.vocab:
+            raise ValueError(
+                f"drafter vocab ({drafter.vocab}) != target vocab "
+                f"({step_model.vocab}): draft token ids must BE target "
+                "token ids")
+        rings = getattr(step_model, "_ring_lens", [])
+        if rings and self.spec_k > min(rings):
+            raise ValueError(
+                f"spec_k={self.spec_k} exceeds the shortest sliding-"
+                f"window ring ({min(rings)}): two speculative tokens "
+                "would alias one ring slot in the verify overlay")
 
     # -- back-compat views onto the SlotTable ---------------------------
     # (tests and user code address scheduling state through the engine;
@@ -229,8 +314,22 @@ class ServeEngine:
                eos_id: Optional[int] = None,
                sampling: Optional[SamplingParams] = None, *,
                priority: int = 0,
-               deadline: Optional[float] = None) -> Request:
+               deadline: Optional[float] = None,
+               spec_k: Optional[int] = None) -> Request:
         prompt = np.asarray(prompt)
+        # speculative width override: validated against the engine's
+        # compiled width BEFORE the uid burns (like every other reject)
+        if spec_k is not None:
+            if isinstance(spec_k, bool) or not isinstance(
+                    spec_k, (int, np.integer)):
+                raise ValueError(f"spec_k must be an int, got {spec_k!r}")
+            if spec_k < 1:
+                raise ValueError(f"spec_k must be >= 1, got {spec_k}")
+            if spec_k > self.spec_k:
+                raise ValueError(
+                    f"spec_k={spec_k} exceeds the engine's verify width "
+                    f"({self.spec_k}) — per-request widths may only "
+                    "shrink the compiled K, never grow it")
         # ndim first: len() of a 0-d array raises TypeError, and a bare
         # scalar submission deserves the same clean rejection as []
         if prompt.ndim < 1 or prompt.size < 1:
@@ -269,9 +368,10 @@ class ServeEngine:
                 # any request accepted here fits an empty pool and
                 # admission only ever DEFERS (see admit())
         req = Request(self._uid, prompt, max_new_tokens, eos_id, sampling,
-                      priority=priority, deadline=deadline)
+                      priority=priority, deadline=deadline, spec_k=spec_k)
         req.validate_scheduling()          # raises BEFORE the uid burns
         self._uid += 1
+        req.submit_t = time.monotonic()
         self.st.waiting.append(req)
         return req
 
@@ -349,6 +449,9 @@ class ServeEngine:
                     self._pages_for_req(req)):
                 break                      # defer until pages free up
             st.pop_waiting(req)
+            if req.submit_t is not None:
+                self._queue_waits.append(
+                    (time.monotonic() - req.submit_t) * 1000.0)
             slot = st.alloc_slot()
             if self.pool is not None:
                 self.pool.reserve(slot, self._pages_for_req(req))
@@ -455,6 +558,18 @@ class ServeEngine:
                     self.prefix_cache.insert(
                         r.prompt, self.pool.block_tables[s],
                         self.sm.chunk_for(plen))
+        if self.drafter is not None:
+            # the drafter tracks the SAME stream: prefill its own carry
+            # over the wave's prompts (same padded batch — padding rows
+            # land at OOB slots and drop) and tile it K-wide, resume
+            # index 0.  The target draws tok0 below; the drafter will
+            # consume it as ``cur`` in the first propose wave.
+            prompts = [r.prompt for r, _s in group]
+            prompts += [prompts[-1]] * (len(pad) - len(group))
+            carry = self.drafter.prefill(self.draft_params,
+                                         np.stack(prompts))
+            self.draft_store = self.drafter.install(self.draft_store,
+                                                    carry, pad)
         # the wave's first generated token sits at position plen — its
         # draw uses the same counter-based (seed, uid, pos) key family
         # as the decode loop, so it is reproducible under any batching
@@ -469,6 +584,10 @@ class ServeEngine:
             st.remaining[slot] = req.max_new_tokens - 1
             st.cur[slot] = t
             st.set_sampling(slot, req)
+            if self.drafter is not None:
+                self._draft_sel[slot] = 0
+                self._req_k[slot] = (req.spec_k if req.spec_k is not None
+                                     else self.spec_k)
             if st.remaining[slot] <= 0 or t == req.eos_id:
                 st.retire(slot)
 
@@ -501,6 +620,11 @@ class ServeEngine:
             "remaining": int(st.remaining[slot]),
             "cur": np.copy(st.cur[slot]),
         }
+        if self.drafter is not None:
+            req.snapshot["draft"] = self.drafter.snapshot_slot(
+                self.draft_store, slot)
+            req.snapshot["draft_sel"] = int(self._draft_sel[slot])
+        req.submit_t = time.monotonic()   # queue wait restarts at re-entry
         req.n_preemptions += 1
         self.n_preemptions += 1
         st.free_slot(slot)                 # pages + reservation go back
@@ -524,6 +648,12 @@ class ServeEngine:
         st.cur[slot] = snap["cur"]
         st.set_sampling(slot, req)
         st.active[slot] = True
+        if self.drafter is not None:
+            self.draft_store = self.drafter.restore_slot(
+                self.draft_store, snap["draft"], slot)
+            self._draft_sel[slot] = snap["draft_sel"]
+            self._req_k[slot] = (req.spec_k if req.spec_k is not None
+                                 else self.spec_k)
         req.snapshot = None                # drop the host bytes
 
     # ------------------------------------------------------------------
@@ -553,11 +683,20 @@ class ServeEngine:
         req.cancelled = True
 
     def step(self):
-        """Admit what fits, then run ONE slot-batched decode step."""
+        """Admit what fits, then run ONE slot-batched decode step (a
+        propose/verify wave when a drafter is configured — up to
+        ``spec_k`` tokens per slot for the same number of host syncs)."""
         self.admit()
         st = self.st
         if not st.active.any():
             return
+        if self.drafter is not None:
+            d0 = self._n_decoded
+            self._spec_step()
+            self._rate_events.append((time.monotonic(),
+                                      self._n_decoded - d0))
+            return
+        d0 = self._n_decoded
         bt = None
         if self.pool is not None:
             # allocate-on-decode-append: this step writes K/V at
@@ -609,6 +748,84 @@ class ServeEngine:
                     st.cur[slot] = req.prompt[st.pos[slot]]
             if done:
                 st.retire(slot)
+        self._rate_events.append((time.monotonic(),
+                                  self._n_decoded - d0))
+
+    def _spec_step(self):
+        """One propose/verify wave: the drafter rolls ``spec_k`` greedy
+        steps per slot (one jitted program), the target scores all of
+        them in one ``verify`` call that also commits exactly the
+        accepted prefix's K/V, and the host loop advances each slot by
+        its ``n_emit`` accepted+correction tokens.  Greedy slots advance
+        bitwise along the target-only stream; sampled slots draw from
+        provably the target's distribution (serve.sampling).  Exactly
+        one compiled propose program and one compiled verify program
+        serve every traffic mix — per-slot widths, positions and
+        sampling knobs are data."""
+        st = self.st
+        # per-slot verify widths: the request's own spec_k clamped by the
+        # remaining budget, so commits never pass pos + remaining (the
+        # reservation and the max_len bound stop exactly there)
+        k_slot = heterogeneous_k(self._req_k, st.remaining, self.spec_k)
+        # a wave writes K/V at pos .. pos+k_slot-1: grow/COW the whole
+        # span up front (same reservation-backed guarantee as one step)
+        cow_src, cow_dst = [], []
+        for slot in np.flatnonzero(st.active):
+            p0, kk = int(st.pos[slot]), int(k_slot[slot])
+            self.pool.grow(slot, self.sm.pages_for(p0 + kk))
+            touched = set()
+            for p in range(p0, p0 + kk):
+                touched.update(self.sm.write_page_indices(p))
+            for ci in sorted(touched):
+                pair = self.pool.cow(slot, ci)
+                if pair is not None:
+                    cow_src.append(pair[0])
+                    cow_dst.append(pair[1])
+        if cow_src:
+            self.state = self.sm.copy_pages(self.state, cow_src, cow_dst)
+            self.n_cow_copies += len(cow_src)
+        active = jnp.asarray(st.active)
+        pos = jnp.asarray(st.pos)
+        toks, self.draft_store = self.drafter.propose(
+            self.draft_params, self.draft_store, self._draft_sel,
+            np.asarray(st.cur), active)
+        sampling = {k: jnp.asarray(v) for k, v in st.knobs.items()}
+        emitted, n_emit, self.state = self.sm.verify(
+            self.params, toks, self.state, pos, active,
+            k_slot, sampling, bt=self.pool.block_tables)
+        emitted = np.asarray(emitted)
+        n_emit = np.asarray(n_emit)
+        self.n_steps += 1
+        for slot in np.flatnonzero(st.active):
+            req = st.slot_req[slot]
+            n = int(n_emit[slot])
+            self.n_drafts_proposed += int(k_slot[slot]) - 1
+            self.n_drafts_accepted += n - 1
+            done = False
+            n_take = n
+            for j in range(n):
+                t = int(emitted[slot, j])
+                req.outputs.append(emitted[slot, j].copy())
+                self.n_emitted += 1
+                self._n_decoded += 1
+                if t == req.eos_id:
+                    # tokens past an eos are discarded — target-only
+                    # decode would never have produced them (their K/V
+                    # commits die with the freed pages)
+                    n_take = j + 1
+                    done = True
+                    break
+            st.pos[slot] += n_take
+            st.remaining[slot] -= n_take
+            if st.remaining[slot] <= 0:
+                done = True
+            if done:
+                st.retire(slot)
+            else:
+                st.cur[slot] = emitted[slot, n_take - 1]
+                # resume carry: the drafter state after consuming the
+                # stream through pos-1 is the wave's (n_take-1)-th feed
+                self._draft_sel[slot] = n_take - 1
 
     def fork(self, req: Request, n: int = 1, *,
              max_new_tokens: Optional[int] = None,
@@ -675,7 +892,7 @@ class ServeEngine:
                     else dataclasses.replace(req.sampling))
             child = Request(self._uid, req.prompt, budget, req.eos_id,
                             samp, priority=req.priority,
-                            deadline=req.deadline)
+                            deadline=req.deadline, spec_k=req.spec_k)
             self._uid += 1
             child.outputs = list(req.outputs)
             st.slot_req[slot] = child
@@ -685,6 +902,11 @@ class ServeEngine:
             st.cur[slot] = st.cur[parent]
             st.set_sampling(slot, child)
             self.state = self.sm.copy_slot(self.state, parent, slot)
+            if self.drafter is not None:
+                self.draft_store = self.drafter.copy_slot(
+                    self.draft_store, parent, slot)
+                self._draft_sel[slot] = self._draft_sel[parent]
+                self._req_k[slot] = self._req_k[parent]
             self.n_forks += 1
             children.append(child)
         return children
@@ -736,6 +958,17 @@ class ServeEngine:
     def stats(self) -> EngineStats:
         """Current occupancy snapshot (see :class:`EngineStats`)."""
         paid = self.n_steps * self.slots
+        tps = 0.0
+        if len(self._rate_events) >= 2:
+            span = self._rate_events[-1][0] - self._rate_events[0][0]
+            if span > 0:
+                # the first event's tokens predate the window's start
+                tps = sum(n for _t, n in
+                          list(self._rate_events)[1:]) / span
+        waits = np.asarray(self._queue_waits, np.float64)
+        p50, p99 = ((float(np.percentile(waits, 50)),
+                     float(np.percentile(waits, 99)))
+                    if waits.size else (0.0, 0.0))
         return EngineStats(
             policy=self.policy.name,
             n_steps=self.n_steps,
@@ -747,7 +980,13 @@ class ServeEngine:
             pages_reserved=(self.pool.reserved_total if self.pool
                             else 0),
             n_preemptions=self.n_preemptions,
-            utilization=self._n_decoded / paid if paid else 0.0)
+            utilization=self._n_decoded / paid if paid else 0.0,
+            tokens_per_s=tps,
+            queue_wait_p50_ms=p50,
+            queue_wait_p99_ms=p99,
+            accept_rate=(self.n_drafts_accepted /
+                         self.n_drafts_proposed
+                         if self.n_drafts_proposed else 0.0))
 
     @property
     def utilization(self) -> float:

@@ -51,7 +51,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.common import pow2ceil
 from repro.configs.base import ATTN, ATTN_LOCAL, MLA
 from repro.parallel import sharding as shd
-from repro.serve.sampling import greedy_arrays, sample_tokens
+from repro.serve.sampling import greedy_arrays, sample_tokens, verify_tokens
 
 
 @dataclasses.dataclass(frozen=True)
@@ -283,6 +283,7 @@ class DecoderStepModel(StepModel):
             self._jit_copy_slot = jax.jit(self._copy_slot_impl)
             self._jit_copy_pages = jax.jit(self._copy_pages_impl)
             self._jit_seed = jax.jit(self._seed_impl)
+            self._jit_verify = jax.jit(self._verify_impl_paged)
         else:
             self._jit_step = jax.jit(self._step_impl)
             self._jit_write = jax.jit(self._write_impl)
@@ -618,6 +619,14 @@ class DecoderStepModel(StepModel):
                 self._copy_pages_impl, donate_argnums=(0,),
                 out_shardings=self.sharding.state)
             self._jit_seed = jax.jit(self._seed_impl)
+            # emitted tokens are (slots, K): rank-2 slot-leading — the
+            # spec only reads dim0 divisibility, so any K shares it
+            slot2 = NamedSharding(mesh,
+                                  shd.dim0_dp_spec((slots, 2), mesh))
+            self._jit_verify = jax.jit(
+                self._verify_impl_paged, donate_argnums=(2,),
+                out_shardings=(slot2, self.sharding.slot,
+                               self.sharding.state))
         else:
             self._jit_step = jax.jit(
                 self._step_impl, donate_argnums=(2,),
@@ -748,6 +757,62 @@ class DecoderStepModel(StepModel):
             return self._jit_step(params, tok, state, pos, active,
                                   sampling, bt)
         return self._jit_step(params, tok, state, pos, active, sampling)
+
+    # -- speculative verify (serve/spec.py + the engine drive this) ------
+    def _verify_impl_paged(self, params, toks, state, pos, active, k_slot,
+                           samp, bt):
+        """ONE jitted program for the whole verify wave: score the K fed
+        tokens against the untouched pools, run the rejection/residual
+        verifier on the real-vocab fp32 logits, then commit exactly the
+        accepted prefix's K/V — the pool never holds a speculative byte,
+        so rollback is simply "don't advance pos"."""
+        logits, blocks = self.model.verify_step_paged(
+            params, toks, state, pos, bt, active, self.max_len)
+        lg = logits[..., :self.vocab].astype(jnp.float32)
+        emitted, n_emit = verify_tokens(
+            lg, toks, k_slot, samp["seed"], samp["uid"], samp["uid_hi"],
+            pos, samp["temperature"], samp["top_k"], samp["top_p"])
+        n_emit = jnp.where(active, n_emit, 0)
+        merged = self.model.commit_step_paged(
+            state, blocks, pos, bt, n_emit, active, self.max_len)
+        return emitted, n_emit, merged
+
+    def verify(self, params, toks, state, pos, active, k_slot,
+               sampling=None, bt=None):
+        """k-token speculative verify.  ``toks``: (slots, K) int32 — per
+        slot the CURRENT token (last emitted, not yet in cache) followed
+        by K-1 greedy drafts, fed at positions ``pos .. pos+K-1``;
+        ``k_slot``: (slots,) int32 per-slot verify widths (1..K — plain
+        DATA, so heterogeneous widths share one compiled program).
+        Returns ``(emitted (slots, K), n_emit (slots,), state)``:
+        ``emitted[b, :n_emit[b]]`` are the tokens for stream positions
+        ``pos[b]+1 ..``, their K/V already committed page-granularly
+        (inactive slots report ``n_emit == 0`` and commit nothing).
+        ``k_slot == 1`` everywhere is bitwise the plain :meth:`step`."""
+        if self.kv_layout != "paged":
+            raise ValueError("speculative verify needs kv_layout='paged' "
+                             "(rollback = uncommitted pages)")
+        if bt is None:
+            raise ValueError("paged verify needs block tables "
+                             "(the engine passes pool.block_tables)")
+        toks = jnp.asarray(toks, jnp.int32)
+        k_slot = jnp.asarray(k_slot, jnp.int32)
+        bt = jnp.asarray(bt, jnp.int32)
+        if sampling is None:
+            n = int(toks.shape[0])
+            if n not in self._greedy:
+                g = greedy_arrays(n)
+                if self.mesh is not None:
+                    g = {k: self.put_slot(v) for k, v in g.items()}
+                self._greedy[n] = g
+            sampling = self._greedy[n]
+        if self.mesh is not None:
+            toks, pos, active = (self.put_slot(toks), self.put_slot(pos),
+                                 self.put_slot(active))
+            k_slot, bt = self.put_slot(k_slot), self.put_slot(bt)
+            sampling = {k: self.put_slot(v) for k, v in sampling.items()}
+        return self._jit_verify(params, toks, state, pos, active, k_slot,
+                                sampling, bt)
 
     def _sample_impl(self, logits, samp, pos):
         """Per-row counter-keyed sampling over the REAL vocab; greedy rows

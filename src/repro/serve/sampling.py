@@ -46,11 +46,14 @@ def request_key(seed, uid, pos, uid_hi=0):
     return jax.random.fold_in(key, pos)
 
 
-def _sample_row(logits, seed, uid, uid_hi, pos, temperature, top_k, top_p):
-    """One slot's token draw. logits: (V,) over the REAL vocab."""
+def _filter_row(logits, temperature, top_k, top_p):
+    """The temperature -> top-k -> top-p filter pipeline on one row of
+    fp32 logits: returns the SCALED logits with every filtered token at
+    -inf, so ``softmax(result)`` is exactly the distribution
+    :func:`_sample_row` draws from.  Shared with the speculative-decode
+    verifier, which must apply the identical filters to be
+    distribution-preserving."""
     V = logits.shape[-1]
-    logits = logits.astype(jnp.float32)
-    greedy_tok = jnp.argmax(logits).astype(jnp.int32)
     scaled = logits / jnp.maximum(temperature, 1e-6)
     # top-k: threshold at the k-th largest scaled logit
     kth = jnp.sort(scaled)[::-1][jnp.clip(top_k, 1, V) - 1]
@@ -62,7 +65,14 @@ def _sample_row(logits, seed, uid, uid_hi, pos, temperature, top_k, top_p):
     mass_before = jnp.cumsum(probs[order]) - probs[order]
     keep_sorted = (mass_before < jnp.clip(top_p, 1e-6, 1.0)) | (top_p >= 1.0)
     keep = jnp.zeros((V,), bool).at[order].set(keep_sorted)
-    scaled = jnp.where(keep, scaled, -jnp.inf)
+    return jnp.where(keep, scaled, -jnp.inf)
+
+
+def _sample_row(logits, seed, uid, uid_hi, pos, temperature, top_k, top_p):
+    """One slot's token draw. logits: (V,) over the REAL vocab."""
+    logits = logits.astype(jnp.float32)
+    greedy_tok = jnp.argmax(logits).astype(jnp.int32)
+    scaled = _filter_row(logits, temperature, top_k, top_p)
     tok = jax.random.categorical(request_key(seed, uid, pos, uid_hi),
                                  scaled)
     return jnp.where(temperature <= 0.0, greedy_tok, tok.astype(jnp.int32))
@@ -72,6 +82,122 @@ def _sample_row(logits, seed, uid, uid_hi, pos, temperature, top_k, top_p):
 #: each row is sampled independently from its own counter-based key, which
 #: is what makes a request's tokens reproducible under any co-batching.
 sample_tokens = jax.vmap(_sample_row)
+
+
+# ---------------------------------------------------------------------------
+# Speculative decoding: rejection/residual sampling (see serve/spec.py)
+# ---------------------------------------------------------------------------
+
+#: Salts folded into the per-position counter key so the verifier's
+#: accept-uniform and residual draws are independent of each other AND of
+#: the plain sequential draw at the same position (which uses the unsalted
+#: key).  Values are arbitrary distinct constants.
+ACCEPT_SALT = 0x5A11
+RESID_SALT = 0x5A12
+
+
+def rejection_sample_row(p_logits, q_logits, draft_tok, seed, uid, uid_hi,
+                         pos):
+    """One general-q rejection/residual step — the textbook speculative
+    sampling rule: accept ``draft_tok`` with probability
+    ``min(1, p/q)``, else draw from the normalized residual ``(p-q)+``.
+    The composite marginal is EXACTLY ``p`` for any proposal ``q``.
+
+    Randomness is counter-keyed by ``(seed, uid, pos)`` like every other
+    draw: the accept uniform folds in :data:`ACCEPT_SALT`, the residual
+    draw :data:`RESID_SALT`.  Returns ``(token, accepted)``.  The
+    engine's verifier uses the one-hot-q special case (the drafter
+    proposes greedily), where accept probability reduces to ``p(draft)``
+    and the residual to ``p`` with the draft token removed; this general
+    form is the reference the hypothesis tests pin."""
+    p = jax.nn.softmax(p_logits.astype(jnp.float32))
+    q = jax.nn.softmax(q_logits.astype(jnp.float32))
+    base = request_key(seed, uid, pos, uid_hi)
+    u = jax.random.uniform(jax.random.fold_in(base, ACCEPT_SALT))
+    ratio = p[draft_tok] / jnp.maximum(q[draft_tok], 1e-30)
+    accepted = u < jnp.minimum(1.0, ratio)
+    resid = jnp.maximum(p - q, 0.0)
+    resid_logits = jnp.where(resid > 0, jnp.log(resid), -jnp.inf)
+    # p == q exactly -> empty residual, but then ratio == 1 and the
+    # accept branch always wins, so the (arbitrary) categorical output
+    # of an all--inf row is never selected
+    r = jax.random.categorical(jax.random.fold_in(base, RESID_SALT),
+                               resid_logits)
+    return (jnp.where(accepted, draft_tok, r).astype(jnp.int32),
+            accepted)
+
+
+def _verify_row(logits, toks, k_slot, seed, uid, uid_hi, pos,
+                temperature, top_k, top_p):
+    """One slot's k-token verification.
+
+    ``logits``: (K, V) target logits over the REAL vocab for the K fed
+    tokens ``toks`` = [current, d_1, .., d_{K-1}] at positions
+    ``pos .. pos+K-1`` — row j is the target's distribution for stream
+    position ``pos+1+j``.  The drafter proposes GREEDILY, so its
+    proposal at each tested position is the one-hot distribution at
+    ``toks[j+1]``: rejection sampling degenerates to accept-with-
+    probability ``p(draft)``, residual = ``p`` with the draft removed
+    and renormalized — exactly the general rule of
+    :func:`rejection_sample_row` specialized to one-hot q.
+
+    ``k_slot`` (1..K) is this slot's verify width: only drafts
+    ``toks[1..k_slot-1]`` are tested; ``k_slot == 1`` degenerates to
+    plain single-token decode (zero tests, one plain draw).
+
+    Greedy rows (temperature <= 0): a draft is accepted iff it equals
+    the raw-fp32 argmax — the same argmax :func:`_sample_row` computes —
+    so a fully-greedy stream is BITWISE the sequential greedy stream.
+    Sampled rows accept with the target probability after the identical
+    temperature/top-k/top-p filters, and every draw is counter-keyed by
+    the position it decides, so output bytes are reproducible under any
+    co-batching or acceptance history.
+
+    Returns ``(emitted (K,), n_emit)``: ``emitted[:n_emit]`` are the
+    tokens for positions ``pos+1 .. pos+n_emit`` (accepted drafts plus
+    one correction/bonus token); ``n_emit`` is in ``[1, k_slot]``."""
+    K, V = logits.shape
+    lg = logits.astype(jnp.float32)
+    idx = jnp.arange(K, dtype=jnp.int32)
+    positions = pos + 1 + idx             # stream position row j decides
+    greedy_toks = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+    filtered = jax.vmap(_filter_row, in_axes=(0, None, None, None))(
+        lg, temperature, top_k, top_p)
+    probs = jax.nn.softmax(filtered, axis=-1)
+    # draft tested against row j is toks[j+1]; the last row has no draft
+    # (it only ever produces the correction/bonus draw)
+    drafts = jnp.concatenate([toks[1:], toks[:1]])
+    base_keys = jax.vmap(
+        lambda p_: request_key(seed, uid, p_, uid_hi))(positions)
+    u = jax.vmap(lambda k_: jax.random.uniform(
+        jax.random.fold_in(k_, ACCEPT_SALT)))(base_keys)
+    p_draft = jnp.take_along_axis(probs, drafts[:, None], axis=-1)[:, 0]
+    accept = jnp.where(temperature <= 0.0,
+                       drafts == greedy_toks, u < p_draft)
+    valid = idx < (k_slot - 1)            # rows with a draft to test
+    a = jnp.sum(jnp.cumprod((accept & valid).astype(jnp.int32)))
+    n_emit = (a + 1).astype(jnp.int32)
+    # residual draw at each row: target with the rejected draft removed
+    resid_logits = jnp.where(jnp.arange(V)[None, :] == drafts[:, None],
+                             -jnp.inf, filtered)
+    r = jax.vmap(lambda k_, rl: jax.random.categorical(
+        jax.random.fold_in(k_, RESID_SALT), rl))(
+        base_keys, resid_logits).astype(jnp.int32)
+    # plain draw: what the SEQUENTIAL sampler would emit at this position
+    # (used on full acceptance — the free bonus token)
+    b = jax.vmap(_sample_row,
+                 in_axes=(0, None, None, None, 0, None, None, None))(
+        lg, seed, uid, uid_hi, positions, temperature, top_k, top_p)
+    full = n_emit == k_slot
+    fix = jnp.where(temperature <= 0.0, greedy_toks,
+                    jnp.where(full, b, r))
+    emitted = jnp.where(idx < a, drafts, fix)
+    return emitted, n_emit
+
+
+#: Batched k-token verification over the slot axis: all arguments are
+#: (B, ...) arrays (logits (B, K, V), toks (B, K), the rest (B,)).
+verify_tokens = jax.vmap(_verify_row)
 
 
 #: The per-slot knob schema.  Every producer of knob arrays (the engine's

@@ -35,7 +35,7 @@ from typing import List, Optional
 from repro.serve.state import Request, SlotTable
 
 #: Legal values of the engine's ``policy=`` knob / ``--policy`` flag.
-POLICIES = ("fifo", "priority", "sjf")
+POLICIES = ("fifo", "priority", "sjf", "edf")
 
 
 class SchedulingPolicy:
@@ -158,6 +158,58 @@ class SJFPolicy(SchedulingPolicy):
         return sorted(queue, key=lambda r: (self._cost(r), r.uid))
 
 
+class EDFPolicy(SchedulingPolicy):
+    """Earliest-deadline-first: admission orders by ``Request.deadline``
+    (``submit(deadline=...)`` — the classic real-time key), requests
+    without a deadline sort last (+inf), uid tie-break.  When the
+    earliest-deadline waiting request is blocked, the running request
+    with the LATEST deadline is offered as a preemption victim — but
+    only on a STRICT deadline gap (victim strictly later than the head),
+    so two requests with the same deadline never thrash, and a
+    no-deadline head never preempts anyone (it cannot be "earlier" than
+    any running deadline).  No-deadline running requests (+inf) are the
+    first victims — best-effort traffic yields to SLO traffic."""
+
+    name = "edf"
+    _INF = float("inf")
+
+    def __init__(self, preempt: bool = True):
+        self.preempt = bool(preempt)
+
+    @classmethod
+    def _key(cls, req):
+        return cls._INF if req.deadline is None else float(req.deadline)
+
+    def admit_order(self, queue, state):
+        return sorted(queue, key=lambda r: (self._key(r), r.uid))
+
+    def select_victim(self, state):
+        if not self.preempt or state.pool is None:
+            return None                   # page swap is what makes
+        head = self._head_blocked(state)  # eviction cheap — paged only
+        if head is None:
+            return None
+        hk = self._key(head)
+        victim, freeable = None, 0
+        for slot, r in state.running():
+            if not self._key(r) > hk:
+                continue                  # strict gap only: no thrash
+            freeable += state.pool.reserved_for(slot)
+            # latest deadline first; youngest (largest uid) inside a
+            # deadline class, so the least decode work is thrown away
+            key = (-self._key(r), -r.uid)
+            if victim is None or key < victim[0]:
+                victim = (key, slot)
+        if victim is None:
+            return None
+        # same cumulative-unblock guard as PriorityPolicy: evicting must
+        # be able to admit the head, or the work is thrown away for
+        # nothing (the engine evicts one victim per retry)
+        if state.pages_needed(head) > state.pool.available + freeable:
+            return None
+        return victim[1]
+
+
 def make_policy(policy) -> SchedulingPolicy:
     """Resolve the engine's ``policy=`` knob: a name from
     :data:`POLICIES` or an already-built SchedulingPolicy instance."""
@@ -169,5 +221,7 @@ def make_policy(policy) -> SchedulingPolicy:
         return PriorityPolicy()
     if policy == "sjf":
         return SJFPolicy()
+    if policy == "edf":
+        return EDFPolicy()
     raise ValueError(f"policy must be one of {POLICIES} or a "
                      f"SchedulingPolicy instance, got {policy!r}")

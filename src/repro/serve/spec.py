@@ -1,0 +1,229 @@
+"""Speculative decoding: the minGRU drafter (README §Speculative decoding).
+
+The paper's thesis — minimal-GRU recurrence is cheap enough to run "for
+free" next to heavier compute — is exactly the draft-model property:
+an O(1)-state minGRU stack proposes ``k-1`` greedy tokens per wave for
+every active slot, and the attention target scores all ``k`` positions
+in ONE ``verify_step_paged`` call (``DecoderStepModel.verify``), paying
+its per-token weight/KV traffic once per wave instead of once per token.
+
+:class:`DraftStepModel` wraps a pure-recurrent ``DecoderLM`` (every
+mixer keeps O(1) state — minGRU/Mamba; no KV cache, no positions) and
+keeps, per engine slot, the K stacked hidden states the last propose
+wave produced: state ``m`` is the drafter's carry AFTER consuming the
+wave's ``m``-th fed token.  When the verifier accepts ``n_emit`` tokens
+the engine simply selects state ``n_emit - 1`` as the resume point for
+the next wave (``sel``) — acceptance bookkeeping is an index, never a
+recompute, and a rejected tail costs nothing on the drafter side either.
+
+Alignment invariant (what makes ``sel`` correct): between waves,
+``store[slot, sel]`` is the drafter state after consuming the stream up
+to and including position ``pos - 1``, where ``pos``/``cur`` are the
+slot's position and its last emitted-but-uncached token.  A propose
+wave feeds ``cur, d_1, .., d_{K-1}`` (its own greedy drafts), so the
+state after feed ``m`` corresponds to stream position ``pos + m`` — and
+every accepted prefix ``d_1 .. d_a`` IS the true stream, so state
+``a = n_emit - 1`` was computed from true tokens only.  The correction/
+bonus token the verifier emits at ``pos + n_emit`` is never consumed
+here: it becomes the next wave's ``cur``.
+
+Everything runs as ONE jitted program per wave (``propose``): gather the
+per-slot resume states, roll K greedy single-token ``decode_step`` calls
+under ``lax.scan``, stack the K carries back into the store, and freeze
+inactive slots.  Admission installs the drafter's own chunked-prefill
+carry tiled K-wide (``sel = 0``); preemption/fork snapshot, restore and
+copy single slot rows eagerly (rare, host-paced events).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ATTN, ATTN_LOCAL, MLA
+from repro.serve.protocol import DecoderStepModel, masked_update
+
+
+class DraftStepModel:
+    """K-token greedy draft proposer over a pure O(1)-state DecoderLM.
+
+    ``store`` layout: the target engine's slot axis, then a K axis of
+    stacked carries, inserted into the drafter's native decode-cache
+    leaves — plain layers ``(slots, K, d)``, scanned units
+    ``(n_repeats, slots, K, d)`` (slot axis 1, like the native cache).
+    """
+
+    def __init__(self, model, *, spec_k: int, prefill_chunk: int = 256):
+        kinds = {s.kind for s in model.cfg.layer_specs()}
+        if kinds & {ATTN, ATTN_LOCAL, MLA}:
+            raise ValueError(
+                f"drafter {model.cfg.name} carries attention layers "
+                f"({sorted(kinds)}): a draft model must be a pure "
+                "O(1)-state stack — its whole point is constant per-token "
+                "state with no KV traffic")
+        if int(spec_k) < 1:
+            raise ValueError(f"spec_k must be >= 1, got {spec_k}")
+        self.model = model
+        self.k = int(spec_k)
+        self.vocab = model.cfg.vocab
+        # the drafter reuses the serving prefill machinery through its own
+        # (dense, position-free) adapter — admission prompts prefill with
+        # the same grid-padded chunking as any O(1) stack
+        self.sm = DecoderStepModel(model, max_len=1,
+                                   prefill_chunk=prefill_chunk)
+        self._slot_axis = self.sm._slot_axis
+        self._jit_propose = jax.jit(self._propose_impl)
+        self._jit_install = jax.jit(self._install_impl)
+
+    # -- store -----------------------------------------------------------
+    def init_store(self, slots: int):
+        """Zero store: (slots, K) stacked carries per decode-cache leaf."""
+        spec = self.sm.state_spec(int(slots))
+        out = {}
+        for name, sub in spec.items():
+            ax = self._slot_axis[name]
+
+            def z(s, ax=ax):
+                shape = s.shape[:ax + 1] + (self.k,) + s.shape[ax + 1:]
+                return jnp.zeros(shape, s.dtype)
+
+            out[name] = jax.tree_util.tree_map(z, sub)
+        return out
+
+    # -- propose (the per-wave hot path, ONE jitted program) -------------
+    def _propose_impl(self, params, store, sel, tok, active):
+        # gather each slot's resume carry: store[.., slot, sel[slot], ..]
+        cache = {}
+        for name, sub in store.items():
+            ax = self._slot_axis[name]
+
+            def take(s, ax=ax):
+                idx = sel.reshape((1,) * ax + (-1, 1) +
+                                  (1,) * (s.ndim - ax - 2))
+                return jnp.take_along_axis(s, idx, axis=ax + 1) \
+                          .squeeze(ax + 1)
+
+            cache[name] = jax.tree_util.tree_map(take, sub)
+
+        def body(carry, _):
+            t, c = carry
+            logits, c2 = self.model.decode_step(params, t[:, None], c,
+                                                jnp.int32(0))
+            nxt = jnp.argmax(logits[:, -1, :self.vocab],
+                             -1).astype(jnp.int32)
+            return (nxt, c2), (nxt, c2)
+
+        (_, _), (drafts, states) = jax.lax.scan(
+            body, (tok, cache), None, length=self.k)
+        # drafts[m] = greedy continuation after feed m (= d_{m+1});
+        # the verify wave feeds [cur, d_1, .., d_{K-1}] — the K-th draft
+        # is rolled only for its carry (full acceptance resumes from it)
+        toks = jnp.concatenate(
+            [tok[:, None], drafts[:self.k - 1].T], axis=1)
+        new_store = {}
+        for name, sub in states.items():
+            ax = self._slot_axis[name]
+            ns = jax.tree_util.tree_map(
+                lambda s, ax=ax: jnp.moveaxis(s, 0, ax + 1), sub)
+            new_store[name] = masked_update(store[name], ns, active,
+                                            axis=ax)
+        return toks, new_store
+
+    def propose(self, params, store, sel, tok, active):
+        """Roll K greedy drafter steps per slot from its selected carry.
+        ``sel``: (slots,) int32 — which of the K stacked carries is the
+        resume point (the engine sets it to last wave's ``n_emit - 1``);
+        ``tok``: (slots,) int32 current tokens.  Returns
+        ``(toks (slots, K), new store)`` with ``toks[:, 0] == tok`` —
+        exactly the verify wave's input.  Inactive slots keep their old
+        carries and contribute garbage (ignored) drafts."""
+        sel = jnp.asarray(sel, jnp.int32)
+        tok = jnp.asarray(tok, jnp.int32)
+        active = jnp.asarray(active)
+        return self._jit_propose(params, store, sel, tok, active)
+
+    # -- admission -------------------------------------------------------
+    def prefill(self, params, xs):
+        """Consume an admission wave's prompts; returns the (B,) native
+        decode-cache carry (the wave's last logits are discarded — the
+        TARGET draws the first token; the drafter only tracks state)."""
+        _last, carry = self.sm.prefill(params, xs)
+        return carry
+
+    def _install_impl(self, store, carry, slots):
+        out = {}
+        for name, sub in store.items():
+            ax = self._slot_axis[name]
+
+            def upd(s, v, ax=ax):
+                v = jnp.expand_dims(v.astype(s.dtype), ax + 1)
+                shape = v.shape[:ax + 1] + (self.k,) + v.shape[ax + 2:]
+                v = jnp.broadcast_to(v, shape)
+                if ax == 0:
+                    return s.at[slots].set(v)
+                return s.at[:, slots].set(v)
+
+            out[name] = jax.tree_util.tree_map(upd, sub, carry[name])
+        return out
+
+    def install(self, store, carry, slots):
+        """Scatter an admission wave's prefill carry into its slots,
+        tiled across the K axis (so ``sel = 0`` — or any index — resumes
+        from the post-prompt state).  ``slots`` is the engine's padded
+        wave slot list; out-of-bounds padding drops like every other
+        admission scatter."""
+        return self._jit_install(store, carry,
+                                 jnp.asarray(slots, jnp.int32))
+
+    # -- preemption / fork (rare host-paced events, eager ops) -----------
+    def snapshot_slot(self, store, slot: int):
+        """Host snapshot of one slot's (K,) stacked carries."""
+        out = {}
+        for name, sub in store.items():
+            ax = self._slot_axis[name]
+            out[name] = jax.tree_util.tree_map(
+                lambda s, ax=ax: jax.lax.index_in_dim(
+                    s, int(slot), axis=ax, keepdims=False), sub)
+        return jax.device_get(out)
+
+    def restore_slot(self, store, snap, slot: int):
+        """Install a host snapshot back into ``slot`` (any slot — reads
+        go through ``sel``, so the resumed stream drafts identically)."""
+        out = {}
+        for name, sub in store.items():
+            ax = self._slot_axis[name]
+
+            def put(s, v, ax=ax):
+                v = jnp.asarray(v, s.dtype)
+                if ax == 0:
+                    return s.at[int(slot)].set(v)
+                return s.at[:, int(slot)].set(v)
+
+            out[name] = jax.tree_util.tree_map(put, sub, snap[name])
+        return out
+
+    def copy_slot(self, store, src: int, dst: int):
+        """Fork: duplicate ``src``'s stacked carries into ``dst``."""
+        out = {}
+        for name, sub in store.items():
+            ax = self._slot_axis[name]
+
+            def cp(s, ax=ax):
+                row = jax.lax.index_in_dim(s, int(src), axis=ax,
+                                           keepdims=False)
+                if ax == 0:
+                    return s.at[int(dst)].set(row)
+                return s.at[:, int(dst)].set(row)
+
+            out[name] = jax.tree_util.tree_map(cp, sub)
+        return out
+
+
+def heterogeneous_k(requested, remaining, k_max: int):
+    """Per-slot verify widths for one wave: the request's own ``spec_k``
+    (or the engine default), clamped by the slot's remaining generation
+    budget — a slot two tokens from its budget must not commit K/V
+    beyond position ``pos + remaining`` (the page reservation and
+    ``max_len`` bound stop there).  numpy in, numpy out (host path)."""
+    return np.minimum(np.minimum(np.maximum(requested, 1), int(k_max)),
+                      np.maximum(remaining, 1)).astype(np.int32)

@@ -60,9 +60,18 @@ class Request:
         default_factory=SamplingParams)
     # scheduling knobs (consumed by repro.serve.scheduler policies):
     # higher priority admits first under policy="priority"; deadline is
-    # an optional SLO tag carried through to the load-harness artifact
+    # the admission key under policy="edf" (earliest first) and the
+    # SLO tag the load harness scores miss rates against
     priority: int = 0
     deadline: Optional[float] = None
+    # speculative decoding: per-request verify width override (None =
+    # the engine's ServeConfig.spec_k; validated at submit() against the
+    # engine's compiled width, so it rides as plain per-slot DATA)
+    spec_k: Optional[int] = None
+    # set by ServeEngine.submit() (and reset on preemption re-queue):
+    # what the queue-wait percentiles in EngineStats measure
+    submit_t: Optional[float] = dataclasses.field(default=None,
+                                                  repr=False)
     # filled by the engine:
     outputs: List[Any] = dataclasses.field(default_factory=list)
     finished: bool = False

@@ -11,7 +11,8 @@ import jax.numpy as jnp
 import numpy as np
 from hypothesis import given, settings
 
-from repro.serve.sampling import sample_tokens
+from repro.serve.sampling import (rejection_sample_row, sample_tokens,
+                                  verify_tokens)
 
 SETTINGS = settings(max_examples=20, deadline=None,
                     suppress_health_check=list(hypothesis.HealthCheck))
@@ -118,6 +119,158 @@ def test_counter_key_reproducible_across_cobatch(key, seed, nbatch):
     alone = batch_draw([jnp.zeros(V, jnp.float32)] * (nbatch - 1))
     mixed = batch_draw(neigh)
     assert alone == mixed
+
+
+# ---------------------------------------------------------------------------
+# Speculative decoding: the rejection/residual sampler in isolation
+# ---------------------------------------------------------------------------
+
+def _pq(key, V, spread=2.0):
+    kp, kq = jax.random.split(jax.random.PRNGKey(key))
+    p_lg = jax.random.normal(kp, (V,)) * spread
+    q_lg = jax.random.normal(kq, (V,)) * spread
+    draft = int(jax.random.randint(kq, (), 0, V))
+    return p_lg, q_lg, draft
+
+
+def _reject_many(p_lg, q_lg, draft, seed, n):
+    """n independent rejection steps (one per position counter)."""
+    toks, acc = jax.vmap(
+        rejection_sample_row,
+        in_axes=(None, None, None, None, None, None, 0))(
+        p_lg, q_lg, jnp.int32(draft), jnp.uint32(seed),
+        jnp.uint32(1), jnp.uint32(0), jnp.arange(1, n + 1, dtype=jnp.int32))
+    return np.asarray(toks), np.asarray(acc)
+
+
+@SETTINGS
+@given(st.sampled_from([2, 3, 7, 16]), st.integers(0, 2**16),
+       st.integers(0, 2**16))
+def test_rejection_accept_prob_is_min_ratio(V, key, seed):
+    """The draft is accepted with probability min(1, p(draft)/q(draft))
+    — the textbook rule, measured over independent position counters."""
+    p_lg, q_lg, draft = _pq(key, V)
+    n = 512
+    _, acc = _reject_many(p_lg, q_lg, draft, seed, n)
+    p = np.asarray(jax.nn.softmax(p_lg), np.float64)
+    q = np.asarray(jax.nn.softmax(q_lg), np.float64)
+    want = min(1.0, p[draft] / q[draft])
+    sigma = np.sqrt(max(want * (1 - want), 1e-12) / n)
+    assert abs(float(acc.mean()) - want) < 4.5 * sigma + 0.01
+
+
+@SETTINGS
+@given(st.sampled_from([2, 3, 7]), st.integers(0, 2**16),
+       st.integers(0, 2**16))
+def test_rejection_marginal_is_target_and_residual_normalizes(V, key,
+                                                              seed):
+    """With drafts DRAWN FROM q (the speculative setting), the composite
+    accept-or-residual output is distributed exactly as the target p —
+    the identity the whole scheme rests on.  And every rejected draw
+    lands in the support of the normalized residual (p - q)+ — in
+    particular, never on the rejected draft itself."""
+    p_lg, q_lg, _ = _pq(key, V)
+    n = 1024
+    drafts = jax.random.categorical(
+        jax.random.PRNGKey(key + 99), q_lg, shape=(n,)).astype(jnp.int32)
+    toks, acc = jax.vmap(
+        rejection_sample_row,
+        in_axes=(None, None, 0, None, None, None, 0))(
+        p_lg, q_lg, drafts, jnp.uint32(seed), jnp.uint32(1),
+        jnp.uint32(0), jnp.arange(1, n + 1, dtype=jnp.int32))
+    toks, acc = np.asarray(toks), np.asarray(acc)
+    drafts = np.asarray(drafts)
+    p = np.asarray(jax.nn.softmax(p_lg), np.float64)
+    q = np.asarray(jax.nn.softmax(q_lg), np.float64)
+    freq = np.bincount(toks, minlength=V) / n
+    sigma = np.sqrt(0.25 / n)
+    assert np.abs(freq - p).max() < 4.5 * sigma + 0.015
+    resid = np.maximum(p - q, 0.0)
+    rej = ~acc
+    assert not np.any(toks[rej] == drafts[rej])
+    assert np.all(resid[toks[rej]] > 0)
+
+
+def _verify1(lg, toks, k_slot, *, seed=0, uid=1, pos=5, temperature=0.0,
+             top_k=0, top_p=1.0):
+    """One-slot wrapper over the batched verifier."""
+    em, ne = verify_tokens(
+        jnp.asarray(lg)[None], jnp.asarray(toks, jnp.int32)[None],
+        jnp.asarray([k_slot], jnp.int32),
+        jnp.asarray([seed], jnp.uint32), jnp.asarray([uid], jnp.uint32),
+        jnp.asarray([0], jnp.uint32), jnp.asarray([pos], jnp.int32),
+        jnp.asarray([temperature], jnp.float32),
+        jnp.asarray([top_k], jnp.int32),
+        jnp.asarray([top_p], jnp.float32))
+    return np.asarray(em[0]), int(ne[0])
+
+
+@SETTINGS
+@given(st.sampled_from([4, 9, 33]), st.integers(0, 2**16),
+       st.integers(1, 4))
+def test_verify_greedy_is_exact_argmax(V, key, K):
+    """Greedy verification is argmax-exact: perfect drafts fully accept
+    and the emitted chain IS the per-row argmax chain; a poisoned draft
+    stops acceptance at its row and the correction is that row's argmax
+    — so a greedy spec stream can never diverge from plain decode."""
+    lg = jax.random.normal(jax.random.PRNGKey(key), (K, V)) * 3.0
+    lg = lg + jnp.arange(V) * 1e-3        # strict total order
+    g = np.asarray(jnp.argmax(lg, -1), np.int32)
+    toks = np.concatenate([[0], g[:K - 1]]).astype(np.int32)
+    em, ne = _verify1(lg, toks, K)
+    assert ne == K and (em[:K] == g).all()
+    if K > 1:
+        m = key % (K - 1)                 # poison the draft row m tests
+        bad = toks.copy()
+        bad[m + 1] = (g[m] + 1) % V
+        em, ne = _verify1(lg, bad, K)
+        assert ne == m + 1 and (em[:ne] == g[:ne]).all()
+
+
+@SETTINGS
+@given(st.sampled_from([8, 33]), st.integers(0, 2**16),
+       st.integers(0, 2**16), st.integers(2, 4))
+def test_verify_counter_keys_are_positional(V, key, seed, K):
+    """Sampled verification is a pure function of the per-POSITION
+    counter keys: repeated calls are bitwise identical, ``k_slot == 1``
+    degenerates to exactly the sequential sampler's draw at ``pos+1``,
+    the accepted prefix is the drafts verbatim, and a fully-accepted
+    wave's bonus token equals the sequential draw at ``pos+K`` (so
+    acceptance history never perturbs the stream's sample path)."""
+    pos, temp = 11, 0.9
+    lg = jax.random.normal(jax.random.PRNGKey(key), (K, V)) * 2.0
+    toks = np.asarray(jax.random.randint(
+        jax.random.PRNGKey(key + 1), (K,), 0, V), np.int32)
+
+    def seq(row, at):
+        return int(sample_tokens(
+            lg[row][None], jnp.asarray([seed], jnp.uint32),
+            jnp.asarray([1], jnp.uint32), jnp.asarray([0], jnp.uint32),
+            jnp.asarray([at], jnp.int32),
+            jnp.asarray([temp], jnp.float32),
+            jnp.asarray([0], jnp.int32),
+            jnp.asarray([1.0], jnp.float32))[0])
+
+    em, ne = _verify1(lg, toks, 1, seed=seed, pos=pos, temperature=temp)
+    assert ne == 1 and em[0] == seq(0, pos + 1)
+    em1, ne1 = _verify1(lg, toks, K, seed=seed, pos=pos,
+                        temperature=temp)
+    em2, ne2 = _verify1(lg, toks, K, seed=seed, pos=pos,
+                        temperature=temp)
+    assert ne1 == ne2 and (em1 == em2).all()
+    assert 1 <= ne1 <= K
+    assert (em1[:ne1 - 1] == toks[1:ne1]).all()
+    if ne1 == K:
+        assert em1[K - 1] == seq(K - 1, pos + K)
+    # force full acceptance: under top_k=1 the filtered distribution is
+    # one-hot at the argmax, so argmax drafts are accepted with
+    # probability exactly 1 — the full-accept bookkeeping (n_emit == K,
+    # bonus row) is exercised on every example, not just by luck
+    g = np.asarray(jnp.argmax(lg, -1), np.int32)
+    perfect = np.concatenate([toks[:1], g[:K - 1]]).astype(np.int32)
+    em3, ne3 = _verify1(lg, perfect, K, seed=seed, pos=pos,
+                        temperature=temp, top_k=1)
+    assert ne3 == K and (em3[:K] == g).all()
 
 
 def test_different_seed_uid_or_pos_changes_the_stream():

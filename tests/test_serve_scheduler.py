@@ -17,9 +17,9 @@ import pytest
 
 from repro.configs import SamplingParams, get_config
 from repro.models import build_model
-from repro.serve import (DecoderStepModel, FIFOPolicy, PagedConfig,
-                         PagePool, PriorityPolicy, Request, ServeEngine,
-                         SJFPolicy, SlotTable, make_policy)
+from repro.serve import (DecoderStepModel, EDFPolicy, FIFOPolicy,
+                         PagedConfig, PagePool, PriorityPolicy, Request,
+                         ServeEngine, SJFPolicy, SlotTable, make_policy)
 
 
 def _req(uid, plen=4, gen=4, **kw):
@@ -157,10 +157,82 @@ def test_priority_select_victim_only_when_eviction_can_unblock():
     assert pol.select_victim(tab) == 1
 
 
+def test_edf_orders_by_deadline_none_last():
+    """Earliest deadline first; no-deadline requests sort last (+inf);
+    uid breaks ties inside a deadline class — deterministic under any
+    arrival shuffle."""
+    base = [(0, 9.0), (1, None), (2, 3.0), (3, 9.0), (4, None)]
+    want = [2, 0, 3, 1, 4]
+    pol = EDFPolicy()
+    rng = np.random.default_rng(0)
+    for _ in range(5):
+        tab = SlotTable(4)
+        perm = rng.permutation(len(base))
+        tab.waiting.extend(_req(u, deadline=d)
+                           for u, d in [base[i] for i in perm])
+        assert [r.uid for r in pol.admit_order(tab.waiting, tab)] == want
+
+
+def test_edf_select_victim_latest_deadline_strict_gap():
+    """Victim = the latest-deadline running slot (no-deadline runners
+    are +inf: first out), only on a STRICT gap — equal deadlines never
+    thrash and a no-deadline head never preempts anyone."""
+    pool = PagePool(8, 2, 4)
+    tab = SlotTable(2, pool=pool, pages_for_req=lambda r: 4)
+    for uid, dl in [(0, 5.0), (1, None)]:
+        s = tab.alloc_slot()
+        pool.reserve(s, 4)
+        tab.slot_req[s] = _req(uid, deadline=dl)
+        tab.active[s] = True
+    pol = EDFPolicy()
+    assert pol.select_victim(tab) is None       # nothing waiting
+    tab.waiting.append(_req(2, deadline=2.0))
+    assert pol.select_victim(tab) == 1          # best-effort slot first
+    tab.slot_req[1].deadline = 2.0              # equal to head: no gap
+    assert pol.select_victim(tab) == 0          # 5.0 is still later
+    tab.slot_req[0].deadline = 2.0              # all equal: no victim
+    assert pol.select_victim(tab) is None
+    tab.waiting[0].deadline = None              # no-deadline head never
+    tab.slot_req[0].deadline = 9.0              # preempts a dated runner
+    assert pol.select_victim(tab) is None
+    assert EDFPolicy(preempt=False).select_victim(tab) is None
+    # unpaged state: eviction has no page swap to make it cheap -> None
+    tab2 = SlotTable(2)
+    tab2.waiting.append(_req(9, deadline=1.0))
+    assert pol.select_victim(tab2) is None
+
+
+def test_edf_select_victim_only_when_eviction_can_unblock():
+    """Same cumulative-unblock guard as priority: no victim is named
+    when even evicting every later-deadline runner cannot free enough
+    pages for the blocked head."""
+    pool = PagePool(8, 2, 8)
+    tab = SlotTable(2, pool=pool,
+                    pages_for_req=lambda r: int(r.max_new_tokens))
+    for uid, dl in [(0, 1.0), (1, 50.0)]:
+        s = tab.alloc_slot()
+        pool.reserve(s, 4)
+        tab.slot_req[s] = _req(uid, gen=4, deadline=dl)
+        tab.active[s] = True
+    pol = EDFPolicy()
+    head = _req(2, gen=8, deadline=10.0)
+    tab.waiting.append(head)
+    # only slot 1 (deadline 50 > 10) is evictable; it frees 4 of the 8
+    # the head needs and nothing is unreserved -> no victim
+    assert pol.select_victim(tab) is None
+    head.max_new_tokens = 4                     # slot 1's 4 pages suffice
+    assert pol.select_victim(tab) == 1
+    # cumulative progress: both runners outranked -> 4 + 4 cover the 8
+    head.max_new_tokens = 8
+    tab.slot_req[0].deadline = 20.0
+    assert pol.select_victim(tab) == 1          # latest deadline first
+
+
 def test_make_policy_names_and_instances():
     assert isinstance(make_policy("fifo"), FIFOPolicy)
     assert isinstance(make_policy("priority"), PriorityPolicy)
     assert isinstance(make_policy("sjf"), SJFPolicy)
+    assert isinstance(make_policy("edf"), EDFPolicy)
     pol = SJFPolicy(aging=2.0)
     assert make_policy(pol) is pol
     with pytest.raises(ValueError, match="policy must be one of"):
@@ -258,6 +330,7 @@ LENS = [(5, 4), (13, 6), (3, 3), (9, 5)]
 SPS = [None, dict(temperature=0.9, top_k=12, seed=3), None,
        dict(temperature=1.2, top_p=0.8, seed=5)]
 PRIOS = [0, 0, 5, 1]
+DLS = [None, None, 1.0, 50.0]
 
 
 def _run_policy(cfg, model, params, policy, *, slots=2):
@@ -268,7 +341,7 @@ def _run_policy(cfg, model, params, policy, *, slots=2):
         sp = SamplingParams(**SPS[i]) if SPS[i] else None
         reqs.append(eng.submit(rng.integers(0, cfg.vocab, size=p),
                                max_new_tokens=g, sampling=sp,
-                               priority=PRIOS[i]))
+                               priority=PRIOS[i], deadline=DLS[i]))
     done = eng.run()
     assert sm._jit_step._cache_size() == 1
     assert eng.pool.pages_in_use == 0 and eng.pool.reserved_total == 0
@@ -289,10 +362,12 @@ def test_policies_move_requests_in_time_never_in_bytes(gqa):
     prio_toks, prio_order, _ = _run_policy(cfg, model, params,
                                            "priority")
     sjf_toks, sjf_order, _ = _run_policy(cfg, model, params, "sjf")
-    assert fifo_toks == prio_toks == sjf_toks
+    edf_toks, edf_order, _ = _run_policy(cfg, model, params, "edf")
+    assert fifo_toks == prio_toks == sjf_toks == edf_toks
     assert fifo_order.index(2) > 0           # fifo: uid 2 waits its turn
     assert prio_order[0] == 2                # priority: class 5 first out
     assert sjf_order[0] == 2                 # sjf: shortest prompt first
+    assert edf_order[0] == 2                 # edf: tightest deadline
     assert fifo_order != prio_order
 
 

@@ -1,0 +1,266 @@
+"""Speculative decoding through the paged engine (serve/spec.py).
+
+The load-bearing contract: a GREEDY speculative stream is BITWISE the
+target-only greedy stream — the drafter can only change how many target
+calls it took to produce the bytes, never the bytes.  Sampled streams
+draw from the target's distribution via counter-keyed rejection/residual
+sampling (tests/test_serve_sampling.py pins the sampler in isolation);
+at the engine level greedy rows of a mixed batch must stay bitwise while
+sampled rows may legitimately re-draw (the per-position salts differ
+from the sequential path once a rejection occurs).
+
+Fast half (tier-1): GQA target + minGRU drafter — bitwise identity at
+k=4, heterogeneous per-slot widths, mixed greedy/sampled traffic, ONE
+compiled verify and ONE compiled propose, pool drained; plus the
+submit()/ServeConfig/engine-compat validation satellites.  Slow half:
+the same identity sweep over sliding-window (gemma3) and MLA
+(deepseek) targets and k in {2, 4}.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import SamplingParams, ServeConfig, get_config
+from repro.models import build_model
+from repro.serve import (DecoderStepModel, DraftStepModel, PagedConfig,
+                         ServeEngine)
+from repro.serve.spec import heterogeneous_k
+
+LENS = [(7, 9), (13, 6), (5, 12), (9, 5), (11, 8), (6, 10)]
+
+
+@pytest.fixture(scope="module")
+def drafter_model():
+    cfg = get_config("minimalist-lm-360m-smoke")
+    model = build_model(cfg)
+    return cfg, model, model.init(jax.random.PRNGKey(1))
+
+
+def _streams(arch, spec_k, drafter_model, *, het=False, sampled=False,
+             slots=3, force_drafter=False):
+    """Run the LENS workload; returns per-request streams + the engine."""
+    cfg = dataclasses.replace(get_config(arch), paged_impl="gather")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    sm = DecoderStepModel(model, max_len=64, kv_layout="paged",
+                          paged=PagedConfig(page_size=4))
+    kw = {}
+    if spec_k > 1 or force_drafter:
+        _dcfg, dmodel, dparams = drafter_model
+        kw = dict(drafter=DraftStepModel(dmodel, spec_k=spec_k),
+                  drafter_params=dparams, spec_k=spec_k)
+    eng = ServeEngine(sm, params, slots=slots, **kw)
+    rng = np.random.default_rng(0)
+    reqs = []
+    for i, (p, g) in enumerate(LENS):
+        samp = (SamplingParams(temperature=0.8, top_k=7, top_p=0.9,
+                               seed=123) if sampled and i % 2 else None)
+        sk = 1 + (i % spec_k) if het and spec_k > 1 else None
+        reqs.append(eng.submit(rng.integers(0, cfg.vocab, p),
+                               max_new_tokens=g, sampling=samp,
+                               spec_k=sk))
+    eng.run()
+    assert eng.pool.pages_in_use == 0 and eng.pool.reserved_total == 0
+    if eng.drafter is not None:
+        # compile discipline: per-slot widths ride as int32 DATA through
+        # ONE compiled verify and ONE compiled propose program
+        assert sm._jit_verify._cache_size() == 1
+        assert eng.drafter._jit_propose._cache_size() == 1
+    return [list(map(int, r.tokens)) for r in reqs], eng
+
+
+# ---------------------------------------------------------------------------
+# fast: GQA identity + widths + mixed traffic (tier-1)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def gqa_base(drafter_model):
+    """Target-only greedy streams — the oracle every spec run must hit."""
+    base, _ = _streams("smollm-360m-smoke", 1, drafter_model)
+    return base
+
+
+def test_greedy_spec_bitwise_identity(gqa_base, drafter_model):
+    spec, eng = _streams("smollm-360m-smoke", 4, drafter_model)
+    assert spec == gqa_base
+    assert eng.n_drafts_proposed > 0
+    # every wave decided at least the correction token; with a working
+    # accept path the engine must have taken FEWER waves than tokens
+    assert eng.n_steps < eng._n_decoded
+
+
+def test_heterogeneous_per_slot_widths(gqa_base, drafter_model):
+    """Requests at spec_k 1/2/3/4 co-batched in one engine: per-slot
+    widths are data, and every stream still matches target-only."""
+    het, eng = _streams("smollm-360m-smoke", 4, drafter_model, het=True)
+    assert het == gqa_base
+    assert eng._req_k.max() <= 4
+
+
+def test_mixed_greedy_sampled_traffic(drafter_model):
+    """Greedy rows of a mixed batch are bitwise the target-only rows
+    even when sampled rows share every wave (sampled rows draw from the
+    target's distribution but not the same sample path)."""
+    base, _ = _streams("smollm-360m-smoke", 1, drafter_model,
+                       sampled=True)
+    spec, _ = _streams("smollm-360m-smoke", 4, drafter_model,
+                       sampled=True)
+    for i in range(0, len(base), 2):       # even rows are greedy
+        assert spec[i] == base[i]
+
+
+def test_spec_k1_engine_is_plain_decode(drafter_model):
+    """A drafter-carrying engine at spec_k=1 degenerates to plain decode
+    bitwise — INCLUDING the sampled rows: a width-1 wave has no drafts
+    to test, so the verifier's only draw is the unsalted sequential
+    sample at pos+1, the exact token plain decode draws."""
+    base, _ = _streams("smollm-360m-smoke", 1, drafter_model,
+                       sampled=True)
+    one, eng = _streams("smollm-360m-smoke", 1, drafter_model,
+                        sampled=True, force_drafter=True)
+    assert eng.drafter is not None
+    assert one == base
+
+
+# ---------------------------------------------------------------------------
+# validation satellites: clear errors, nothing burned
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def gqa_engine(drafter_model):
+    cfg = dataclasses.replace(get_config("smollm-360m-smoke"),
+                              paged_impl="gather")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    _dcfg, dmodel, dparams = drafter_model
+    sm = DecoderStepModel(model, max_len=64, kv_layout="paged",
+                          paged=PagedConfig(page_size=4))
+    eng = ServeEngine(sm, params, slots=2,
+                      drafter=DraftStepModel(dmodel, spec_k=4),
+                      drafter_params=dparams, spec_k=4)
+    return cfg, model, params, eng
+
+
+def test_submit_validates_spec_k(gqa_engine):
+    cfg, _model, _params, eng = gqa_engine
+    prompt = np.arange(4)
+    for bad in [0, -1, 5, 1.5, "wide", True]:
+        with pytest.raises(ValueError, match="spec_k"):
+            eng.submit(prompt, max_new_tokens=2, spec_k=bad)
+    assert not eng.waiting                    # nothing enqueued
+    ok = eng.submit(prompt, max_new_tokens=2, spec_k=3)
+    assert ok.uid == 0                        # failed submits burned no uid
+    assert ok.spec_k == 3
+    eng.run()
+
+
+def test_serve_config_validates_spec_fields():
+    with pytest.raises(ValueError, match="spec_k"):
+        ServeConfig(spec_k=0)
+    with pytest.raises(ValueError, match="drafter"):
+        ServeConfig(spec_k=2)                 # width without a drafter
+    with pytest.raises(ValueError, match="paged"):
+        ServeConfig(drafter="minimalist-lm-360m-smoke", spec_k=2)
+    with pytest.raises(ValueError, match="prefix_cache"):
+        ServeConfig(drafter="minimalist-lm-360m-smoke", spec_k=2,
+                    kv_layout="paged", prefix_cache=True)
+    ServeConfig(drafter="minimalist-lm-360m-smoke", spec_k=2,
+                kv_layout="paged")            # the valid shape
+
+
+def test_draft_model_rejects_attention_and_bad_k(drafter_model):
+    _dcfg, dmodel, _dparams = drafter_model
+    with pytest.raises(ValueError, match="spec_k"):
+        DraftStepModel(dmodel, spec_k=0)
+    attn = build_model(get_config("smollm-360m-smoke"))
+    with pytest.raises(ValueError, match="attention"):
+        DraftStepModel(attn, spec_k=2)
+
+
+def test_engine_rejects_incompatible_spec_setups(drafter_model):
+    _dcfg, dmodel, dparams = drafter_model
+    cfg = dataclasses.replace(get_config("smollm-360m-smoke"),
+                              paged_impl="gather")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    def paged_sm(m, **kw):
+        return DecoderStepModel(m, max_len=64, kv_layout="paged",
+                                paged=PagedConfig(page_size=4), **kw)
+
+    drafter = DraftStepModel(dmodel, spec_k=4)
+    # drafter without a width / width without a drafter
+    with pytest.raises(ValueError, match="spec_k"):
+        ServeEngine(paged_sm(model), params, slots=2, spec_k=4)
+    with pytest.raises(ValueError, match="spec_k"):
+        ServeEngine(paged_sm(model), params, slots=2, drafter=drafter,
+                    drafter_params=dparams, spec_k=2)  # k mismatch
+    # dense target: no paged commit path to verify through
+    dense = DecoderStepModel(model, max_len=64)
+    with pytest.raises(ValueError, match="paged"):
+        ServeEngine(dense, params, slots=2, drafter=drafter,
+                    drafter_params=dparams, spec_k=4)
+    # prefix cache attaches mid-stream state the drafter cannot replay
+    with pytest.raises(ValueError, match="prefix"):
+        ServeEngine(paged_sm(model), params, slots=2,
+                    prefix_cache=True, drafter=drafter,
+                    drafter_params=dparams, spec_k=4)
+    # vocab mismatch between drafter and target
+    vcfg = dataclasses.replace(get_config("minimalist-lm-360m-smoke"),
+                               vocab=300)
+    vdrafter = DraftStepModel(build_model(vcfg), spec_k=4)
+    with pytest.raises(ValueError, match="vocab"):
+        ServeEngine(paged_sm(model), params, slots=2, drafter=vdrafter,
+                    drafter_params=dparams, spec_k=4)
+    # int8 pool: the verify overlay reads raw bf16 page rows
+    qmodel = build_model(dataclasses.replace(cfg, kv_dtype="int8"))
+    with pytest.raises(ValueError, match="int8"):
+        ServeEngine(paged_sm(qmodel), params, slots=2, drafter=drafter,
+                    drafter_params=dparams, spec_k=4)
+    # sliding-window ring: a wave must fit the shortest ring
+    wcfg = dataclasses.replace(get_config("gemma3-4b-smoke"),
+                               paged_impl="gather")
+    wmodel = build_model(wcfg)
+    wparams = wmodel.init(jax.random.PRNGKey(0))
+    wide = DraftStepModel(dmodel, spec_k=9)   # window is 8
+    with pytest.raises(ValueError, match="window"):
+        ServeEngine(paged_sm(wmodel), wparams, slots=2, drafter=wide,
+                    drafter_params=dparams, spec_k=9)
+
+
+def test_heterogeneous_k_clamps():
+    """Width = request's k, clamped to [1, k_max] and to the remaining
+    generation budget (never commit K/V past pos + remaining)."""
+    req = np.array([0, 1, 4, 9, 3], np.int32)
+    rem = np.array([5, 5, 2, 5, 1], np.int32)
+    out = heterogeneous_k(req, rem, 4)
+    assert out.dtype == np.int32
+    assert list(out) == [1, 1, 2, 4, 1]
+
+
+# ---------------------------------------------------------------------------
+# slow: sliding-window + MLA targets, k sweep
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch", ["gemma3-4b-smoke",
+                                  "deepseek-v3-671b-smoke"])
+def test_greedy_spec_bitwise_identity_window_mla(arch, drafter_model):
+    base, _ = _streams(arch, 1, drafter_model)
+    for k in (2, 4):
+        spec, _ = _streams(arch, k, drafter_model)
+        assert spec == base, f"{arch} k={k} diverged from target-only"
+    het, _ = _streams(arch, 4, drafter_model, het=True)
+    assert het == base
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch", ["gemma3-4b-smoke",
+                                  "deepseek-v3-671b-smoke"])
+def test_mixed_traffic_window_mla(arch, drafter_model):
+    base, _ = _streams(arch, 1, drafter_model, sampled=True)
+    spec, _ = _streams(arch, 4, drafter_model, sampled=True)
+    for i in range(0, len(base), 2):
+        assert spec[i] == base[i]
