@@ -1,9 +1,37 @@
-"""Shared benchmark utilities: timing + CSV row emission."""
+"""Shared benchmark utilities: timing, CSV rows, JSON artifacts.
+
+Benchmarks report two ways:
+
+  * ``emit(rows)`` — the historical CSV lines on stdout (kept; CI greps
+    them and the perf trajectory in ROADMAP.md quotes them);
+  * ``write_bench(name, ...)`` — a machine-readable ``BENCH_<name>.json``
+    artifact carrying the run config, every row, every PINNED assertion
+    the run verified (recorded via :func:`check`), and wall time — the
+    nightly workflow uploads these so perf history is diffable without
+    parsing log text.
+
+Artifact schema (``repro-bench/v1``)::
+
+    {"schema": "repro-bench/v1", "name": ..., "created_unix": ...,
+     "config": {...}, "rows": [{"name", "us_per_call", "derived"}, ...],
+     "assertions": [{"name", "passed", "detail"}, ...],
+     "wall_time_s": ...}
+
+``check(cond, name, detail)`` both RECORDS the assertion outcome for the
+artifact and raises on failure (same behavior as the bare ``assert`` it
+replaces) — a bench artifact therefore lists exactly the invariants the
+run proved, and a failed run still dies loudly.
+"""
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import jax
+
+#: Assertion outcomes recorded by :func:`check` since :func:`reset_checks`.
+_CHECKS: list = []
 
 
 def time_fn(fn, *args, warmup=2, iters=10, **kw):
@@ -25,3 +53,77 @@ def emit(rows):
     for r in rows:
         print(f"{r['name']},{r.get('us_per_call', '')},{r.get('derived', '')}")
     return rows
+
+
+# -- pinned-assertion recording ------------------------------------------
+def reset_checks():
+    """Start a fresh assertion record (call at the top of ``run()``)."""
+    _CHECKS.clear()
+
+
+def check(cond, name: str, detail: str = ""):
+    """Record a pinned assertion for the bench artifact AND enforce it.
+
+    Drop-in for ``assert cond, f"{name}: {detail}"`` — the outcome is
+    recorded (pass or fail) before the failure raises, so a failed
+    nightly still uploads an artifact naming the broken invariant."""
+    _CHECKS.append({"name": str(name), "passed": bool(cond),
+                    "detail": str(detail)})
+    assert cond, f"{name}: {detail}"
+
+
+def checks() -> list:
+    """The assertion record accumulated since :func:`reset_checks`."""
+    return list(_CHECKS)
+
+
+# -- machine-readable artifacts ------------------------------------------
+def write_bench(name: str, *, config, rows, wall_s, assertions=None,
+                out_dir=None) -> str:
+    """Write ``BENCH_<name>.json`` (schema ``repro-bench/v1``).
+
+    ``assertions=None`` takes the :func:`check` record accumulated since
+    the last :func:`reset_checks`.  ``out_dir`` defaults to ``$BENCH_DIR``
+    or the current directory (where CI's upload-artifact glob looks)."""
+    doc = {"schema": "repro-bench/v1",
+           "name": str(name),
+           "created_unix": time.time(),
+           "config": dict(config),
+           "rows": [dict(r) for r in rows],
+           "assertions": (checks() if assertions is None
+                          else [dict(a) for a in assertions]),
+           "wall_time_s": float(wall_s)}
+    validate_bench(doc)
+    out_dir = out_dir or os.environ.get("BENCH_DIR") or "."
+    path = os.path.join(out_dir, f"BENCH_{name}.json")
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"bench artifact: {path} ({len(doc['rows'])} rows, "
+          f"{len(doc['assertions'])} assertions, "
+          f"{doc['wall_time_s']:.1f}s)")
+    return path
+
+
+def validate_bench(doc) -> dict:
+    """Schema check for a ``repro-bench/v1`` document; raises ValueError
+    on shape violations, returns the doc unchanged."""
+    if not isinstance(doc, dict):
+        raise ValueError(f"bench doc must be a dict, got {type(doc)}")
+    if doc.get("schema") != "repro-bench/v1":
+        raise ValueError(f"unknown bench schema {doc.get('schema')!r}")
+    for key, typ in (("name", str), ("config", dict), ("rows", list),
+                     ("assertions", list), ("wall_time_s", (int, float)),
+                     ("created_unix", (int, float))):
+        if not isinstance(doc.get(key), typ):
+            raise ValueError(f"bench field {key!r} must be {typ}, "
+                             f"got {type(doc.get(key))}")
+    for r in doc["rows"]:
+        if not isinstance(r, dict) or "name" not in r:
+            raise ValueError(f"bench row must be a dict with 'name': {r!r}")
+    for a in doc["assertions"]:
+        if (not isinstance(a, dict) or "name" not in a
+                or "passed" not in a):
+            raise ValueError("bench assertion must be a dict with "
+                             f"'name' and 'passed': {a!r}")
+    return doc

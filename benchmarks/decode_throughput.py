@@ -40,7 +40,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import check, emit, reset_checks, write_bench
 from repro.configs import SamplingParams, get_config
 from repro.models import build_model
 from repro.serve import DecoderStepModel, ServeEngine
@@ -333,8 +333,9 @@ def _paged_compare(batch=4, gen=8, prompt=16, chunk=8):
                        f"p50_ms={np.percentile(lat,50)*1e3:.2f};"
                        f"p99_ms={np.percentile(lat,99)*1e3:.2f}",
         })
-    assert streams["paged_int8"] == streams["paged"], \
-        "int8 paged greedy streams diverged from bf16 paged"
+    check(streams["paged_int8"] == streams["paged"],
+          "int8_paged_greedy_identical",
+          "int8 paged greedy streams diverged from bf16 paged")
     rows[-2]["derived"] += \
         f";paged_vs_dense={out['paged']/max(out['dense'],1e-9):.2f}x"
     rows[-1]["derived"] += (
@@ -363,8 +364,8 @@ def _paged_compare(batch=4, gen=8, prompt=16, chunk=8):
         admits[label + "_pool_b"] = pool_b
         admits[label + "_sm"] = sm_p
     int8_gain = admits["int8"] / max(admits["bf16"], 1)
-    assert int8_gain >= 1.9, \
-        f"int8 capacity gain {int8_gain:.2f}x < pinned 1.9x"
+    check(int8_gain >= 1.9, "int8_capacity_gain",
+          f"int8 capacity gain {int8_gain:.2f}x < pinned 1.9x")
     rows.append({
         "name": f"paged_capacity/max_len{long_max}/req{req_len}",
         "us_per_call": "0",
@@ -396,8 +397,8 @@ def _paged_compare(batch=4, gen=8, prompt=16, chunk=8):
         model_bytes = (full - fixed) * n_attn      # per-layer -> stack
         per_page = admits[label + "_pool_b"] // sm_p.max_pages
         measured = pages * per_page + pages * 4 * n_attn
-        assert model_bytes == measured, \
-            f"{label}: cost model {model_bytes} != measured {measured}"
+        check(model_bytes == measured, f"paged_cost_model_{label}",
+              f"cost model {model_bytes} != measured {measured}")
         parts.append(f"{label}_model={model_bytes};"
                      f"{label}_measured={measured}")
     cm_row["derived"] = ";".join(parts) + ";match=True"
@@ -522,6 +523,8 @@ def _moe_compare(batch=4, gen=8, prompt=16, chunk=8):
 def run(arch="minimalist-lm-360m", batches=(1, 64, 256), gen=16,
         prompt=32, chunk=16, prefill_lens=(256, 512), mesh_spec="",
         kv_layout="dense"):
+    reset_checks()
+    wall0 = time.perf_counter()
     cfg = get_config(arch + "-smoke")
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
@@ -587,7 +590,14 @@ def run(arch="minimalist-lm-360m", batches=(1, 64, 256), gen=16,
     rows.extend(_moe_compare(gen=gen))
     rows.extend(_paged_compare(gen=gen))
     rows.extend(_prefix_compare(gen=max(2, gen // 4)))
-    return emit(rows)
+    emit(rows)
+    write_bench("decode_throughput",
+                config=dict(arch=arch, batches=list(batches), gen=gen,
+                            prompt=prompt, chunk=chunk,
+                            prefill_lens=list(prefill_lens),
+                            mesh=mesh_spec, kv_layout=kv_layout),
+                rows=rows, wall_s=time.perf_counter() - wall0)
+    return rows
 
 
 def main(argv=None):

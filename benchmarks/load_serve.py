@@ -57,7 +57,7 @@ from collections import deque
 import jax
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import check, emit, reset_checks, write_bench
 from benchmarks.decode_throughput import _warm_engine
 from repro.common import pow2ceil
 from repro.configs import get_config
@@ -217,6 +217,8 @@ def summarize(policy, recs, itl, stats):
 
 def run(arch="smollm-360m-smoke", slots=4, n=32, rate=1.5, seed=0,
         policies=("fifo", "priority", "sjf", "edf"), trace_path=None):
+    reset_checks()
+    wall0 = time.perf_counter()
     cfg = get_config(arch)
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
@@ -244,24 +246,28 @@ def run(arch="smollm-360m-smoke", slots=4, n=32, rate=1.5, seed=0,
                         / max(len(slo), 1))
 
     for policy in policies:              # latency won, bytes untouched
-        assert streams[policy] == streams[policies[0]], \
-            f"{policy} changed token bytes vs {policies[0]}"
+        check(streams[policy] == streams[policies[0]],
+              f"streams_bitwise_{policy}",
+              f"{policy} changed token bytes vs {policies[0]}")
 
     derived = [f"n_requests={len(trace)}", f"slots={slots}"]
     if "fifo" in policies and "priority" in policies:
         f, p = p99["fifo", "high"], p99["priority", "high"]
-        assert p < f, (f"priority p99 TTFT (high class) {p:.1f} steps "
-                       f"did not beat fifo {f:.1f}")
+        check(p < f, "priority_beats_fifo_high_p99",
+              f"priority p99 TTFT (high class) {p:.1f} steps "
+              f"did not beat fifo {f:.1f}")
         derived.append(f"high_p99_steps_fifo={f:.1f}")
         derived.append(f"high_p99_steps_priority={p:.1f}")
         derived.append(f"priority_win={f / max(p, 1.0):.1f}x")
     if "fifo" in policies and "sjf" in policies:
         f, s = p99["fifo", "short"], p99["sjf", "short"]
-        assert s < f, (f"sjf p99 TTFT (short class) {s:.1f} steps did "
-                       f"not beat fifo {f:.1f}")
+        check(s < f, "sjf_beats_fifo_short_p99",
+              f"sjf p99 TTFT (short class) {s:.1f} steps did "
+              f"not beat fifo {f:.1f}")
         f50, s50 = p99["fifo", "p50"], p99["sjf", "p50"]
-        assert s50 < f50, (f"sjf p50 TTFT (all) {s50:.1f} steps did "
-                           f"not beat fifo {f50:.1f}")
+        check(s50 < f50, "sjf_beats_fifo_all_p50",
+              f"sjf p50 TTFT (all) {s50:.1f} steps did "
+              f"not beat fifo {f50:.1f}")
         derived.append(f"short_p99_steps_fifo={f:.1f}")
         derived.append(f"short_p99_steps_sjf={s:.1f}")
         derived.append(f"sjf_win={f / max(s, 1.0):.1f}x")
@@ -271,13 +277,20 @@ def run(arch="smollm-360m-smoke", slots=4, n=32, rate=1.5, seed=0,
         derived.append(f"all_p99_steps_sjf={p99['sjf', 'all']:.1f}")
     if "fifo" in policies and "edf" in policies:
         f, e = miss["fifo"], miss["edf"]
-        assert e < f, (f"edf deadline miss rate {e:.3f} did not beat "
-                       f"fifo {f:.3f}")
+        check(e < f, "edf_beats_fifo_miss_rate",
+              f"edf deadline miss rate {e:.3f} did not beat "
+              f"fifo {f:.3f}")
         derived.append(f"miss_rate_fifo={f:.3f}")
         derived.append(f"miss_rate_edf={e:.3f}")
     rows.append({"name": "load_serve/summary", "us_per_call": "0",
                  "derived": ";".join(derived)})
-    return emit(rows)
+    emit(rows)
+    write_bench("load_serve",
+                config=dict(arch=arch, slots=slots, n=n, rate=rate,
+                            seed=seed, policies=list(policies),
+                            trace=trace_path),
+                rows=rows, wall_s=time.perf_counter() - wall0)
+    return rows
 
 
 def main(argv=None):

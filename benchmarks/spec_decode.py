@@ -32,7 +32,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import check, emit, reset_checks, write_bench
 from repro.configs import get_config
 from repro.models import build_model
 from repro.serve import (DecoderStepModel, DraftStepModel, PagedConfig,
@@ -89,6 +89,8 @@ def _drain(eng, prompts, glens, timed):
 
 
 def run(spec_k=4, batches=(1, 4), gen=32, prompt=16):
+    reset_checks()
+    wall0 = time.perf_counter()
     rng = np.random.default_rng(29)
     rows = []
     for batch in batches:
@@ -102,7 +104,9 @@ def run(spec_k=4, batches=(1, 4), gen=32, prompt=16):
             eng, _cfg = _build(k, batch, max_len)
             _drain(eng, prompts, glens, timed=False)      # compile
             r = _drain(eng, prompts, glens, timed=True)
-            assert eng.pool.pages_in_use == 0
+            check(eng.pool.pages_in_use == 0,
+                  f"pool_drained_{label}_batch{batch}",
+                  f"{eng.pool.pages_in_use} pages leaked")
             r["accept"] = eng.stats().accept_rate if k > 1 else 0.0
             out[label] = r
             rows.append({
@@ -120,12 +124,17 @@ def run(spec_k=4, batches=(1, 4), gen=32, prompt=16):
         # at batch 1, and each step must decide clearly more than one
         # token (the zero-head drafter makes both deterministic)
         per_slot = spec["per_step"] / max(batch, 1)
-        assert per_slot > 1.5, \
-            f"batch{batch}: {per_slot:.2f} accepted tokens/step <= 1.5"
+        check(per_slot > 1.5, f"tokens_per_step_batch{batch}",
+              f"{per_slot:.2f} accepted tokens/step <= 1.5")
         if batch == 1:
-            assert speedup > 1.0, \
-                f"batch-1 spec speedup {speedup:.2f}x <= 1"
-    return emit(rows)
+            check(speedup > 1.0, "batch1_spec_speedup",
+                  f"batch-1 spec speedup {speedup:.2f}x <= 1")
+    emit(rows)
+    write_bench("spec_decode",
+                config=dict(target=TARGET, drafter=DRAFTER, spec_k=spec_k,
+                            batches=list(batches), gen=gen, prompt=prompt),
+                rows=rows, wall_s=time.perf_counter() - wall0)
+    return rows
 
 
 def main(argv=None):

@@ -27,6 +27,7 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+import json
 import time
 
 import jax
@@ -36,7 +37,7 @@ import numpy as np
 from repro.configs import SamplingParams, ServeConfig, get_config
 from repro.launch.mesh import make_local_mesh, mesh_info
 from repro.models import build_model
-from repro.serve import DecoderStepModel, ServeEngine
+from repro.serve import DecoderStepModel, ServeEngine, Telemetry
 
 
 def generate(model, params, prompts, *, max_len, gen_tokens):
@@ -66,7 +67,7 @@ def generate(model, params, prompts, *, max_len, gen_tokens):
 
 
 def build_engine(model, params, serve: ServeConfig = ServeConfig(),
-                 mesh=None):
+                 mesh=None, telemetry=None):
     kw = {}
     if serve.kv_layout == "paged":
         from repro.serve import PagedConfig
@@ -88,7 +89,7 @@ def build_engine(model, params, serve: ServeConfig = ServeConfig(),
         kw = {}
     return ServeEngine(sm, params, slots=serve.slots, mesh=mesh,
                        prefix_cache=serve.prefix_cache,
-                       policy=serve.policy, **kw)
+                       policy=serve.policy, telemetry=telemetry, **kw)
 
 
 def parse_mesh(spec: str):
@@ -199,6 +200,13 @@ def main(argv=None):
     ap.add_argument("--verbose", action="store_true",
                     help="print a per-step stats line (occupancy, "
                          "queue depth, pool pages, preemptions)")
+    ap.add_argument("--trace", default="", metavar="OUT.json",
+                    help="record request-lifecycle + wave spans and save "
+                         "them as Chrome trace_event JSON — open in "
+                         "https://ui.perfetto.dev (README §Observability)")
+    ap.add_argument("--metrics", action="store_true",
+                    help="print the engine metrics registry "
+                         "(engine.metrics()) as JSON after the run")
     ap.add_argument("--fork", type=int, default=0,
                     help="fork the FIRST admitted request into N extra "
                          "copy-on-write streams after one decode step "
@@ -270,6 +278,9 @@ def main(argv=None):
         ap.error("--drafter needs --kv-layout paged")
     if args.spec_k > 1 and not drafter_name:
         ap.error("--spec-k > 1 needs --drafter")
+    telemetry = None
+    if args.trace or args.metrics:
+        telemetry = Telemetry(trace=bool(args.trace))
     eng = build_engine(model, params,
                        ServeConfig(slots=args.slots, max_len=max_len,
                                    prefill_chunk=args.prefill_chunk,
@@ -280,7 +291,7 @@ def main(argv=None):
                                    policy=args.policy,
                                    spec_k=args.spec_k,
                                    drafter=drafter_name),
-                       mesh=mesh)
+                       mesh=mesh, telemetry=telemetry)
     if eng.drafter is not None:
         print(f"speculative decoding: drafter {drafter_name}, "
               f"k={args.spec_k}")
@@ -336,6 +347,13 @@ def main(argv=None):
     if eng.n_forks or eng.n_cow_copies:
         print(f"forks: {eng.n_forks}, COW page copies: "
               f"{eng.n_cow_copies}")
+    if args.trace:
+        eng.telemetry.save_trace(args.trace)
+        print(f"trace: {len(eng.telemetry.trace)} events -> {args.trace} "
+              "(open in https://ui.perfetto.dev)")
+    if args.metrics:
+        print("metrics:", json.dumps(eng.metrics(), indent=2,
+                                     sort_keys=True))
     print("sample:", done[0].tokens[:16])
     return done
 

@@ -46,6 +46,9 @@ from repro.serve.scheduler import (POLICIES, EDFPolicy, FIFOPolicy,
                                    SJFPolicy, make_policy)
 from repro.serve.spec import DraftStepModel
 from repro.serve.state import SlotTable
+from repro.serve.telemetry import (NULL_TELEMETRY, MetricsRegistry,
+                                   NullTelemetry, PercentileWindow,
+                                   RateWindow, StatsSink, Telemetry)
 
 __all__ = ["Request", "SamplingParams", "ServeEngine", "ServeShardings",
            "chunked_prefill", "sample_tokens", "StepModel",
@@ -53,4 +56,6 @@ __all__ = ["Request", "SamplingParams", "ServeEngine", "ServeShardings",
            "PagedConfig", "PagePool", "PrefixCache", "EngineStats",
            "SlotTable", "SchedulingPolicy", "FIFOPolicy",
            "PriorityPolicy", "SJFPolicy", "EDFPolicy", "POLICIES",
-           "make_policy"]
+           "make_policy", "Telemetry", "NullTelemetry", "NULL_TELEMETRY",
+           "MetricsRegistry", "RateWindow", "PercentileWindow",
+           "StatsSink"]

@@ -55,8 +55,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from collections import deque
-from typing import Any, List, Optional
+from typing import Any, Dict, List, Optional
 
 import jax.numpy as jnp
 import numpy as np
@@ -66,9 +65,18 @@ from repro.configs.base import SamplingParams
 from repro.serve.sampling import KNOB_DTYPES
 from repro.serve.scheduler import make_policy
 from repro.serve.spec import heterogeneous_k
+from repro.serve.telemetry import (NULL_TELEMETRY, PercentileWindow,
+                                   RateWindow, StatsSink)
 # Request/_knob_values moved to serve.state with the layer split; they
 # are re-exported here because engine.py was their public home
 from repro.serve.state import Request, SlotTable, _knob_values  # noqa: F401
+
+# jitted wrappers whose compile counts engine.metrics() reports — a
+# StepModel/drafter may carry any subset (getattr skips the rest)
+_JIT_PROGRAMS = ("_jit_step", "_jit_write", "_jit_prefill_fast",
+                 "_jit_prefill_scan", "_jit_sample", "_jit_seed",
+                 "_jit_verify", "_jit_copy_slot", "_jit_copy_pages")
+_DRAFT_JIT_PROGRAMS = ("_jit_propose", "_jit_install")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -89,6 +97,9 @@ class EngineStats:
     pages_reserved: int        # 0 when unpaged
     n_preemptions: int
     utilization: float         # decode tokens per slot-step paid
+    # requests that finished after their submit(deadline=...) step count
+    # elapsed on the engine's step clock (0 when no deadlines are set)
+    deadline_misses: int = 0
     # rate stream (what an autoscaler actually acts on): windowed decode
     # throughput, submit->admission wait percentiles, and the speculative
     # draft-acceptance rate (0 when no drafter is configured)
@@ -132,12 +143,19 @@ class ServeEngine:
 
     def __init__(self, step_model, params, *, slots: int = 8, mesh=None,
                  prefix_cache: bool = False, policy="fifo",
-                 drafter=None, drafter_params=None, spec_k: int = 1):
+                 drafter=None, drafter_params=None, spec_k: int = 1,
+                 telemetry=None):
         self.sm = step_model
         self.slots = int(slots)
         if self.slots < 1:
             raise ValueError("slots must be >= 1")
+        # observability handle (serve.telemetry): no-op by default, and
+        # NEVER on the jitted path — every hook below runs host-side
+        # around device calls, so tracing cannot move a bit or retrace
+        self.telemetry = telemetry if telemetry is not None \
+            else NULL_TELEMETRY
         self.policy = make_policy(policy)
+        self.policy.telemetry = self.telemetry
         self.spec_k = int(spec_k)
         self.drafter = drafter
         self.draft_params = drafter_params
@@ -160,6 +178,7 @@ class ServeEngine:
             from repro.serve.paged import PagePool
             self.pool = PagePool(step_model.num_pages(self.slots),
                                  self.slots, step_model.max_pages)
+            self.pool.telemetry = self.telemetry
         self.prefix_cache = None
         if prefix_cache:
             if self.pool is None:
@@ -173,15 +192,18 @@ class ServeEngine:
             self.prefix_cache = PrefixCache(
                 self.pool, step_model.paged.page_size,
                 full_prompt_only=step_model._has_window)
+            self.prefix_cache.telemetry = self.telemetry
         self.state = step_model.init_state(self.slots)
         self.st = SlotTable(self.slots, pool=self.pool,
-                            pages_for_req=self._pages_for_req)
+                            pages_for_req=self._pages_for_req,
+                            telemetry=self.telemetry)
         self._uid = 0
         # speculative decoding: the drafter's stacked-carry store, the
         # per-slot resume index into its K axis, and each slot's own
         # verify width (plain DATA through the fixed-K verify program)
         if self.drafter is not None:
             self.draft_store = self.drafter.init_store(self.slots)
+            self.drafter.telemetry = self.telemetry
             self._draft_sel = np.zeros(self.slots, np.int32)
             self._req_k = np.ones(self.slots, np.int32)
         # telemetry
@@ -195,10 +217,15 @@ class ServeEngine:
         self.n_preemptions = 0      # victims evicted by the policy
         self.n_drafts_proposed = 0  # drafter tokens offered to verify
         self.n_drafts_accepted = 0  # ... that the target accepted
+        self.n_deadline_misses = 0  # finished past deadline (step clock)
         # rate stream (EngineStats): bounded windows — (wall time, tokens
         # decoded) per step, and submit->admission waits in milliseconds
-        self._rate_events = deque(maxlen=256)
-        self._queue_waits = deque(maxlen=512)
+        self._rate = RateWindow(maxlen=256)
+        self._queue_wait = PercentileWindow(maxlen=512)
+        # jit compile counts last seen, per program — deltas become
+        # telemetry jit_compiles events (metrics() reads live counts)
+        self._jit_seen: Dict[str, int] = {}
+        self._verbose_sink: Optional[StatsSink] = None
 
     def _check_spec_compat(self, step_model, drafter, prefix_cache):
         """Everything speculative decoding requires of the target, checked
@@ -372,7 +399,16 @@ class ServeEngine:
         req.validate_scheduling()          # raises BEFORE the uid burns
         self._uid += 1
         req.submit_t = time.monotonic()
+        req.created_t = req.submit_t       # TTFT/e2e anchor (never reset)
         self.st.waiting.append(req)
+        tel = self.telemetry
+        if tel.enabled:
+            tel.inc("requests_submitted")
+            tel.gauge("queue_depth", self.st.queue_depth)
+            tel.request_instant(req, "submit", prompt=len(prompt),
+                                max_new_tokens=int(max_new_tokens),
+                                priority=req.priority)
+            tel.request_begin(req, "queued")
         return req
 
     def _wave_sampling(self, group, pad_len):
@@ -450,8 +486,10 @@ class ServeEngine:
                 break                      # defer until pages free up
             st.pop_waiting(req)
             if req.submit_t is not None:
-                self._queue_waits.append(
-                    (time.monotonic() - req.submit_t) * 1000.0)
+                wait_ms = (time.monotonic() - req.submit_t) * 1000.0
+                self._queue_wait.push(wait_ms)
+                if self.telemetry.enabled:
+                    self.telemetry.observe("queue_wait_ms", wait_ms)
             slot = st.alloc_slot()
             if self.pool is not None:
                 self.pool.reserve(slot, self._pages_for_req(req))
@@ -461,6 +499,8 @@ class ServeEngine:
                 resumed = True
                 continue
             st.active[slot] = True
+            if self.telemetry.enabled:
+                self.telemetry.request_begin(req, "running", slot=slot)
             admitted.append((req, slot))
             if st.cur is None:
                 shape = (self.slots,) + tuple(req.prompt.shape[1:])
@@ -483,26 +523,35 @@ class ServeEngine:
         groups: dict = {}
         for req, slot in admitted:
             groups.setdefault(len(req.prompt), []).append((req, slot))
+        tel = self.telemetry
         for plen, group in groups.items():
-            pages = None
-            if self.prefix_cache is not None:
-                req0, slot0 = group[0]     # singleton wave by construction
-                pages, attach = self.prefix_cache.match(
-                    req0.prompt, self.sm.chunk_for(plen))
-            if pages is not None:
-                last, carry = self._attach_prefill(req0, slot0, pages,
-                                                   attach)
-            else:
-                if self.pool is not None:
-                    for _r, s in group:
-                        self.pool.grow(s, self.sm.pages_for(plen))
-                prompts = [r.prompt for r, _s in group]
-                prompts += [prompts[-1]] * (
-                    len(self._pad_slots([s for _r, s in group]))
-                    - len(group))
-                last, carry = self.sm.prefill(self.params,
-                                              np.stack(prompts))
-            self._install_wave(plen, group, last, carry)
+            cw = self.sm.chunk_for(plen)
+            t0 = time.monotonic() if tel.enabled else 0.0
+            with tel.span("prefill", plen=plen, wave=len(group),
+                          chunk_w=cw, chunks=-(-plen // cw)) as sp:
+                pages = None
+                if self.prefix_cache is not None:
+                    req0, slot0 = group[0]  # singleton wave (see above)
+                    pages, attach = self.prefix_cache.match(
+                        req0.prompt, cw)
+                if pages is not None:
+                    last, carry = self._attach_prefill(req0, slot0,
+                                                       pages, attach)
+                    sp.set(attached=attach)
+                else:
+                    if self.pool is not None:
+                        for _r, s in group:
+                            self.pool.grow(s, self.sm.pages_for(plen))
+                    prompts = [r.prompt for r, _s in group]
+                    prompts += [prompts[-1]] * (
+                        len(self._pad_slots([s for _r, s in group]))
+                        - len(group))
+                    last, carry = self.sm.prefill(self.params,
+                                                  np.stack(prompts))
+                self._install_wave(plen, group, last, carry)
+            if tel.enabled:
+                tel.observe("prefill_ms",
+                            (time.monotonic() - t0) * 1000.0)
         return True
 
     def _attach_prefill(self, req, slot, pages, attach):
@@ -580,6 +629,7 @@ class ServeEngine:
             t = int(tok0[i])
             req.outputs.append(t)
             self.n_emitted += 1
+            self._first_token(req)
             st.pos[slot] = plen
             st.remaining[slot] = req.max_new_tokens - 1
             st.cur[slot] = t
@@ -589,7 +639,7 @@ class ServeEngine:
                 self._req_k[slot] = (req.spec_k if req.spec_k is not None
                                      else self.spec_k)
             if st.remaining[slot] <= 0 or t == req.eos_id:
-                st.retire(slot)
+                self._retire(slot)
 
     # ------------------------------------------------------------------
     # preemption (policy-driven victim swap-out / swap-in)
@@ -609,25 +659,30 @@ class ServeEngine:
                              "swap is what makes eviction cheap)")
         n = int(self.pool.chain_len[slot])
         pages = self.pool.block_tables[slot, :n].copy()
-        req.snapshot = {
-            "n_pages": n,
-            # the slot's reservation at eviction — re-admission reserves
-            # exactly this (see _pages_for_req: prompt+budget would
-            # under-size a fork child's chain)
-            "reserve": self.pool.reserved_for(slot),
-            "state": self.sm.snapshot_slot(self.state, slot, pages),
-            "pos": int(st.pos[slot]),
-            "remaining": int(st.remaining[slot]),
-            "cur": np.copy(st.cur[slot]),
-        }
-        if self.drafter is not None:
-            req.snapshot["draft"] = self.drafter.snapshot_slot(
-                self.draft_store, slot)
-            req.snapshot["draft_sel"] = int(self._draft_sel[slot])
-        req.submit_t = time.monotonic()   # queue wait restarts at re-entry
-        req.n_preemptions += 1
-        self.n_preemptions += 1
-        st.free_slot(slot)                 # pages + reservation go back
+        tel = self.telemetry
+        with tel.span("preempt", uid=req.uid, slot=int(slot), pages=n):
+            req.snapshot = {
+                "n_pages": n,
+                # the slot's reservation at eviction — re-admission
+                # reserves exactly this (see _pages_for_req:
+                # prompt+budget would under-size a fork child's chain)
+                "reserve": self.pool.reserved_for(slot),
+                "state": self.sm.snapshot_slot(self.state, slot, pages),
+                "pos": int(st.pos[slot]),
+                "remaining": int(st.remaining[slot]),
+                "cur": np.copy(st.cur[slot]),
+            }
+            if self.drafter is not None:
+                req.snapshot["draft"] = self.drafter.snapshot_slot(
+                    self.draft_store, slot)
+                req.snapshot["draft_sel"] = int(self._draft_sel[slot])
+            req.submit_t = time.monotonic()  # queue wait restarts here
+            req.n_preemptions += 1
+            self.n_preemptions += 1
+            st.free_slot(slot)             # pages + reservation go back
+        if tel.enabled:
+            tel.inc("preemptions")
+            tel.request_begin(req, "preempted", slot=int(slot), pages=n)
         # appendleft: a policy that keeps arrival order re-tries the
         # victim first; ordering policies re-sort anyway
         st.waiting.appendleft(req)
@@ -639,28 +694,65 @@ class ServeEngine:
         bitwise where it left off.  No prefill, no first-token draw."""
         st = self.st
         snap = req.snapshot
-        self.pool.grow(slot, snap["n_pages"])
-        pages = self.pool.block_tables[slot, :snap["n_pages"]]
-        self.state = self.sm.restore_slot(self.state, snap["state"],
-                                          slot, pages)
-        st.pos[slot] = snap["pos"]
-        st.remaining[slot] = snap["remaining"]
-        st.cur[slot] = snap["cur"]
-        st.set_sampling(slot, req)
-        st.active[slot] = True
-        if self.drafter is not None:
-            self.draft_store = self.drafter.restore_slot(
-                self.draft_store, snap["draft"], slot)
-            self._draft_sel[slot] = snap["draft_sel"]
-            self._req_k[slot] = (req.spec_k if req.spec_k is not None
-                                 else self.spec_k)
+        tel = self.telemetry
+        with tel.span("resume", uid=req.uid, slot=int(slot),
+                      pages=snap["n_pages"]):
+            self.pool.grow(slot, snap["n_pages"])
+            pages = self.pool.block_tables[slot, :snap["n_pages"]]
+            self.state = self.sm.restore_slot(self.state, snap["state"],
+                                              slot, pages)
+            st.pos[slot] = snap["pos"]
+            st.remaining[slot] = snap["remaining"]
+            st.cur[slot] = snap["cur"]
+            st.set_sampling(slot, req)
+            st.active[slot] = True
+            if self.drafter is not None:
+                self.draft_store = self.drafter.restore_slot(
+                    self.draft_store, snap["draft"], slot)
+                self._draft_sel[slot] = snap["draft_sel"]
+                self._req_k[slot] = (req.spec_k if req.spec_k is not None
+                                     else self.spec_k)
+        if tel.enabled:
+            tel.inc("resumes")
+            tel.request_begin(req, "running", slot=int(slot),
+                              resumed=True)
         req.snapshot = None                # drop the host bytes
 
     # ------------------------------------------------------------------
     # decode
     # ------------------------------------------------------------------
-    def _retire(self, slot: int):
-        self.st.retire(slot)
+    def _first_token(self, req: Request):
+        """Book the request's first emitted token (TTFT anchor)."""
+        if req.first_token_t is not None:
+            return
+        req.first_token_t = time.monotonic()
+        if self.telemetry.enabled and req.created_t is not None:
+            self.telemetry.observe(
+                "ttft_ms", (req.first_token_t - req.created_t) * 1000.0)
+
+    def _retire(self, slot: int) -> Request:
+        """Retire a finishing slot — the ONE finish path, so telemetry
+        sees every completion (admission instant-retire, plain decode,
+        spec waves)."""
+        req = self.st.retire(slot)
+        # deadline misses live on the engine's STEP clock — the unit
+        # submit(deadline=...) is scored in by the load harness
+        miss = req.deadline is not None and self.n_steps > req.deadline
+        if miss:
+            self.n_deadline_misses += 1
+        tel = self.telemetry
+        if tel.enabled:
+            tel.inc("requests_finished")
+            if miss:
+                tel.inc("deadline_misses")
+            tel.request_end(req, tokens=len(req.outputs),
+                            preemptions=req.n_preemptions)
+            tel.request_instant(req, "finish", tokens=len(req.outputs),
+                                deadline_miss=miss)
+            if req.created_t is not None and req.finish_t is not None:
+                tel.observe("e2e_ms",
+                            (req.finish_t - req.created_t) * 1000.0)
+        return req
 
     def cancel(self, req: Request):
         """Abort a request: a waiting one leaves the queue (the pool is
@@ -681,22 +773,66 @@ class ServeEngine:
         req.snapshot = None                # a preempted wait drops bytes
         req.finished = True
         req.cancelled = True
+        if self.telemetry.enabled:
+            self.telemetry.inc("requests_cancelled")
+            self.telemetry.request_end(req, cancelled=True)
+            self.telemetry.request_instant(req, "cancel")
 
     def step(self):
         """Admit what fits, then run ONE slot-batched decode step (a
         propose/verify wave when a drafter is configured — up to
-        ``spec_k`` tokens per slot for the same number of host syncs)."""
-        self.admit()
+        ``spec_k`` tokens per slot for the same number of host syncs).
+
+        All telemetry here is host-side wall clock + host counters
+        around the device call — the jitted program and its inputs are
+        byte-identical with telemetry on or off."""
+        tel = self.telemetry
+        with tel.span("admit", queue_depth=self.st.queue_depth):
+            self.admit()
         st = self.st
         if not st.active.any():
+            if tel.enabled:
+                self._note_compiles()
             return
-        if self.drafter is not None:
-            d0 = self._n_decoded
-            self._spec_step()
-            self._rate_events.append((time.monotonic(),
-                                      self._n_decoded - d0))
-            return
-        d0 = self._n_decoded
+        t0 = time.monotonic()
+        d0, a0 = self._n_decoded, self.n_drafts_accepted
+        spec = self.drafter is not None
+        with tel.span("spec_wave" if spec else "decode_wave",
+                      active_slots=st.n_active,
+                      queue_depth=st.queue_depth,
+                      pages_in_use=(self.pool.pages_in_use
+                                    if self.pool else 0)) as sp:
+            if spec:
+                self._spec_step()
+                sp.set(accepted_drafts=self.n_drafts_accepted - a0)
+            else:
+                self._plain_step()
+            sp.set(tokens=self._n_decoded - d0)
+        now = time.monotonic()
+        self._rate.push(now, self._n_decoded - d0)
+        if tel.enabled:
+            wave_ms = (now - t0) * 1000.0
+            tel.observe("step_ms", wave_ms)
+            # per-stream inter-token latency: one wave = one emission
+            # opportunity per active slot (>= 1 token under spec)
+            tel.observe("itl_ms", wave_ms)
+            tel.inc("decode_waves")
+            tel.inc("tokens_decoded", self._n_decoded - d0)
+            tel.gauge("active_slots", st.n_active)
+            tel.gauge("queue_depth", st.queue_depth)
+            tel.counter("slots", active=st.n_active,
+                        queue=st.queue_depth)
+            if self.pool is not None:
+                tel.gauge("pool_utilization",
+                          self.pool.pages_in_use / self.pool.num_pages)
+                tel.counter("pool", in_use=self.pool.pages_in_use,
+                            free=len(self.pool._free),
+                            reserved=self.pool.reserved_total)
+            self._note_compiles()
+
+    def _plain_step(self):
+        """One slot-batched decode step (no drafter)."""
+        st = self.st
         bt = None
         if self.pool is not None:
             # allocate-on-decode-append: this step writes K/V at
@@ -736,6 +872,7 @@ class ServeEngine:
             req.outputs.append(emitted[slot].copy())
             self.n_emitted += 1
             self._n_decoded += 1
+            self._first_token(req)
             st.pos[slot] += 1
             st.remaining[slot] -= 1
             if self.sm.autoregressive:
@@ -747,9 +884,7 @@ class ServeEngine:
                 if not done:
                     st.cur[slot] = req.prompt[st.pos[slot]]
             if done:
-                st.retire(slot)
-        self._rate_events.append((time.monotonic(),
-                                  self._n_decoded - d0))
+                self._retire(slot)
 
     def _spec_step(self):
         """One propose/verify wave: the drafter rolls ``spec_k`` greedy
@@ -784,15 +919,18 @@ class ServeEngine:
         if cow_src:
             self.state = self.sm.copy_pages(self.state, cow_src, cow_dst)
             self.n_cow_copies += len(cow_src)
+        tel = self.telemetry
         active = jnp.asarray(st.active)
         pos = jnp.asarray(st.pos)
-        toks, self.draft_store = self.drafter.propose(
-            self.draft_params, self.draft_store, self._draft_sel,
-            np.asarray(st.cur), active)
+        with tel.span("propose", k=int(k_slot.max())):
+            toks, self.draft_store = self.drafter.propose(
+                self.draft_params, self.draft_store, self._draft_sel,
+                np.asarray(st.cur), active)
         sampling = {k: jnp.asarray(v) for k, v in st.knobs.items()}
-        emitted, n_emit, self.state = self.sm.verify(
-            self.params, toks, self.state, pos, active,
-            k_slot, sampling, bt=self.pool.block_tables)
+        with tel.span("verify"):
+            emitted, n_emit, self.state = self.sm.verify(
+                self.params, toks, self.state, pos, active,
+                k_slot, sampling, bt=self.pool.block_tables)
         emitted = np.asarray(emitted)
         n_emit = np.asarray(n_emit)
         self.n_steps += 1
@@ -808,6 +946,7 @@ class ServeEngine:
                 req.outputs.append(emitted[slot, j].copy())
                 self.n_emitted += 1
                 self._n_decoded += 1
+                self._first_token(req)
                 if t == req.eos_id:
                     # tokens past an eos are discarded — target-only
                     # decode would never have produced them (their K/V
@@ -820,7 +959,7 @@ class ServeEngine:
             if st.remaining[slot] <= 0:
                 done = True
             if done:
-                st.retire(slot)
+                self._retire(slot)
             else:
                 st.cur[slot] = emitted[slot, n_take - 1]
                 # resume carry: the drafter state after consuming the
@@ -908,6 +1047,13 @@ class ServeEngine:
                 self._draft_sel[slot] = self._draft_sel[parent]
                 self._req_k[slot] = self._req_k[parent]
             self.n_forks += 1
+            if self.telemetry.enabled:
+                self.telemetry.inc("forks")
+                self.telemetry.instant("fork", parent_uid=req.uid,
+                                       child_uid=child.uid,
+                                       slot=int(slot))
+                self.telemetry.request_begin(child, "running",
+                                             slot=int(slot), forked=True)
             children.append(child)
         return children
 
@@ -924,11 +1070,20 @@ class ServeEngine:
         request and the pool state."""
         st = self.st
         steps = 0
+        # the stats line goes through a SINK, not a hardwired print:
+        # Telemetry(stats_stream=..., stats_every=N) owns the stream and
+        # cadence; verbose=True without one falls back to a per-step
+        # stdout sink (the historical rendering, byte for byte)
+        sink = self.telemetry.stats_sink
+        if sink is None and verbose:
+            if self._verbose_sink is None:
+                self._verbose_sink = StatsSink()
+            sink = self._verbose_sink
         while st.waiting or st.active.any():
             n_finished = len(st.finished)
             self.step()
-            if verbose:
-                print(self.stats().line())
+            if sink is not None:
+                sink.emit(self.stats())
             steps += 1
             if max_steps is not None and steps >= max_steps:
                 break
@@ -958,17 +1113,7 @@ class ServeEngine:
     def stats(self) -> EngineStats:
         """Current occupancy snapshot (see :class:`EngineStats`)."""
         paid = self.n_steps * self.slots
-        tps = 0.0
-        if len(self._rate_events) >= 2:
-            span = self._rate_events[-1][0] - self._rate_events[0][0]
-            if span > 0:
-                # the first event's tokens predate the window's start
-                tps = sum(n for _t, n in
-                          list(self._rate_events)[1:]) / span
-        waits = np.asarray(self._queue_waits, np.float64)
-        p50, p99 = ((float(np.percentile(waits, 50)),
-                     float(np.percentile(waits, 99)))
-                    if waits.size else (0.0, 0.0))
+        p50, p99 = self._queue_wait.percentiles((50, 99))
         return EngineStats(
             policy=self.policy.name,
             n_steps=self.n_steps,
@@ -981,12 +1126,96 @@ class ServeEngine:
                             else 0),
             n_preemptions=self.n_preemptions,
             utilization=self._n_decoded / paid if paid else 0.0,
-            tokens_per_s=tps,
+            deadline_misses=self.n_deadline_misses,
+            tokens_per_s=self._rate.per_s(),
             queue_wait_p50_ms=p50,
             queue_wait_p99_ms=p99,
             accept_rate=(self.n_drafts_accepted /
                          self.n_drafts_proposed
                          if self.n_drafts_proposed else 0.0))
+
+    def _jit_programs(self) -> Dict[str, Any]:
+        """The jitted wrappers this engine can observe compile counts
+        on, by short name (``step``, ``verify``, ``draft_propose``, ...).
+        Lazily-built wrappers (``_jit_prefill_fast`` before the first
+        prefill) are skipped until they exist."""
+        out = {}
+        for attr in _JIT_PROGRAMS:
+            fn = getattr(self.sm, attr, None)
+            if fn is not None and hasattr(fn, "_cache_size"):
+                out[attr[len("_jit_"):]] = fn
+        if self.drafter is not None:
+            for attr in _DRAFT_JIT_PROGRAMS:
+                fn = getattr(self.drafter, attr, None)
+                if fn is not None and hasattr(fn, "_cache_size"):
+                    out["draft" + attr[len("_jit"):]] = fn
+        return out
+
+    def _note_compiles(self):
+        """Diff jit cache sizes against the last observation; new
+        entries become ``jit_compiles`` counter increments and engine-
+        track instants.  Host-side observation only — reading
+        ``_cache_size()`` never triggers or prevents a compile."""
+        tel = self.telemetry
+        for name, fn in self._jit_programs().items():
+            n = fn._cache_size()
+            seen = self._jit_seen.get(name, 0)
+            if n > seen:
+                tel.inc("jit_compiles", n - seen)
+                tel.instant("jit_compile", program=name, cache_size=n)
+                self._jit_seen[name] = n
+
+    def metrics(self) -> Dict[str, Any]:
+        """Machine-readable engine metrics as a typed dict — the
+        autoscaling-loop / dashboard readout.  Always available (the
+        engine's own counters and the jit compile counts don't need a
+        Telemetry handle); the ``telemetry`` section carries the
+        registry's counters/gauges/histograms when one is attached.
+
+        Sections: ``counters`` (monotonic ints), ``gauges`` (point-in-
+        time floats), ``rates`` (windowed — what an autoscaler acts
+        on), ``jit`` (``<program>_compiles`` per jitted wrapper — the
+        compile-count-1 contract reads ``jit["step_compiles"]``)."""
+        s = self.stats()
+        m: Dict[str, Any] = {
+            "counters": {
+                "steps": self.n_steps,
+                "tokens_emitted": self.n_emitted,
+                "tokens_decoded": self._n_decoded,
+                "requests_finished": len(self.st.finished),
+                "preemptions": self.n_preemptions,
+                "forks": self.n_forks,
+                "cow_copies": self.n_cow_copies,
+                "prefix_hits": self.n_prefix_hits,
+                "prefix_tokens_skipped": self.n_prefix_tokens,
+                "drafts_proposed": self.n_drafts_proposed,
+                "drafts_accepted": self.n_drafts_accepted,
+                "deadline_misses": self.n_deadline_misses,
+            },
+            "gauges": {
+                "slots": float(self.slots),
+                "active_slots": float(s.active_slots),
+                "queue_depth": float(s.queue_depth),
+                "pages_in_use": float(s.pages_in_use),
+                "pages_free": float(s.pages_free),
+                "pages_reserved": float(s.pages_reserved),
+                "pool_utilization": (
+                    s.pages_in_use / self.pool.num_pages
+                    if self.pool else 0.0),
+                "utilization": s.utilization,
+            },
+            "rates": {
+                "tokens_per_s": s.tokens_per_s,
+                "queue_wait_p50_ms": s.queue_wait_p50_ms,
+                "queue_wait_p99_ms": s.queue_wait_p99_ms,
+                "accept_rate": s.accept_rate,
+            },
+            "jit": {f"{name}_compiles": fn._cache_size()
+                    for name, fn in self._jit_programs().items()},
+        }
+        if self.telemetry.enabled:
+            m["telemetry"] = self.telemetry.registry.as_dict()
+        return m
 
     @property
     def utilization(self) -> float:

@@ -38,6 +38,8 @@ from typing import Callable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.serve.telemetry import NULL_TELEMETRY
+
 
 class PagedConfig:
     """Paged-KV knobs.  ``num_pages == 0`` means auto-size the pool to
@@ -100,6 +102,16 @@ class PagePool:
         self.reclaim: Optional[Callable[[int], None]] = None
         # telemetry
         self.n_cow = 0
+        #: observability handle (no-op default; the engine passes its
+        #: own) — occupancy gauges + reclaim/COW counters, host-side only
+        self.telemetry = NULL_TELEMETRY
+
+    def _tel_pages(self):
+        """Refresh the pool occupancy gauges (cheap; enabled path only)."""
+        tel = self.telemetry
+        tel.gauge("pages_in_use", self.pages_in_use)
+        tel.gauge("pages_free", len(self._free))
+        tel.gauge("pages_reserved", self.reserved_total)
 
     # -- accounting -----------------------------------------------------
     @property
@@ -128,6 +140,8 @@ class PagePool:
             raise RuntimeError(f"slot {slot} already holds a reservation")
         self._reserved[slot] = n_pages
         self.reserved_total += n_pages
+        if self.telemetry.enabled:
+            self._tel_pages()
 
     def reserved_for(self, slot: int) -> int:
         """Pages currently promised to ``slot`` (0 when it holds no
@@ -142,6 +156,10 @@ class PagePool:
         caller is reserve-covered, so after a full reclaim a free page
         provably exists — running dry here is an accounting bug."""
         if not self._free and self.reclaim is not None:
+            if self.telemetry.enabled:
+                self.telemetry.inc("pool_reclaims")
+                self.telemetry.instant("pool_reclaim",
+                                       in_use=self.pages_in_use)
             self.reclaim(1)
         if not self._free:
             raise RuntimeError(
@@ -166,6 +184,8 @@ class PagePool:
         while self.chain_len[slot] < n_chain:
             self.block_tables[slot, self.chain_len[slot]] = self._pop()
             self.chain_len[slot] += 1
+        if self.telemetry.enabled:
+            self._tel_pages()
 
     # -- sharing ---------------------------------------------------------
     def share(self, slot: int, pages: Sequence[int]):
@@ -208,6 +228,8 @@ class PagePool:
         dst = self._pop()
         self.block_tables[slot, i] = dst
         self.n_cow += 1
+        if self.telemetry.enabled:
+            self.telemetry.inc("cow_detaches")
         return (src, dst) if materialize else None
 
     # -- external holds (prefix cache) -----------------------------------
@@ -271,3 +293,5 @@ class PagePool:
         self._reserved[slot] = 0
         self.chain_len[slot] = 0
         self.block_tables[slot, :] = 0
+        if self.telemetry.enabled:
+            self._tel_pages()

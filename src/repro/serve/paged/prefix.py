@@ -40,6 +40,8 @@ from typing import List, Optional, Tuple
 
 import numpy as np
 
+from repro.serve.telemetry import NULL_TELEMETRY
+
 
 class PrefixCache:
     """LRU prefix cache; all host-side (token hashing + page pinning)."""
@@ -56,6 +58,8 @@ class PrefixCache:
         self.misses = 0
         self.n_evicted = 0
         pool.reclaim = self.reclaim
+        #: observability handle (no-op default; the engine passes its own)
+        self.telemetry = NULL_TELEMETRY
 
     def __len__(self):
         return len(self._entries)
@@ -100,8 +104,12 @@ class PrefixCache:
             self._tick += 1
             e["tick"] = self._tick
             self.hits += 1
+            if self.telemetry.enabled:
+                self.telemetry.inc("prefix_hits")
             return list(e["pages"]), attach
         self.misses += 1
+        if self.telemetry.enabled:
+            self.telemetry.inc("prefix_misses")
         return None, 0
 
     # -- insertion -------------------------------------------------------
@@ -136,6 +144,8 @@ class PrefixCache:
     def _evict(self, key) -> List[int]:
         e = self._entries.pop(key)
         self.n_evicted += 1
+        if self.telemetry.enabled:
+            self.telemetry.inc("prefix_evictions")
         return self.pool.decref(e["pages"])
 
     def reclaim(self, n: int = 1):

@@ -33,6 +33,7 @@ from __future__ import annotations
 from typing import List, Optional
 
 from repro.serve.state import Request, SlotTable
+from repro.serve.telemetry import NULL_TELEMETRY
 
 #: Legal values of the engine's ``policy=`` knob / ``--policy`` flag.
 POLICIES = ("fifo", "priority", "sjf", "edf")
@@ -42,6 +43,9 @@ class SchedulingPolicy:
     """Contract only; see module docstring."""
 
     name: str = "base"
+    #: Observability handle, set by the engine at construction (no-op
+    #: default) — victim selections emit trace instants through it.
+    telemetry = NULL_TELEMETRY
 
     def begin_round(self, state: SlotTable):
         """Hook: called once per admission round (one engine step),
@@ -122,6 +126,12 @@ class PriorityPolicy(SchedulingPolicy):
         # discards decode work and admits nothing
         if state.pages_needed(head) > state.pool.available + freeable:
             return None
+        if self.telemetry.enabled:
+            self.telemetry.instant(
+                "victim_selected", policy=self.name,
+                slot=int(victim[1]),
+                victim_uid=state.slot_req[victim[1]].uid,
+                head_uid=head.uid)
         return victim[1]
 
 
@@ -207,6 +217,12 @@ class EDFPolicy(SchedulingPolicy):
         # nothing (the engine evicts one victim per retry)
         if state.pages_needed(head) > state.pool.available + freeable:
             return None
+        if self.telemetry.enabled:
+            self.telemetry.instant(
+                "victim_selected", policy=self.name,
+                slot=int(victim[1]),
+                victim_uid=state.slot_req[victim[1]].uid,
+                head_uid=head.uid)
         return victim[1]
 
 

@@ -42,6 +42,7 @@ import numpy as np
 
 from repro.configs.base import ATTN, ATTN_LOCAL, MLA
 from repro.serve.protocol import DecoderStepModel, masked_update
+from repro.serve.telemetry import NULL_TELEMETRY
 
 
 class DraftStepModel:
@@ -74,6 +75,8 @@ class DraftStepModel:
         self._slot_axis = self.sm._slot_axis
         self._jit_propose = jax.jit(self._propose_impl)
         self._jit_install = jax.jit(self._install_impl)
+        # observability handle (no-op default; the engine passes its own)
+        self.telemetry = NULL_TELEMETRY
 
     # -- store -----------------------------------------------------------
     def init_store(self, slots: int):
@@ -184,6 +187,7 @@ class DraftStepModel:
             out[name] = jax.tree_util.tree_map(
                 lambda s, ax=ax: jax.lax.index_in_dim(
                     s, int(slot), axis=ax, keepdims=False), sub)
+        self.telemetry.instant("draft_snapshot", slot=int(slot))
         return jax.device_get(out)
 
     def restore_slot(self, store, snap, slot: int):
@@ -200,6 +204,7 @@ class DraftStepModel:
                 return s.at[:, int(slot)].set(v)
 
             out[name] = jax.tree_util.tree_map(put, sub, snap[name])
+        self.telemetry.instant("draft_restore", slot=int(slot))
         return out
 
     def copy_slot(self, store, src: int, dst: int):
@@ -216,6 +221,7 @@ class DraftStepModel:
                 return s.at[:, int(dst)].set(row)
 
             out[name] = jax.tree_util.tree_map(cp, sub)
+        self.telemetry.instant("draft_copy", src=int(src), dst=int(dst))
         return out
 
 

@@ -20,6 +20,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import time
 from collections import deque
 from typing import Any, Callable, List, Optional
 
@@ -27,6 +28,7 @@ import numpy as np
 
 from repro.configs.base import SamplingParams
 from repro.serve.sampling import KNOB_DTYPES, KNOB_GREEDY
+from repro.serve.telemetry import NULL_TELEMETRY
 
 
 def _knob_values(req):
@@ -71,6 +73,15 @@ class Request:
     # set by ServeEngine.submit() (and reset on preemption re-queue):
     # what the queue-wait percentiles in EngineStats measure
     submit_t: Optional[float] = dataclasses.field(default=None,
+                                                  repr=False)
+    # lifecycle timestamps (time.monotonic), set once each: submission
+    # (never reset — the TTFT/e2e anchor), first emitted token, and
+    # retirement.  What the ttft_ms / e2e_ms telemetry histograms read.
+    created_t: Optional[float] = dataclasses.field(default=None,
+                                                   repr=False)
+    first_token_t: Optional[float] = dataclasses.field(default=None,
+                                                       repr=False)
+    finish_t: Optional[float] = dataclasses.field(default=None,
                                                   repr=False)
     # filled by the engine:
     outputs: List[Any] = dataclasses.field(default_factory=list)
@@ -121,12 +132,17 @@ class SlotTable:
     """
 
     def __init__(self, slots: int, pool=None,
-                 pages_for_req: Optional[Callable[[Request], int]] = None):
+                 pages_for_req: Optional[Callable[[Request], int]] = None,
+                 telemetry=None):
         self.slots = int(slots)
         if self.slots < 1:
             raise ValueError("slots must be >= 1")
         self.pool = pool
         self._pages_for_req = pages_for_req
+        # no-op by default; the engine passes its handle through so slot
+        # occupancy gauges track alloc/free without engine involvement
+        self.telemetry = telemetry if telemetry is not None \
+            else NULL_TELEMETRY
         self.free_mask = (1 << self.slots) - 1     # bit i set = slot i free
         self.waiting: deque[Request] = deque()
         self.slot_req: List[Optional[Request]] = [None] * self.slots
@@ -182,10 +198,14 @@ class SlotTable:
             self.pool.release(slot)
         for k, v in KNOB_GREEDY.items():
             self.knobs[k][slot] = v
+        if self.telemetry.enabled:
+            self.telemetry.gauge("active_slots", self.n_active)
+            self.telemetry.gauge("free_slots", self.n_free)
 
     def retire(self, slot: int) -> Request:
         req = self.slot_req[slot]
         req.finished = True
+        req.finish_t = time.monotonic()
         self.finished.append(req)
         self.free_slot(slot)
         return req
